@@ -1,0 +1,79 @@
+//! Pattern explorer: the paper's §II motivation, quantified.
+//!
+//! For each of the four SuiteSparse analogs, show how the communication
+//! pattern evolves with scale — per-rank neighbor counts (the SDDE's
+//! `send_nnz`), message sizes, and the standard vs aggregated inter-node
+//! message counts (the red dots of Figs. 5–8). This explains *why* each
+//! matrix lands where it does in the figures: dielFilterV2clx barely
+//! benefits from aggregation while cage14 is transformed by it.
+//!
+//! Run: `cargo run --release --example pattern_explorer [-- --div 16]`
+
+use sdde::simnet::{RegionKind, Topology};
+use sdde::sparse::{MatrixPreset, Partition, SpmvPattern};
+use sdde::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let div = args.get_parsed("div", 16usize);
+    let ppn = args.get_parsed("ppn", 8usize);
+    let node_counts: Vec<usize> = args
+        .get_list("nodes")
+        .map(|v| v.iter().map(|s| s.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![2, 4, 8, 16]);
+
+    println!("matrix analogs scaled by 1/{div}, {ppn} ranks/node\n");
+    for preset in MatrixPreset::paper_set() {
+        let preset = if div > 1 { preset.scaled(div) } else { preset };
+        println!(
+            "== {} (n={}, ~{} nnz) ==",
+            preset.name,
+            preset.n,
+            preset.approx_nnz()
+        );
+        println!(
+            "{:>6} {:>7} {:>12} {:>12} {:>14} {:>16} {:>12}",
+            "nodes", "ranks", "mean nbrs", "max nbrs", "mean msg len", "internode (std)", "(aggregated)"
+        );
+        for &nodes in &node_counts {
+            let topo = Topology::quartz(nodes, ppn);
+            let nranks = topo.nranks();
+            let part = Partition::new(preset.n, nranks);
+            let pats: Vec<SpmvPattern> = (0..nranks)
+                .map(|r| SpmvPattern::build(&preset, part, r, 2023))
+                .collect();
+            let nbrs: Vec<usize> = pats.iter().map(|p| p.recv_nnz()).collect();
+            let sizes: Vec<usize> = pats.iter().map(|p| p.recv_size()).collect();
+            let mean_nbrs = nbrs.iter().sum::<usize>() as f64 / nranks as f64;
+            let max_nbrs = *nbrs.iter().max().unwrap();
+            let mean_len = sizes.iter().sum::<usize>() as f64
+                / nbrs.iter().sum::<usize>().max(1) as f64;
+            // standard inter-node messages = neighbors on other nodes;
+            // aggregated = distinct destination nodes (bounded by nodes-1).
+            let mut std_max = 0usize;
+            let mut agg_max = 0usize;
+            for (r, p) in pats.iter().enumerate() {
+                let my_node = topo.region_of(r, RegionKind::Node);
+                let internode = p
+                    .needed
+                    .iter()
+                    .filter(|(o, _)| topo.region_of(*o, RegionKind::Node) != my_node)
+                    .count();
+                let nodes_touched = p
+                    .needed
+                    .iter()
+                    .map(|(o, _)| topo.region_of(*o, RegionKind::Node))
+                    .filter(|&nd| nd != my_node)
+                    .collect::<std::collections::BTreeSet<_>>()
+                    .len();
+                std_max = std_max.max(internode);
+                agg_max = agg_max.max(nodes_touched);
+            }
+            println!(
+                "{nodes:>6} {nranks:>7} {mean_nbrs:>12.1} {max_nbrs:>12} {mean_len:>14.1} {std_max:>16} {agg_max:>12}"
+            );
+        }
+        println!();
+    }
+    println!("(aggregated counts are bounded by nodes-1 — the mechanism behind the paper's 20x)");
+}

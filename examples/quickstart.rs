@@ -1,0 +1,64 @@
+//! Quickstart: the smallest possible SDDE.
+//!
+//! Eight simulated ranks on two nodes each know which ranks they must send
+//! a few integers to — but not who will send to *them*. One
+//! `MPIX_Alltoallv_crs` call discovers the receive side. We run it with
+//! every algorithm and print what each rank learned plus the virtual time.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::rc::Rc;
+
+use sdde::prelude::*;
+use sdde::util::fmt;
+
+fn main() {
+    // Each rank sends to (rank+1)%n and (rank+3)%n — a tiny sparse pattern.
+    let topo = Topology::quartz(2, 4);
+    let n = topo.nranks();
+    let patterns: Vec<CrsvArgs> = (0..n)
+        .map(|p| CrsvArgs {
+            dest: {
+                let mut d = vec![(p + 1) % n, (p + 3) % n];
+                d.sort_unstable();
+                d
+            },
+            sendcounts: vec![2, 2],
+            sendvals: vec![
+                (p * 10) as u64,
+                (p * 10 + 1) as u64,
+                (p * 100) as u64,
+                (p * 100 + 1) as u64,
+            ],
+        })
+        .collect();
+    let patterns = Rc::new(patterns);
+
+    for algo in SddeAlgorithm::VARIABLE {
+        let world = World::new(topo.clone(), CostModel::preset(MpiFlavor::Mvapich2));
+        let pats = patterns.clone();
+        let out = world.run(move |c| {
+            let pats = pats.clone();
+            async move {
+                let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                let info = MpixInfo::with_algorithm(algo);
+                alltoallv_crs(&mx, &info, &pats[c.rank()]).await.unwrap()
+            }
+        });
+        println!(
+            "algorithm {:<18} virtual time {:>10}  (inter-node msgs: {})",
+            algo.name(),
+            fmt::ns(out.end_time),
+            out.counters.user_msgs[Tier::InterNode as usize],
+        );
+        if algo == SddeAlgorithm::Personalized {
+            for (rank, res) in out.results.iter().enumerate() {
+                println!(
+                    "  rank {rank} receives from {:?}: {:?}",
+                    res.src, res.recvvals
+                );
+            }
+        }
+    }
+    println!("\nall algorithms returned identical results (asserted in tests)");
+}

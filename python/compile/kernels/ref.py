@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the Block-ELL SpMV kernel (the CORE correctness
+signal: pytest asserts the Pallas kernel matches this on random inputs)."""
+
+import jax.numpy as jnp
+
+
+def spmv_block_ell_ref(vals, cols, x):
+    """``y[i] = sum_j vals[i, j] * x[cols[i, j]]`` — no Pallas, no tiling."""
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def dot_ref(a, b):
+    return jnp.sum(a * b)

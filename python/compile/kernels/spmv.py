@@ -1,0 +1,76 @@
+"""L1 — Block-ELL SpMV as a Pallas kernel.
+
+The paper's SDDE exists to set up sparse matrix-vector products, so the
+compute hot-spot of the stack is the local SpMV each rank runs between halo
+exchanges. The CPU-cluster workload is re-thought for TPU idiom (DESIGN.md
+§Hardware-Adaptation):
+
+* CSR is re-blocked to **Block-ELL**: a dense ``(rows_pad, width)`` pair of
+  value / column-index arrays, rows padded to a multiple of the row tile and
+  short rows padded with ``(col=0, val=0)``. Static shapes → one XLA
+  artifact per shape class.
+* The kernel tiles rows with a 1-D grid; each grid step holds one
+  ``(row_tile, width)`` tile of vals/cols plus the full x vector in VMEM
+  (x is the halo-extended local vector — KiBs, it fits comfortably), and
+  computes ``y[i] = Σ_j vals[i,j] · x[cols[i,j]]`` via a VMEM gather and a
+  row-sum. On real TPU hardware the gather feeds the VPU; the row-sum
+  reduction vectorizes over the 8×128 lanes.
+* ``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; numerics are validated through the interpret path and the
+  pure-jnp oracle in ``ref.py`` (see /opt/xla-example/README.md).
+
+VMEM footprint per grid step (f32): ``row_tile·width·(4+4) + 4·xlen`` bytes
+— for the shipped (1024, 8, 2048) artifact with row_tile=128:
+8 KiB tiles + 8 KiB x ≈ 16 KiB, far under the ~16 MiB VMEM budget, leaving
+room to scale width or fuse the AXPY. The arithmetic intensity of SpMV is
+gather-bound (no MXU use); the roofline estimate lives in EXPERIMENTS.md
+§Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, o_ref):
+    """One row tile: gather x at cols, multiply, reduce over the width."""
+    vals = vals_ref[...]          # (row_tile, width) f32
+    cols = cols_ref[...]          # (row_tile, width) i32
+    x = x_ref[...]                # (xlen,) f32 — whole vector in VMEM
+    gathered = x[cols]            # (row_tile, width) gather from VMEM
+    o_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def spmv_block_ell(vals, cols, x, *, row_tile=128):
+    """Block-ELL SpMV: ``y[i] = sum_j vals[i, j] * x[cols[i, j]]``.
+
+    Args:
+      vals: f32[rows_pad, width] — padded entries (0 where absent).
+      cols: i32[rows_pad, width] — padded column indices (0 where absent;
+        x[0] is multiplied by 0 so any valid index works as padding).
+      x:    f32[xlen] — halo-extended local vector.
+      row_tile: rows per grid step; must divide rows_pad.
+
+    Returns:
+      f32[rows_pad].
+    """
+    rows_pad, width = vals.shape
+    assert cols.shape == (rows_pad, width), (vals.shape, cols.shape)
+    assert rows_pad % row_tile == 0, (rows_pad, row_tile)
+    (xlen,) = x.shape
+    grid = (rows_pad // row_tile,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, width), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, width), lambda i: (i, 0)),
+            pl.BlockSpec((xlen,), lambda i: (0,)),  # x replicated per tile
+        ],
+        out_specs=pl.BlockSpec((row_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(vals, cols, x)

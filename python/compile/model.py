@@ -1,0 +1,35 @@
+"""L2 — the JAX compute graph the rust coordinator executes per solver
+iteration: the local Block-ELL SpMV (calling the L1 Pallas kernel) and the
+local dot product used by CG. Lowered once to HLO text by ``aot.py``;
+never imported at request time.
+
+Functions return 1-tuples to match the HLO-text interchange convention
+(``return_tuple=True`` → rust unwraps with ``to_tuple1``, see
+/opt/xla-example/gen_hlo.py)."""
+
+import jax.numpy as jnp
+
+from .kernels.spmv import spmv_block_ell
+
+
+def _pick_row_tile(rows_pad: int) -> int:
+    """Largest power-of-two tile ≤ 128 dividing rows_pad."""
+    t = 128
+    while t > 1 and rows_pad % t:
+        t //= 2
+    return t
+
+
+def local_spmv(vals, cols, x):
+    """y = A_local @ x_ext via the Pallas Block-ELL kernel."""
+    return (spmv_block_ell(vals, cols, x, row_tile=_pick_row_tile(vals.shape[0])),)
+
+
+def local_dot(a, b):
+    """Local partial dot product (global dot = allreduce of these)."""
+    return (jnp.sum(a * b),)
+
+
+def local_axpy(alpha, x, y):
+    """y + alpha * x (CG vector update; alpha is a scalar array)."""
+    return (y + alpha * x,)

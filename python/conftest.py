@@ -1,0 +1,1 @@
+# Ensures `import compile...` resolves when pytest runs from python/.

@@ -1,0 +1,174 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. Region granularity: node vs socket aggregation (paper §IV-D).
+//! 2. Intra-region redistribution: personalized vs dense alltoallv
+//!    (paper §IV-D "possible optimizations").
+//! 3. known_recv_nnz: skipping the allreduce in the personalized method
+//!    (the input/output `recv_nnz` of the paper's API, §III).
+//! 4. Allreduce-vs-no-reduce crossover vs message count (paper §I).
+//!
+//! `cargo bench --bench ablations`
+
+use std::rc::Rc;
+
+use sdde::bench::figures::run_once;
+use sdde::bench::Variant;
+use sdde::mpi::World;
+use sdde::mpix::{alltoallv_crs, IntraAlgo, MpixComm, MpixInfo, SddeAlgorithm};
+use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+use sdde::sparse::{MatrixPreset, Partition, SpmvPattern};
+use sdde::util::{fmt, Rng};
+
+fn patterns(preset: &MatrixPreset, topo: &Topology, seed: u64) -> Rc<Vec<SpmvPattern>> {
+    let part = Partition::new(preset.n, topo.nranks());
+    Rc::new(
+        (0..topo.nranks())
+            .map(|r| SpmvPattern::build(preset, part, r, seed))
+            .collect(),
+    )
+}
+
+fn main() {
+    let topo = Topology::quartz(8, 16);
+    let preset = MatrixPreset::cage14_like().scaled(8);
+    println!(
+        "workload: {} over {} ranks ({} nodes x {} ppn)\n",
+        preset.name,
+        topo.nranks(),
+        topo.nodes,
+        topo.ppn
+    );
+    let pats = patterns(&preset, &topo, 11);
+
+    println!("== ablation 1: aggregation region (loc-nonblocking) ==");
+    for region in [RegionKind::Node, RegionKind::Socket] {
+        let (t, c) = run_once(
+            topo.clone(),
+            MpiFlavor::Mvapich2,
+            SddeAlgorithm::LocalityNonBlocking,
+            region,
+            IntraAlgo::Personalized,
+            Variant::Variable,
+            pats.clone(),
+        );
+        println!(
+            "  region={region:?}: {}  (max inter-node msgs {})",
+            fmt::ns(t),
+            c.max_internode_per_rank()
+        );
+    }
+
+    println!("\n== ablation 2: intra-region redistribution (loc-personalized) ==");
+    for intra in [IntraAlgo::Personalized, IntraAlgo::Alltoallv] {
+        let (t, _) = run_once(
+            topo.clone(),
+            MpiFlavor::Mvapich2,
+            SddeAlgorithm::LocalityPersonalized,
+            RegionKind::Node,
+            intra,
+            Variant::Variable,
+            pats.clone(),
+        );
+        println!("  intra={intra:?}: {}", fmt::ns(t));
+    }
+
+    println!("\n== ablation 3: known recv_nnz skips the allreduce ==");
+    for known in [false, true] {
+        let pats2 = pats.clone();
+        let world = World::new(topo.clone(), CostModel::preset(MpiFlavor::Mvapich2));
+        let out = world.run(move |c| {
+            let pats = pats2.clone();
+            async move {
+                let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                // oracle recv_nnz: count ranks that need data from me
+                let me = c.rank();
+                let recv_nnz = pats
+                    .iter()
+                    .filter(|p| p.needed.iter().any(|(o, _)| *o == me))
+                    .count();
+                let info = MpixInfo {
+                    algorithm: SddeAlgorithm::Personalized,
+                    known_recv_nnz: known.then_some(recv_nnz),
+                    ..MpixInfo::default()
+                };
+                c.barrier().await;
+                let t0 = c.now();
+                alltoallv_crs(&mx, &info, &pats[me].crsv_args())
+                    .await
+                    .unwrap();
+                c.now() - t0
+            }
+        });
+        let t = out.results.into_iter().max().unwrap();
+        println!(
+            "  known_recv_nnz={known}: {}  (allreduces: {})",
+            fmt::ns(t),
+            out.counters.allreduces
+        );
+    }
+
+    println!("\n== extension: locality-aware RMA (paper §VI future work) ==");
+    {
+        // constant-size SDDE: compare plain RMA vs locality-aware RMA vs
+        // the paper's best (loc-nonblocking)
+        for algo in [
+            SddeAlgorithm::Rma,
+            SddeAlgorithm::LocalityRma,
+            SddeAlgorithm::LocalityNonBlocking,
+        ] {
+            let (t, c) = run_once(
+                topo.clone(),
+                MpiFlavor::Mvapich2,
+                algo,
+                RegionKind::Node,
+                IntraAlgo::Personalized,
+                Variant::ConstSize,
+                pats.clone(),
+            );
+            println!(
+                "  {:<18} {}  (max inter-node msgs {})",
+                algo.name(),
+                fmt::ns(t),
+                c.max_internode_per_rank()
+            );
+        }
+    }
+
+    println!("\n== ablation 4: personalized vs NBX crossover vs message count ==");
+    println!("  (uniform random pattern, 128 ranks; paper §I trade-off)");
+    let topo4 = Topology::quartz(8, 16);
+    for deg in [2usize, 8, 32, 96] {
+        let n = topo4.nranks();
+        let part = Partition::new(n * 64, n);
+        let mut rng = Rng::new(5);
+        let pats4: Rc<Vec<SpmvPattern>> = Rc::new(
+            (0..n)
+                .map(|r| {
+                    let owners = rng.sample_distinct(n - 1, deg);
+                    let cols: Vec<usize> = owners
+                        .iter()
+                        .map(|&o| {
+                            let o = if o >= r { o + 1 } else { o };
+                            part.start(o)
+                        })
+                        .collect();
+                    SpmvPattern::from_columns(part, r, &cols)
+                })
+                .collect(),
+        );
+        let mut line = format!("  deg={deg:>3}: ");
+        for algo in [SddeAlgorithm::Personalized, SddeAlgorithm::NonBlocking] {
+            let (t, _) = run_once(
+                topo4.clone(),
+                MpiFlavor::Mvapich2,
+                algo,
+                RegionKind::Node,
+                IntraAlgo::Personalized,
+                Variant::Variable,
+                pats4.clone(),
+            );
+            line.push_str(&format!("{}={:<12} ", algo.name(), fmt::ns(t)));
+        }
+        println!("{line}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Figures 5 & 6 (`MPIX_Alltoall_crs` cost across node
+//! counts, Mvapich2 + OpenMPI presets).
+//!
+//! `cargo bench --bench fig_alltoall_crs` runs a scaled-down sweep by
+//! default so the whole bench suite stays in CI budget; set
+//! `SDDE_BENCH_FULL=1` for the paper-scale sweep (2–64 nodes × 32 PPN,
+//! full-size matrices — several minutes). `sdde figures --fig 5` is the
+//! CLI equivalent with CSV output.
+
+use sdde::bench::{render_figure, run_sweep, FigureId, SweepConfig};
+
+fn main() {
+    let full = std::env::var("SDDE_BENCH_FULL").is_ok();
+    for fig in [FigureId::Fig5, FigureId::Fig6] {
+        let cfg = if full {
+            SweepConfig::paper(fig)
+        } else {
+            let mut c = SweepConfig::quick(fig, 16);
+            c.nodes = vec![2, 4, 8, 16];
+            c.ppn = 16;
+            c
+        };
+        let t0 = std::time::Instant::now();
+        let points = run_sweep(&cfg);
+        println!("{}", render_figure(&fig.title(), &points));
+        println!(
+            "[bench] {} points in {:.1}s (real)\n",
+            points.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

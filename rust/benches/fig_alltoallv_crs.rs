@@ -1,0 +1,27 @@
+//! Bench: regenerate Figures 7 & 8 (`MPIX_Alltoallv_crs` cost across node
+//! counts, Mvapich2 + OpenMPI presets). Scaled-down by default;
+//! `SDDE_BENCH_FULL=1` for paper scale. See fig_alltoall_crs.rs.
+
+use sdde::bench::{render_figure, run_sweep, FigureId, SweepConfig};
+
+fn main() {
+    let full = std::env::var("SDDE_BENCH_FULL").is_ok();
+    for fig in [FigureId::Fig7, FigureId::Fig8] {
+        let cfg = if full {
+            SweepConfig::paper(fig)
+        } else {
+            let mut c = SweepConfig::quick(fig, 16);
+            c.nodes = vec![2, 4, 8, 16];
+            c.ppn = 16;
+            c
+        };
+        let t0 = std::time::Instant::now();
+        let points = run_sweep(&cfg);
+        println!("{}", render_figure(&fig.title(), &points));
+        println!(
+            "[bench] {} points in {:.1}s (real)\n",
+            points.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,147 @@
+//! Microbenchmarks of the simulated-MPI substrate: p2p latency per tier,
+//! allreduce scaling, probe/matching costs, RMA puts — plus the *real*
+//! throughput of the discrete-event engine (events/s, the §Perf metric).
+//!
+//! `cargo bench --bench micro_mpi`
+
+use std::rc::Rc;
+
+use sdde::mpi::{Payload, ReduceOp, World, ANY_SOURCE};
+use sdde::simnet::{CostModel, MpiFlavor, Tier, Topology};
+use sdde::util::fmt;
+
+fn pingpong(topo: Topology, bytes_words: usize, iters: usize) -> u64 {
+    let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
+    let out = world.run(move |c| async move {
+        let data = vec![1u64; bytes_words];
+        if c.rank() == 0 {
+            let t0 = c.now();
+            for _ in 0..iters {
+                c.send(1, 1, Payload::ints(&data)).await;
+                c.recv(1, 2).await;
+            }
+            (c.now() - t0) / (2 * iters as u64)
+        } else if c.rank() == 1 {
+            for _ in 0..iters {
+                let m = c.recv(0, 1).await;
+                c.send(0, 2, m.payload).await;
+            }
+            0
+        } else {
+            0
+        }
+    });
+    out.results[0]
+}
+
+fn main() {
+    println!("== simulated p2p half-round-trip latency (4-word message) ==");
+    for (name, topo) in [
+        ("intra-socket", Topology::quartz(1, 4)),
+        ("inter-socket", Topology::quartz(1, 2)),
+        ("inter-node  ", Topology::quartz(2, 1)),
+    ] {
+        let t = pingpong(topo, 4, 100);
+        println!("  {name}: {}", fmt::ns(t));
+    }
+    // tier sanity
+    let t = Topology::quartz(2, 4);
+    assert_eq!(t.tier(0, 4), Tier::InterNode);
+
+    println!("\n== allreduce virtual time vs ranks (64-word vector) ==");
+    for nodes in [1usize, 2, 4, 8, 16, 32, 64] {
+        let world = World::new(
+            Topology::quartz(nodes, 32),
+            CostModel::preset(MpiFlavor::Mvapich2),
+        );
+        let out = world.run(|c| async move {
+            c.allreduce(vec![1u64; 64], ReduceOp::Sum).await;
+        });
+        println!(
+            "  {:>5} ranks: {}",
+            nodes * 32,
+            fmt::ns(out.end_time)
+        );
+    }
+
+    println!("\n== unexpected-queue matching cost (N queued, probe the last) ==");
+    for n_queued in [1usize, 16, 64, 256] {
+        let world = World::new(
+            Topology::quartz(1, 2),
+            CostModel::preset(MpiFlavor::Mvapich2),
+        );
+        let out = world.run(move |c| async move {
+            if c.rank() == 0 {
+                for i in 0..n_queued {
+                    c.isend(1, i as u32, Payload::ints(&[1])).await;
+                }
+                c.isend(1, 9999, Payload::ints(&[2])).await;
+                0
+            } else {
+                c.sim().sleep(1_000_000).await; // let everything arrive
+                let t0 = c.now();
+                // probe for the *last* message → scans the whole queue
+                c.probe(ANY_SOURCE, 9999).await;
+                let dt = c.now() - t0;
+                for i in 0..n_queued {
+                    c.recv(0, i as u32).await;
+                }
+                c.recv(0, 9999).await;
+                dt
+            }
+        });
+        println!("  queue={n_queued:>4}: probe cost {}", fmt::ns(out.results[1]));
+    }
+
+    println!("\n== DES engine throughput (real time) ==");
+    let t0 = std::time::Instant::now();
+    let topo = Topology::quartz(8, 16);
+    let n = topo.nranks();
+    let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
+    let rounds = 50usize;
+    let out = world.run(move |c| async move {
+        let me = c.rank();
+        for r in 0..rounds {
+            let dst = (me + r + 1) % n;
+            let src = (me + n - (r + 1) % n) % n;
+            let sreq = c.isend(dst, 7, Payload::ints(&[r as u64])).await;
+            c.recv(src, 7).await;
+            sreq.await;
+        }
+    });
+    let real = t0.elapsed();
+    let (events, polls) = out.exec_stats;
+    let msgs = (n * rounds) as f64;
+    println!(
+        "  {} ranks x {} rounds: {} msgs, {events} events, {polls} polls in {:.3}s",
+        n, rounds, msgs, real.as_secs_f64()
+    );
+    println!(
+        "  => {:.2} M events/s, {:.2} us/message (real)",
+        events as f64 / real.as_secs_f64() / 1e6,
+        real.as_secs_f64() * 1e6 / msgs
+    );
+
+    println!("\n== RMA put + fence (const-size SDDE substrate) ==");
+    for nodes in [2usize, 8, 32] {
+        let world = World::new(
+            Topology::quartz(nodes, 32),
+            CostModel::preset(MpiFlavor::Mvapich2),
+        );
+        let out = world.run(move |c| async move {
+            let n = c.nranks();
+            let win = c.win_allocate(n).await;
+            win.fence().await;
+            let me = c.rank();
+            for k in 1..=8usize {
+                win.put((me + k * 7) % n, me, &[me as u64], 4).await;
+            }
+            win.fence().await;
+        });
+        println!(
+            "  {:>4} ranks, 8 puts/rank: {}",
+            nodes * 32,
+            fmt::ns(out.end_time)
+        );
+    }
+}

@@ -1,0 +1,293 @@
+//! Node-count sweeps regenerating the paper's Figures 5–8.
+//!
+//! For each (matrix, node count, algorithm): build the per-rank SpMV
+//! patterns once from the row-deterministic generator, run one simulated
+//! SDDE, and record the maximum per-rank virtual time of the exchange
+//! (all ranks enter together after a barrier) plus traffic counters.
+
+use std::rc::Rc;
+
+use crate::mpi::World;
+use crate::mpix::{
+    alltoall_crs, alltoallv_crs, IntraAlgo, MpixComm, MpixInfo, SddeAlgorithm,
+};
+use crate::simnet::{CostModel, MpiFlavor, RegionKind, Time, Topology};
+use crate::sparse::{MatrixPreset, Partition, SpmvPattern};
+
+/// Which SDDE API a figure exercises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// `MPIX_Alltoall_crs` — Figs. 5 & 6 (single-integer messages).
+    ConstSize,
+    /// `MPIX_Alltoallv_crs` — Figs. 7 & 8 (index-list messages).
+    Variable,
+}
+
+/// Paper figure identifiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FigureId {
+    Fig5,
+    Fig6,
+    Fig7,
+    Fig8,
+}
+
+impl FigureId {
+    pub fn parse(s: &str) -> Option<FigureId> {
+        match s {
+            "5" | "fig5" => Some(FigureId::Fig5),
+            "6" | "fig6" => Some(FigureId::Fig6),
+            "7" | "fig7" => Some(FigureId::Fig7),
+            "8" | "fig8" => Some(FigureId::Fig8),
+            _ => None,
+        }
+    }
+
+    pub fn variant(&self) -> Variant {
+        match self {
+            FigureId::Fig5 | FigureId::Fig6 => Variant::ConstSize,
+            FigureId::Fig7 | FigureId::Fig8 => Variant::Variable,
+        }
+    }
+
+    pub fn flavor(&self) -> MpiFlavor {
+        match self {
+            FigureId::Fig5 | FigureId::Fig7 => MpiFlavor::Mvapich2,
+            FigureId::Fig6 | FigureId::Fig8 => MpiFlavor::OpenMpi,
+        }
+    }
+
+    pub fn title(&self) -> String {
+        format!(
+            "Figure {}: MPIX_Alltoall{}_crs methods using {}",
+            match self {
+                FigureId::Fig5 => 5,
+                FigureId::Fig6 => 6,
+                FigureId::Fig7 => 7,
+                FigureId::Fig8 => 8,
+            },
+            if self.variant() == Variant::Variable {
+                "v"
+            } else {
+                ""
+            },
+            self.flavor().name()
+        )
+    }
+}
+
+/// Sweep configuration (defaults mirror the paper's §V setup).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub variant: Variant,
+    pub flavor: MpiFlavor,
+    pub nodes: Vec<usize>,
+    pub ppn: usize,
+    pub matrices: Vec<MatrixPreset>,
+    pub algos: Vec<SddeAlgorithm>,
+    pub region: RegionKind,
+    pub intra: IntraAlgo,
+    pub seed: u64,
+    pub progress: bool,
+}
+
+impl SweepConfig {
+    /// Full paper setup for a figure: 2–64 nodes × 32 PPN, the four
+    /// matrix analogs, all applicable algorithms.
+    pub fn paper(fig: FigureId) -> SweepConfig {
+        SweepConfig {
+            variant: fig.variant(),
+            flavor: fig.flavor(),
+            nodes: vec![2, 4, 8, 16, 32, 64],
+            ppn: 32,
+            matrices: MatrixPreset::paper_set(),
+            algos: match fig.variant() {
+                Variant::ConstSize => SddeAlgorithm::ALL.to_vec(),
+                Variant::Variable => SddeAlgorithm::VARIABLE.to_vec(),
+            },
+            region: RegionKind::Node,
+            intra: IntraAlgo::Personalized,
+            seed: 2023,
+            progress: true,
+        }
+    }
+
+    /// Scaled-down smoke configuration (CI / quick mode): matrices shrunk
+    /// by `div`, small node counts and PPN.
+    pub fn quick(fig: FigureId, div: usize) -> SweepConfig {
+        let mut cfg = SweepConfig::paper(fig);
+        cfg.nodes = vec![2, 4, 8];
+        cfg.ppn = 8;
+        cfg.matrices = cfg.matrices.iter().map(|m| m.scaled(div)).collect();
+        cfg.progress = false;
+        cfg
+    }
+}
+
+/// One measured point of a figure.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub matrix: String,
+    pub algo: &'static str,
+    pub nodes: usize,
+    pub ranks: usize,
+    /// Max per-rank virtual time of the SDDE call (ns).
+    pub time_ns: Time,
+    /// Paper's red dots: max inter-node (user) messages sent by any rank.
+    pub max_internode: u64,
+    /// Total user messages across ranks (all tiers).
+    pub total_msgs: u64,
+    /// Mean per-rank destinations (send_nnz) — pattern statistic.
+    pub mean_send_nnz: f64,
+}
+
+/// Run a sweep and return every measured point.
+pub fn run_sweep(cfg: &SweepConfig) -> Vec<Point> {
+    let mut points = Vec::new();
+    for preset in &cfg.matrices {
+        for &nodes in &cfg.nodes {
+            let topo = Topology::quartz(nodes, cfg.ppn);
+            let nranks = topo.nranks();
+            let part = Partition::new(preset.n, nranks);
+            if cfg.progress {
+                eprintln!(
+                    "[sweep] {} nodes={nodes} ranks={nranks}: building patterns...",
+                    preset.name
+                );
+            }
+            let patterns: Rc<Vec<SpmvPattern>> = Rc::new(
+                (0..nranks)
+                    .map(|r| SpmvPattern::build(preset, part, r, cfg.seed))
+                    .collect(),
+            );
+            let mean_send_nnz = patterns.iter().map(|p| p.recv_nnz() as f64).sum::<f64>()
+                / nranks as f64;
+            for &algo in &cfg.algos {
+                if cfg.variant == Variant::Variable && algo == SddeAlgorithm::Rma {
+                    continue;
+                }
+                let (time_ns, counters) = run_once(
+                    topo.clone(),
+                    cfg.flavor,
+                    algo,
+                    cfg.region,
+                    cfg.intra,
+                    cfg.variant,
+                    patterns.clone(),
+                );
+                if cfg.progress {
+                    eprintln!(
+                        "[sweep]   {:>17}: {:>12}  max-internode={}",
+                        algo.name(),
+                        crate::util::fmt::ns(time_ns),
+                        counters.max_internode_per_rank()
+                    );
+                }
+                points.push(Point {
+                    matrix: preset.name.clone(),
+                    algo: algo.name(),
+                    nodes,
+                    ranks: nranks,
+                    time_ns,
+                    max_internode: counters.max_internode_per_rank(),
+                    total_msgs: counters.total_user_msgs(),
+                    mean_send_nnz,
+                });
+            }
+        }
+    }
+    points
+}
+
+/// Run one SDDE on a fresh world; returns (max per-rank elapsed, counters).
+pub fn run_once(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    intra: IntraAlgo,
+    variant: Variant,
+    patterns: Rc<Vec<SpmvPattern>>,
+) -> (Time, crate::mpi::Counters) {
+    let world = World::new(topo, CostModel::preset(flavor));
+    let out = world.run(move |c| {
+        let patterns = patterns.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), region);
+            let info = MpixInfo {
+                algorithm: algo,
+                region,
+                intra,
+                ..MpixInfo::default()
+            };
+            let pat = &patterns[c.rank()];
+            // Align all ranks, then time only the exchange itself.
+            c.barrier().await;
+            let t0 = c.now();
+            match variant {
+                Variant::ConstSize => {
+                    let args = pat.crs_size_args();
+                    let r = alltoall_crs(&mx, &info, &args).await.unwrap();
+                    std::hint::black_box(&r);
+                }
+                Variant::Variable => {
+                    let args = pat.crsv_args();
+                    let r = alltoallv_crs(&mx, &info, &args).await.unwrap();
+                    std::hint::black_box(&r);
+                }
+            }
+            c.now() - t0
+        }
+    });
+    let elapsed = out.results.into_iter().max().unwrap_or(0);
+    (elapsed, out.counters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_produces_points() {
+        let mut cfg = SweepConfig::quick(FigureId::Fig7, 400);
+        cfg.nodes = vec![2, 4];
+        cfg.matrices.truncate(2);
+        let pts = run_sweep(&cfg);
+        // 2 matrices × 2 node counts × 4 variable algorithms
+        assert_eq!(pts.len(), 2 * 2 * 4);
+        for p in &pts {
+            assert!(p.time_ns > 0, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn aggregation_reduces_internode_messages() {
+        // The defining effect of the paper: locality-aware variants send
+        // fewer inter-node messages than the standard ones.
+        let mut cfg = SweepConfig::quick(FigureId::Fig7, 200);
+        cfg.nodes = vec![4];
+        cfg.matrices = vec![MatrixPreset::cage14_like().scaled(200)];
+        let pts = run_sweep(&cfg);
+        let get = |name: &str| {
+            pts.iter()
+                .find(|p| p.algo == name)
+                .map(|p| p.max_internode)
+                .unwrap()
+        };
+        let std = get("personalized").min(get("nonblocking"));
+        let agg = get("loc-personalized").max(get("loc-nonblocking"));
+        assert!(
+            agg < std,
+            "aggregated {agg} not below standard {std}"
+        );
+    }
+
+    #[test]
+    fn figure_ids_map_correctly() {
+        assert_eq!(FigureId::Fig5.variant(), Variant::ConstSize);
+        assert_eq!(FigureId::Fig8.variant(), Variant::Variable);
+        assert_eq!(FigureId::Fig7.flavor(), MpiFlavor::Mvapich2);
+        assert_eq!(FigureId::Fig6.flavor(), MpiFlavor::OpenMpi);
+        assert!(FigureId::parse("7") == Some(FigureId::Fig7));
+    }
+}

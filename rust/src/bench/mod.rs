@@ -1,0 +1,10 @@
+//! Figure-regeneration harness: sweeps node counts × matrices × algorithms
+//! × MPI flavors and reports the virtual SDDE time plus the paper's
+//! red-dot metric (max inter-node messages per rank). One [`figures`]
+//! sweep per paper figure (5–8); [`report`] renders tables/CSV.
+
+pub mod figures;
+pub mod report;
+
+pub use figures::{run_sweep, FigureId, Point, SweepConfig, Variant};
+pub use report::{render_figure, write_csv};

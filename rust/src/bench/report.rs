@@ -1,0 +1,183 @@
+//! Rendering of sweep results: per-figure tables (one block per matrix,
+//! like the paper's 2×2 figure grids), CSV export, and the §V speedup
+//! summary ("up to 20× at 64 nodes").
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::figures::Point;
+use crate::util::fmt;
+
+/// Render one figure's points as per-matrix tables. Columns: node count,
+/// per-algorithm virtual time, and the standard/aggregated max inter-node
+/// message counts (the paper's red dots).
+pub fn render_figure(title: &str, points: &[Point]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let matrices: Vec<String> = {
+        let mut seen = BTreeSet::new();
+        points
+            .iter()
+            .filter(|p| seen.insert(p.matrix.clone()))
+            .map(|p| p.matrix.clone())
+            .collect()
+    };
+    let algos: Vec<&'static str> = {
+        let mut seen = BTreeSet::new();
+        points
+            .iter()
+            .filter(|p| seen.insert(p.algo))
+            .map(|p| p.algo)
+            .collect()
+    };
+    for m in &matrices {
+        out.push_str(&format!("\n-- {m} --\n"));
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        let mut header = vec!["nodes".to_string(), "ranks".to_string()];
+        header.extend(algos.iter().map(|a| a.to_string()));
+        header.push("msgs(std)".into());
+        header.push("msgs(agg)".into());
+        rows.push(header);
+        let node_counts: BTreeSet<usize> = points
+            .iter()
+            .filter(|p| &p.matrix == m)
+            .map(|p| p.nodes)
+            .collect();
+        for &n in &node_counts {
+            let at = |algo: &str| {
+                points
+                    .iter()
+                    .find(|p| &p.matrix == m && p.nodes == n && p.algo == algo)
+            };
+            let mut row = vec![n.to_string()];
+            row.push(
+                at(algos[0])
+                    .map(|p| p.ranks.to_string())
+                    .unwrap_or_default(),
+            );
+            for a in &algos {
+                row.push(
+                    at(a)
+                        .map(|p| fmt::ns(p.time_ns))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            let std_msgs = ["personalized", "nonblocking", "rma"]
+                .iter()
+                .filter_map(|a| at(a))
+                .map(|p| p.max_internode)
+                .max();
+            let agg_msgs = ["loc-personalized", "loc-nonblocking"]
+                .iter()
+                .filter_map(|a| at(a))
+                .map(|p| p.max_internode)
+                .max();
+            row.push(std_msgs.map(|v| v.to_string()).unwrap_or_default());
+            row.push(agg_msgs.map(|v| v.to_string()).unwrap_or_default());
+            rows.push(row);
+        }
+        out.push_str(&fmt::table(&rows));
+    }
+    out.push_str(&speedup_summary(points));
+    out
+}
+
+/// The paper's §V headline: per matrix at the largest node count, the
+/// speedup of the best locality-aware algorithm over the best standard one.
+pub fn speedup_summary(points: &[Point]) -> String {
+    let mut out = String::from("\n-- speedup at largest scale (loc-aware vs best standard) --\n");
+    let matrices: BTreeSet<String> = points.iter().map(|p| p.matrix.clone()).collect();
+    for m in matrices {
+        let max_nodes = points
+            .iter()
+            .filter(|p| p.matrix == m)
+            .map(|p| p.nodes)
+            .max()
+            .unwrap_or(0);
+        let best = |names: &[&str]| -> Option<u64> {
+            points
+                .iter()
+                .filter(|p| {
+                    p.matrix == m && p.nodes == max_nodes && names.contains(&p.algo)
+                })
+                .map(|p| p.time_ns)
+                .min()
+        };
+        let std = best(&["personalized", "nonblocking", "rma"]);
+        let agg = best(&["loc-personalized", "loc-nonblocking"]);
+        if let (Some(s), Some(a)) = (std, agg) {
+            out.push_str(&format!(
+                "{m} @ {max_nodes} nodes: {:.2}x {}\n",
+                s as f64 / a as f64,
+                if a <= s { "speedup" } else { "(slowdown)" },
+            ));
+        }
+    }
+    out
+}
+
+/// Write points as CSV (one row per measurement).
+pub fn write_csv(path: &Path, points: &[Point]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f =
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    writeln!(
+        f,
+        "matrix,algo,nodes,ranks,time_ns,max_internode_msgs,total_msgs,mean_send_nnz"
+    )?;
+    for p in points {
+        writeln!(
+            f,
+            "{},{},{},{},{},{},{},{:.2}",
+            p.matrix, p.algo, p.nodes, p.ranks, p.time_ns, p.max_internode, p.total_msgs,
+            p.mean_send_nnz
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(matrix: &str, algo: &'static str, nodes: usize, t: u64, msgs: u64) -> Point {
+        Point {
+            matrix: matrix.into(),
+            algo,
+            nodes,
+            ranks: nodes * 8,
+            time_ns: t,
+            max_internode: msgs,
+            total_msgs: msgs * 10,
+            mean_send_nnz: 3.0,
+        }
+    }
+
+    #[test]
+    fn renders_table_and_speedup() {
+        let pts = vec![
+            pt("m1", "personalized", 2, 1000, 50),
+            pt("m1", "loc-nonblocking", 2, 100, 5),
+        ];
+        let s = render_figure("test fig", &pts);
+        assert!(s.contains("m1"));
+        assert!(s.contains("personalized"));
+        assert!(s.contains("10.00x speedup"));
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let pts = vec![pt("m", "rma", 4, 5, 2)];
+        let path = std::env::temp_dir().join("sdde_csv_test.csv");
+        write_csv(&path, &pts).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("matrix,algo"));
+        assert!(content.contains("m,rma,4,32,5,2,20,3.00"));
+        std::fs::remove_file(path).ok();
+    }
+}

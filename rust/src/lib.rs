@@ -1,0 +1,46 @@
+//! # sdde — A More Scalable Sparse Dynamic Data Exchange
+//!
+//! Reproduction of Geyko, Collom, Schafer, Bridges, Bienz,
+//! *“A More Scalable Sparse Dynamic Data Exchange”* (2023): the
+//! `MPIX_Alltoall_crs` / `MPIX_Alltoallv_crs` sparse dynamic data exchange
+//! (SDDE) APIs and the five SDDE algorithms (personalized, non-blocking,
+//! RMA, locality-aware personalized, locality-aware non-blocking), built on
+//! top of a deterministic virtual-time cluster simulator.
+//!
+//! ## Layer map (see DESIGN.md)
+//!
+//! * [`simnet`] — substrate: deterministic single-threaded async executor
+//!   with a virtual clock, hierarchical topology (node/socket/core) and a
+//!   tiered LogGP-with-matching network cost model.
+//! * [`mpi`] — substrate: a simulated MPI (p2p with unexpected-message
+//!   queues and eager/rendezvous protocols, collectives built from p2p,
+//!   one-sided RMA windows).
+//! * [`mpix`] — **the paper's contribution**: the MPI Advance-style SDDE
+//!   API and all five algorithms.
+//! * [`sparse`] — sparse-matrix substrate: CSR, synthetic SuiteSparse
+//!   analogs, row-wise partitioning, and communication-package formation
+//!   (the paper's motivating use case).
+//! * [`solver`] — distributed SpMV / Jacobi / CG consumers that prove the
+//!   SDDE-formed patterns correct end to end.
+//! * [`runtime`] — PJRT (XLA) artifact loading so the solver's local
+//!   compute runs the AOT-compiled JAX/Pallas kernels from rust.
+//! * [`bench`] — the figure-regeneration harness (Figs. 5–8 of the paper).
+
+pub mod bench;
+pub mod mpi;
+pub mod mpix;
+pub mod runtime;
+pub mod simnet;
+pub mod solver;
+pub mod sparse;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::mpi::{Comm, Payload, Tag, World, ANY_SOURCE, ANY_TAG};
+    pub use crate::mpix::{
+        alltoall_crs, alltoallv_crs, CrsArgs, CrsResult, CrsvArgs, CrsvResult, MpixComm,
+        MpixInfo, SddeAlgorithm,
+    };
+    pub use crate::simnet::{CostModel, MpiFlavor, RegionKind, Tier, Time, Topology};
+}

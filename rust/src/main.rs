@@ -1,0 +1,279 @@
+//! `sdde` — CLI launcher for the SDDE reproduction.
+//!
+//! Subcommands:
+//! * `figures`  — regenerate the paper's Figures 5–8 (tables + CSV).
+//! * `sdde`     — run a single SDDE instance and print details.
+//! * `solve`    — distributed CG/Jacobi solve over an SDDE-formed pattern.
+//! * `info`     — list matrix presets, algorithms and cost-model presets.
+//!
+//! Examples:
+//! ```text
+//! sdde figures --fig 7 --quick
+//! sdde figures --fig all --out results/
+//! sdde sdde --matrix cage14 --nodes 8 --algo loc-nonblocking --variant v
+//! sdde solve --nx 48 --ny 48 --nodes 2 --ppn 4 --solver cg
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use sdde::bench::{render_figure, run_sweep, write_csv, FigureId, SweepConfig};
+use sdde::mpi::World;
+use sdde::mpix::{IntraAlgo, MpixComm, MpixInfo, SddeAlgorithm};
+use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+use sdde::solver::{cg, jacobi, CsrLocal, DistMatrix};
+use sdde::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
+use sdde::util::{fmt, Args};
+use std::rc::Rc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let r = match cmd {
+        "figures" => cmd_figures(&args),
+        "sdde" => cmd_sdde(&args),
+        "solve" => cmd_solve(&args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "sdde — A More Scalable Sparse Dynamic Data Exchange (reproduction)\n\n\
+         USAGE: sdde <figures|sdde|solve|info> [flags]\n\n\
+         figures --fig <5|6|7|8|all> [--quick] [--div N] [--out DIR]\n\
+                 [--nodes 2,4,..] [--ppn N] [--matrices a,b] [--algos x,y]\n\
+                 [--region node|socket] [--seed N]\n\
+         sdde    --matrix <preset> --nodes N [--ppn N] [--algo NAME]\n\
+                 [--variant crs|v] [--mpi openmpi|mvapich2] [--div N]\n\
+         solve   [--nx N --ny N] [--nodes N --ppn N] [--solver cg|jacobi]\n\
+                 [--algo NAME] [--iters N]\n\
+         info"
+    );
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let figs: Vec<FigureId> = match args.get_or("fig", "all") {
+        "all" => vec![FigureId::Fig5, FigureId::Fig6, FigureId::Fig7, FigureId::Fig8],
+        s => vec![FigureId::parse(s).ok_or_else(|| anyhow::anyhow!("unknown figure {s}"))?],
+    };
+    let quick = args.has("quick");
+    let div = args.get_parsed("div", if quick { 64 } else { 1 });
+    let out_dir = args.get("out").map(PathBuf::from);
+
+    for fig in figs {
+        let mut cfg = if quick {
+            SweepConfig::quick(fig, div)
+        } else {
+            SweepConfig::paper(fig)
+        };
+        if !quick && div > 1 {
+            cfg.matrices = cfg.matrices.iter().map(|m| m.scaled(div)).collect();
+        }
+        if let Some(nodes) = args.get_list("nodes") {
+            cfg.nodes = nodes.iter().map(|s| s.parse().unwrap_or(2)).collect();
+        }
+        cfg.ppn = args.get_parsed("ppn", cfg.ppn);
+        cfg.seed = args.get_parsed("seed", cfg.seed);
+        if let Some(r) = args.get("region") {
+            cfg.region = RegionKind::parse(r)
+                .ok_or_else(|| anyhow::anyhow!("unknown region {r}"))?;
+        }
+        if let Some(ms) = args.get_list("matrices") {
+            cfg.matrices = ms
+                .iter()
+                .map(|m| {
+                    MatrixPreset::parse(m)
+                        .map(|p| if div > 1 { p.scaled(div) } else { p })
+                        .ok_or_else(|| anyhow::anyhow!("unknown matrix {m}"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(al) = args.get_list("algos") {
+            cfg.algos = al
+                .iter()
+                .map(|a| {
+                    SddeAlgorithm::parse(a).ok_or_else(|| anyhow::anyhow!("unknown algo {a}"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        let points = run_sweep(&cfg);
+        println!("{}", render_figure(&fig.title(), &points));
+        if let Some(dir) = &out_dir {
+            let name = format!(
+                "fig{}_{}.csv",
+                match fig {
+                    FigureId::Fig5 => 5,
+                    FigureId::Fig6 => 6,
+                    FigureId::Fig7 => 7,
+                    FigureId::Fig8 => 8,
+                },
+                cfg.flavor.name()
+            );
+            let path = dir.join(name);
+            write_csv(&path, &points)?;
+            println!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sdde(args: &Args) -> Result<()> {
+    let matrix = args.get_or("matrix", "cage14");
+    let div = args.get_parsed("div", 1usize);
+    let preset = MatrixPreset::parse(matrix)
+        .map(|p| if div > 1 { p.scaled(div) } else { p })
+        .ok_or_else(|| anyhow::anyhow!("unknown matrix preset {matrix}"))?;
+    let nodes = args.get_parsed("nodes", 4usize);
+    let ppn = args.get_parsed("ppn", 32usize);
+    let algo = SddeAlgorithm::parse(args.get_or("algo", "dispatch"))
+        .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+    let flavor = MpiFlavor::parse(args.get_or("mpi", "mvapich2"))
+        .ok_or_else(|| anyhow::anyhow!("unknown mpi flavor"))?;
+    let variant = match args.get_or("variant", "v") {
+        "v" | "alltoallv" => sdde::bench::Variant::Variable,
+        "crs" | "alltoall" => sdde::bench::Variant::ConstSize,
+        v => bail!("unknown variant {v}"),
+    };
+    let seed = args.get_parsed("seed", 2023u64);
+
+    let topo = Topology::quartz(nodes, ppn);
+    let nranks = topo.nranks();
+    let part = Partition::new(preset.n, nranks);
+    eprintln!(
+        "matrix={} n={} ranks={} ({} nodes x {} ppn), algo={}, mpi={}",
+        preset.name,
+        preset.n,
+        nranks,
+        nodes,
+        ppn,
+        algo.name(),
+        flavor.name()
+    );
+    let patterns: Rc<Vec<SpmvPattern>> = Rc::new(
+        (0..nranks)
+            .map(|r| SpmvPattern::build(&preset, part, r, seed))
+            .collect(),
+    );
+    let send_nnz: Vec<usize> = patterns.iter().map(|p| p.recv_nnz()).collect();
+    eprintln!(
+        "pattern: mean dests/rank = {:.1}, max = {}",
+        send_nnz.iter().sum::<usize>() as f64 / nranks as f64,
+        send_nnz.iter().max().unwrap()
+    );
+    let (t, counters) = sdde::bench::figures::run_once(
+        topo,
+        flavor,
+        algo,
+        RegionKind::Node,
+        IntraAlgo::Personalized,
+        variant,
+        patterns,
+    );
+    println!("SDDE time (max over ranks): {}", fmt::ns(t));
+    println!(
+        "max inter-node msgs/rank: {}   total user msgs: {}",
+        counters.max_internode_per_rank(),
+        counters.total_user_msgs()
+    );
+    println!(
+        "per-tier msgs [self, intra-socket, inter-socket, inter-node]: {:?}",
+        counters.user_msgs
+    );
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let nx = args.get_parsed("nx", 48usize);
+    let ny = args.get_parsed("ny", 48usize);
+    let nodes = args.get_parsed("nodes", 2usize);
+    let ppn = args.get_parsed("ppn", 4usize);
+    let iters = args.get_parsed("iters", 300usize);
+    let solver = args.get_or("solver", "cg").to_string();
+    let algo = SddeAlgorithm::parse(args.get_or("algo", "loc-nonblocking"))
+        .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+
+    let preset = MatrixPreset::poisson2d(nx, ny);
+    let topo = Topology::quartz(nodes, ppn);
+    let nranks = topo.nranks();
+    let part = Partition::new(preset.n, nranks);
+    eprintln!(
+        "solving poisson2d {nx}x{ny} (n={}) on {} ranks with {} (pattern via {})",
+        preset.n,
+        nranks,
+        solver,
+        algo.name()
+    );
+    let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
+    let solver2 = solver.clone();
+    let out = world.run(move |c| {
+        let preset = MatrixPreset::poisson2d(nx, ny);
+        let solver = solver2.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let info = MpixInfo::with_algorithm(algo);
+            let pat = SpmvPattern::build(&preset, part, c.rank(), 0);
+            let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+            let a = DistMatrix::build(&preset, part, c.rank(), 0, pkg);
+            let b = vec![1.0; a.local_n()];
+            let kernel = CsrLocal(&a.local);
+            let (_, hist) = match solver.as_str() {
+                "jacobi" => jacobi(&c, &a, &b, &kernel, iters, 1.0).await,
+                _ => cg(&c, &a, &b, &kernel, iters, 1e-10).await,
+            };
+            hist
+        }
+    });
+    let hist = &out.results[0];
+    println!("iterations: {}", hist.len());
+    for (i, r) in hist.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == hist.len() {
+            println!("  iter {i:>4}  residual {r:.3e}");
+        }
+    }
+    println!(
+        "virtual solve time: {}   total user msgs: {}",
+        fmt::ns(out.end_time),
+        out.counters.total_user_msgs()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("matrix presets (paper set):");
+    for p in MatrixPreset::paper_set() {
+        println!(
+            "  {:<24} n={:<9} ~nnz={:<10} kind={:?}",
+            p.name,
+            p.n,
+            p.approx_nnz(),
+            p.kind
+        );
+    }
+    println!("\nalgorithms (+ loc-rma extension, const-size only):");
+    for a in SddeAlgorithm::CONST_SIZE {
+        println!("  {}", a.name());
+    }
+    println!("\nmpi flavors: openmpi, mvapich2");
+    for f in [MpiFlavor::OpenMpi, MpiFlavor::Mvapich2] {
+        let c = CostModel::preset(f);
+        println!(
+            "  {:<9} latency[self,socket,xsocket,node]={:?} ns, eager={}B, match={}+{}n ns",
+            f.name(),
+            c.latency,
+            c.eager_limit,
+            c.match_base,
+            c.match_per_entry
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,417 @@
+//! Collectives built from the simulated p2p layer, so their cost *emerges*
+//! from the same network model the SDDE algorithms pay (latency, injection,
+//! matching): allreduce (recursive doubling with a non-power-of-two fold),
+//! blocking barrier, non-blocking barrier (dissemination, progressed by a
+//! background task — the shape NBX needs), broadcast, gather/allgather and
+//! dense alltoall(v) for the intra-region redistribution ablation.
+
+use super::wait::Signal;
+use super::world::{Comm, Msg, Payload};
+use super::{Tag, TAG_ALLREDUCE, TAG_ALLTOALL, TAG_BARRIER, TAG_BCAST, TAG_GATHER, TAG_IBARRIER};
+
+/// Reduction operator for [`Comm::allreduce`]. `FSum`/`FMax` treat the
+/// words as bit-cast `f64` (used by the distributed solvers' dot products).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    FSum,
+    FMax,
+}
+
+impl ReduceOp {
+    fn apply(&self, acc: &mut [u64], other: &[u64]) {
+        debug_assert_eq!(acc.len(), other.len());
+        match self {
+            ReduceOp::Sum => {
+                for (a, b) in acc.iter_mut().zip(other) {
+                    *a = a.wrapping_add(*b);
+                }
+            }
+            ReduceOp::Max => {
+                for (a, b) in acc.iter_mut().zip(other) {
+                    *a = (*a).max(*b);
+                }
+            }
+            ReduceOp::FSum => {
+                for (a, b) in acc.iter_mut().zip(other) {
+                    *a = (f64::from_bits(*a) + f64::from_bits(*b)).to_bits();
+                }
+            }
+            ReduceOp::FMax => {
+                for (a, b) in acc.iter_mut().zip(other) {
+                    *a = f64::from_bits(*a).max(f64::from_bits(*b)).to_bits();
+                }
+            }
+        }
+    }
+}
+
+/// Tag for collective `family` at sequence `seq` (wraps harmlessly: only
+/// nearby collectives must be distinguishable).
+fn coll_tag(family: Tag, seq: u32, round: u32) -> Tag {
+    family + ((seq % 0x1000) << 8) + round
+}
+
+impl Comm {
+    /// MPI_Allreduce over a `u64` vector (recursive doubling; fold step for
+    /// non-power-of-two rank counts). Every rank gets the reduced vector.
+    pub async fn allreduce(&self, mut vec: Vec<u64>, op: ReduceOp) -> Vec<u64> {
+        let n = self.nranks();
+        let me = self.rank();
+        if me == 0 {
+            self.bump_counter(|c| c.allreduces += 1);
+        }
+        if n == 1 {
+            return vec;
+        }
+        let seq = self.next_seq(TAG_ALLREDUCE);
+        let elem_cost = self.cost().reduce_per_elem * vec.len() as u64;
+        let m = n.next_power_of_two() >> if n.is_power_of_two() { 0 } else { 1 };
+        let rem = n - m; // ranks beyond the largest power of two
+
+        // Fold: ranks >= m send their vector to (rank - m); those partners
+        // reduce locally.
+        if me >= m {
+            let tag = coll_tag(TAG_ALLREDUCE, seq, 50);
+            self.send(me - m, tag, Payload::longs(&vec)).await;
+        } else if me < rem {
+            let tag = coll_tag(TAG_ALLREDUCE, seq, 50);
+            let msg = self.recv(me + m, tag).await;
+            op.apply(&mut vec, &msg.payload.words);
+            self.charge_cpu(elem_cost).await;
+        }
+
+        // Recursive doubling among ranks < m.
+        if me < m {
+            let mut dist = 1usize;
+            let mut round = 0u32;
+            while dist < m {
+                let partner = me ^ dist;
+                let tag = coll_tag(TAG_ALLREDUCE, seq, round);
+                let sreq = self.isend(partner, tag, Payload::longs(&vec)).await;
+                let msg = self.recv(partner, tag).await;
+                op.apply(&mut vec, &msg.payload.words);
+                self.charge_cpu(elem_cost).await;
+                sreq.await;
+                dist <<= 1;
+                round += 1;
+            }
+        }
+
+        // Unfold: partners send the result back to ranks >= m.
+        if me < rem {
+            let tag = coll_tag(TAG_ALLREDUCE, seq, 60);
+            self.send(me + m, tag, Payload::longs(&vec)).await;
+        } else if me >= m {
+            let tag = coll_tag(TAG_ALLREDUCE, seq, 60);
+            vec = self.recv(me - m, tag).await.payload.words;
+        }
+        vec
+    }
+
+    /// Blocking barrier (dissemination algorithm).
+    pub async fn barrier(&self) {
+        let n = self.nranks();
+        if n == 1 {
+            return;
+        }
+        let me = self.rank();
+        let seq = self.next_seq(TAG_BARRIER);
+        let mut dist = 1usize;
+        let mut round = 0u32;
+        while dist < n {
+            let to = (me + dist) % n;
+            let from = (me + n - dist % n) % n;
+            let tag = coll_tag(TAG_BARRIER, seq, round);
+            let sreq = self.isend(to, tag, Payload::empty()).await;
+            self.recv(from, tag).await;
+            sreq.await;
+            dist <<= 1;
+            round += 1;
+        }
+    }
+
+    /// Non-blocking barrier (MPI_Ibarrier): returns a handle whose
+    /// [`IBarrier::is_done`] flips once every rank has entered the barrier.
+    /// A background task progresses the dissemination rounds so the caller
+    /// can interleave probing — exactly the NBX control flow.
+    pub async fn ibarrier(&self) -> IBarrier {
+        let n = self.nranks();
+        let seq = self.next_seq(TAG_IBARRIER);
+        let bar = IBarrier {
+            sig: Signal::new(),
+        };
+        if n == 1 {
+            bar.sig.set();
+            return bar;
+        }
+        let me = self.rank();
+        let comm = self.clone();
+        let handle = bar.clone();
+        self.sim().spawn(async move {
+            let mut dist = 1usize;
+            let mut round = 0u32;
+            while dist < n {
+                let to = (me + dist) % n;
+                let from = (me + n - dist % n) % n;
+                let tag = coll_tag(TAG_IBARRIER, seq, round);
+                let sreq = comm.isend(to, tag, Payload::empty()).await;
+                comm.recv(from, tag).await;
+                sreq.await;
+                dist <<= 1;
+                round += 1;
+            }
+            handle.sig.set();
+        });
+        bar
+    }
+
+    /// Broadcast from `root` (binomial tree).
+    pub async fn bcast(&self, root: usize, vec: Vec<u64>) -> Vec<u64> {
+        let n = self.nranks();
+        if n == 1 {
+            return vec;
+        }
+        let me = self.rank();
+        let seq = self.next_seq(TAG_BCAST);
+        let tag = coll_tag(TAG_BCAST, seq, 0);
+        let vrank = (me + n - root) % n; // virtual rank with root at 0
+        let mut data = vec;
+        // Receive from parent (for non-root ranks).
+        if vrank != 0 {
+            let mut mask = 1usize;
+            while mask < n {
+                if vrank & mask != 0 {
+                    let parent = ((vrank ^ mask) + root) % n;
+                    data = self.recv(parent, tag).await.payload.words;
+                    break;
+                }
+                mask <<= 1;
+            }
+        }
+        // Forward to children.
+        let mut mask = n.next_power_of_two() >> 1;
+        while mask > 0 {
+            if vrank & (mask - 1) == 0 && vrank & mask == 0 {
+                let child = vrank | mask;
+                if child < n {
+                    let dst = (child + root) % n;
+                    self.send(dst, tag, Payload::longs(&data)).await;
+                }
+            }
+            mask >>= 1;
+        }
+        data
+    }
+
+    /// Gather one vector per rank at `root`; returns `Some(vecs)` at root.
+    pub async fn gather(&self, root: usize, vec: Vec<u64>) -> Option<Vec<Vec<u64>>> {
+        let n = self.nranks();
+        let me = self.rank();
+        let seq = self.next_seq(TAG_GATHER);
+        let tag = coll_tag(TAG_GATHER, seq, 0);
+        if me == root {
+            let mut out: Vec<Vec<u64>> = vec![Vec::new(); n];
+            out[me] = vec;
+            for _ in 0..n - 1 {
+                let m: Msg = self.probe_recv(super::ANY_SOURCE, tag).await;
+                out[m.src] = m.payload.words;
+            }
+            Some(out)
+        } else {
+            self.send(root, tag, Payload::longs(&vec)).await;
+            None
+        }
+    }
+
+    /// Dense personalized all-to-all of variable vectors (`sendbufs[d]` goes
+    /// to rank `d`). Used by the intra-region redistribution ablation.
+    pub async fn alltoallv(&self, sendbufs: Vec<Vec<u64>>) -> Vec<Vec<u64>> {
+        let n = self.nranks();
+        assert_eq!(sendbufs.len(), n);
+        let me = self.rank();
+        let seq = self.next_seq(TAG_ALLTOALL);
+        let tag = coll_tag(TAG_ALLTOALL, seq, 0);
+        let mut out: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut reqs = Vec::new();
+        for off in 1..n {
+            let dst = (me + off) % n;
+            reqs.push(self.isend(dst, tag, Payload::longs(&sendbufs[dst])).await);
+        }
+        out[me] = sendbufs[me].clone();
+        for _ in 0..n - 1 {
+            let m = self.probe_recv(super::ANY_SOURCE, tag).await;
+            out[m.src] = m.payload.words;
+        }
+        super::world::waitall(&reqs).await;
+        out
+    }
+}
+
+/// Handle returned by [`Comm::ibarrier`].
+#[derive(Clone)]
+pub struct IBarrier {
+    sig: Signal,
+}
+
+impl IBarrier {
+    /// MPI_Test on the barrier request.
+    pub fn is_done(&self) -> bool {
+        self.sig.is_set()
+    }
+
+    /// Completion signal (for [`crate::mpi::WaitAny`]).
+    pub fn signal(&self) -> &Signal {
+        &self.sig
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::World;
+    use crate::simnet::{CostModel, MpiFlavor, Topology};
+
+    fn world(nodes: usize, ppn: usize) -> World {
+        World::new(
+            Topology::quartz(nodes, ppn),
+            CostModel::preset(MpiFlavor::Mvapich2),
+        )
+    }
+
+    #[test]
+    fn allreduce_sum_various_sizes() {
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 13, 16] {
+            let out = world(1, n).run(|c| async move {
+                let me = c.rank() as u64;
+                c.allreduce(vec![me, 1, me * me], ReduceOp::Sum).await
+            });
+            let n64 = n as u64;
+            let s: u64 = (0..n64).sum();
+            let sq: u64 = (0..n64).map(|x| x * x).sum();
+            for r in out.results {
+                assert_eq!(r, vec![s, n64, sq], "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_max() {
+        let out = world(2, 3).run(|c| async move {
+            let me = c.rank() as u64;
+            c.allreduce(vec![me, 100 - me], ReduceOp::Max).await
+        });
+        for r in out.results {
+            assert_eq!(r, vec![5, 100]);
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        let out = world(2, 4).run(|c| async move {
+            // Rank 3 arrives late; everyone's exit time must be >= its entry.
+            if c.rank() == 3 {
+                c.sim().sleep(100_000).await;
+            }
+            c.barrier().await;
+            c.now()
+        });
+        for t in out.results {
+            assert!(t >= 100_000);
+        }
+    }
+
+    #[test]
+    fn ibarrier_not_done_until_all_enter() {
+        let out = world(1, 4).run(|c| async move {
+            if c.rank() == 0 {
+                // Enter late; others must not see completion before this.
+                c.sim().sleep(50_000).await;
+            }
+            let bar = c.ibarrier().await;
+            let entered_at = c.now();
+            let mut spins = 0u64;
+            while !bar.is_done() {
+                c.charge_cpu(200).await;
+                spins += 1;
+            }
+            (entered_at, c.now(), spins)
+        });
+        for (_, done_at, _) in &out.results {
+            assert!(*done_at >= 50_000, "ibarrier completed early: {done_at}");
+        }
+    }
+
+    #[test]
+    fn bcast_from_each_root() {
+        for root in 0..5 {
+            let out = world(1, 5).run(move |c| async move {
+                let v = if c.rank() == root {
+                    vec![7, 8, 9]
+                } else {
+                    Vec::new()
+                };
+                c.bcast(root, v).await
+            });
+            for r in out.results {
+                assert_eq!(r, vec![7, 8, 9], "root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_collects_all() {
+        let out = world(1, 4).run(|c| async move {
+            let me = c.rank() as u64;
+            c.gather(2, vec![me; (me + 1) as usize]).await
+        });
+        let g = out.results[2].as_ref().unwrap();
+        for (i, v) in g.iter().enumerate() {
+            assert_eq!(v, &vec![i as u64; i + 1]);
+        }
+        assert!(out.results[0].is_none());
+    }
+
+    #[test]
+    fn alltoallv_exchanges() {
+        let out = world(1, 4).run(|c| async move {
+            let me = c.rank() as u64;
+            let n = c.nranks();
+            let bufs: Vec<Vec<u64>> = (0..n).map(|d| vec![me * 10 + d as u64]).collect();
+            c.alltoallv(bufs).await
+        });
+        for (me, r) in out.results.iter().enumerate() {
+            for (src, v) in r.iter().enumerate() {
+                assert_eq!(v, &vec![src as u64 * 10 + me as u64]);
+            }
+        }
+    }
+
+    #[test]
+    fn collectives_compose_in_sequence() {
+        let out = world(1, 3).run(|c| async move {
+            let a = c.allreduce(vec![1], ReduceOp::Sum).await;
+            c.barrier().await;
+            let b = c.allreduce(vec![2], ReduceOp::Sum).await;
+            (a[0], b[0])
+        });
+        for (a, b) in out.results {
+            assert_eq!((a, b), (3, 6));
+        }
+    }
+
+    #[test]
+    fn allreduce_cost_grows_with_ranks() {
+        let time = |nodes: usize| {
+            world(nodes, 8)
+                .run(|c| async move {
+                    c.allreduce(vec![0u64; 64], ReduceOp::Sum).await;
+                })
+                .end_time
+        };
+        let t2 = time(2);
+        let t16 = time(16);
+        assert!(t16 > t2, "allreduce at 16 nodes ({t16}) <= 2 nodes ({t2})");
+    }
+}

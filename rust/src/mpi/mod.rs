@@ -1,0 +1,40 @@
+//! Simulated MPI substrate over [`crate::simnet`].
+//!
+//! Everything the paper's SDDE algorithms touch is implemented here against
+//! the virtual-time executor: two-sided p2p with unexpected-message queues,
+//! eager + rendezvous protocols and synchronous-send semantics
+//! ([`world`]), collectives built from p2p ([`coll`]), and one-sided RMA
+//! windows ([`rma`]).
+//!
+//! One simulated MPI process == one async task holding a [`Comm`] handle.
+//! Blocking MPI calls are `async fn`s; their cost is charged to the rank's
+//! virtual CPU and NIC per the [`crate::simnet::CostModel`].
+
+pub mod coll;
+pub mod rma;
+pub mod wait;
+pub mod world;
+
+pub use coll::{IBarrier, ReduceOp};
+pub use rma::Window;
+pub use wait::WaitAny;
+pub use world::{waitall, Comm, Counters, Msg, Payload, ProbeInfo, Request, RunOutput, World};
+
+/// MPI-style message tag.
+pub type Tag = u32;
+
+/// Wildcard source for receives/probes.
+pub const ANY_SOURCE: usize = usize::MAX;
+/// Wildcard tag for receives/probes.
+pub const ANY_TAG: Tag = u32::MAX;
+
+/// Tags at or above this value are reserved for library internals
+/// (collectives, barriers, RMA control). User code must stay below.
+pub const TAG_INTERNAL_BASE: Tag = 0xF000_0000;
+
+pub(crate) const TAG_ALLREDUCE: Tag = TAG_INTERNAL_BASE;
+pub(crate) const TAG_BARRIER: Tag = TAG_INTERNAL_BASE + 0x0100_0000;
+pub(crate) const TAG_IBARRIER: Tag = TAG_INTERNAL_BASE + 0x0200_0000;
+pub(crate) const TAG_BCAST: Tag = TAG_INTERNAL_BASE + 0x0300_0000;
+pub(crate) const TAG_GATHER: Tag = TAG_INTERNAL_BASE + 0x0400_0000;
+pub(crate) const TAG_ALLTOALL: Tag = TAG_INTERNAL_BASE + 0x0500_0000;

@@ -1,0 +1,1058 @@
+//! The simulated-MPI core: world/rank state, point-to-point messaging with
+//! unexpected-message queues, eager/rendezvous protocols, synchronous-send
+//! completion semantics, probes, and per-tier traffic counters.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context, Poll, Waker};
+
+use super::{Tag, ANY_SOURCE, ANY_TAG, TAG_INTERNAL_BASE};
+use crate::simnet::{CostModel, Sim, SimHandle, Tier, Time, Topology};
+
+// ---------------------------------------------------------------------------
+// Payload / message types
+// ---------------------------------------------------------------------------
+
+/// Message payload: `words` carry the logical data (indices, sizes, or
+/// bit-cast doubles); `bytes` is the *wire* size used for costing, which
+/// lets a payload of `u64` words model MPI_INT (4 B) messages faithfully.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Payload {
+    pub words: Vec<u64>,
+    pub bytes: usize,
+}
+
+impl Payload {
+    pub fn empty() -> Payload {
+        Payload::default()
+    }
+
+    /// MPI_INT-sized payload (4 bytes per element on the wire).
+    pub fn ints(v: &[u64]) -> Payload {
+        Payload {
+            words: v.to_vec(),
+            bytes: 4 * v.len(),
+        }
+    }
+
+    /// 8-byte-per-element payload (MPI_LONG / MPI_DOUBLE).
+    pub fn longs(v: &[u64]) -> Payload {
+        Payload {
+            words: v.to_vec(),
+            bytes: 8 * v.len(),
+        }
+    }
+
+    pub fn doubles(v: &[f64]) -> Payload {
+        Payload {
+            words: v.iter().map(|x| x.to_bits()).collect(),
+            bytes: 8 * v.len(),
+        }
+    }
+
+    pub fn as_doubles(&self) -> Vec<f64> {
+        self.words.iter().map(|&w| f64::from_bits(w)).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+}
+
+/// A received message.
+#[derive(Clone, Debug)]
+pub struct Msg {
+    pub src: usize,
+    pub tag: Tag,
+    pub payload: Payload,
+}
+
+/// Result of a (successful) probe: enough to size the receive buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProbeInfo {
+    pub src: usize,
+    pub tag: Tag,
+    /// Number of payload words.
+    pub count: usize,
+    /// Wire bytes.
+    pub bytes: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct ReqState {
+    done: bool,
+    msg: Option<Msg>,
+    wakers: Vec<Waker>,
+    callbacks: Vec<Box<dyn FnOnce()>>,
+}
+
+/// Non-blocking operation handle (send or receive). Await it to wait for
+/// completion; [`Request::is_done`] is the MPI_Test analog.
+#[derive(Clone)]
+pub struct Request {
+    st: Rc<RefCell<ReqState>>,
+}
+
+impl Request {
+    fn new() -> Request {
+        Request {
+            st: Rc::new(RefCell::new(ReqState::default())),
+        }
+    }
+
+    fn complete(&self, msg: Option<Msg>) {
+        let (wakers, callbacks) = {
+            let mut st = self.st.borrow_mut();
+            st.done = true;
+            st.msg = msg;
+            (
+                std::mem::take(&mut st.wakers),
+                std::mem::take(&mut st.callbacks),
+            )
+        };
+        for w in wakers {
+            w.wake();
+        }
+        for cb in callbacks {
+            cb();
+        }
+    }
+
+    /// MPI_Test: has the operation completed?
+    pub fn is_done(&self) -> bool {
+        self.st.borrow().done
+    }
+
+    /// Register a waker to fire on completion (no-op if already done).
+    pub fn register_waker(&self, waker: &Waker) {
+        let mut st = self.st.borrow_mut();
+        if !st.done {
+            st.wakers.push(waker.clone());
+        }
+    }
+
+    /// Run `cb` when the request completes (immediately if already done).
+    pub fn on_complete(&self, cb: impl FnOnce() + 'static) {
+        let mut st = self.st.borrow_mut();
+        if st.done {
+            drop(st);
+            cb();
+        } else {
+            st.callbacks.push(Box::new(cb));
+        }
+    }
+
+    /// Take the received message (receive requests only, after completion).
+    pub fn take_msg(&self) -> Option<Msg> {
+        self.st.borrow_mut().msg.take()
+    }
+}
+
+impl Future for Request {
+    type Output = Option<Msg>;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Option<Msg>> {
+        let mut st = self.st.borrow_mut();
+        if st.done {
+            Poll::Ready(st.msg.take())
+        } else {
+            st.wakers.push(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+/// Wait for every request to complete (MPI_Waitall).
+pub async fn waitall(reqs: &[Request]) {
+    for r in reqs {
+        r.clone().await;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Counters
+// ---------------------------------------------------------------------------
+
+/// Per-tier traffic counters, split into *user* messages (tags below
+/// [`TAG_INTERNAL_BASE`]) and *internal* ones (collectives/barriers), so the
+/// figure harness can report the paper's red-dot metric (max inter-node
+/// user messages per rank) without counting allreduce internals.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Counters {
+    /// [tier] -> messages (user tags).
+    pub user_msgs: [u64; 4],
+    /// [tier] -> wire bytes (user tags).
+    pub user_bytes: [u64; 4],
+    /// [tier] -> messages (internal tags).
+    pub int_msgs: [u64; 4],
+    /// [tier] -> wire bytes (internal tags).
+    pub int_bytes: [u64; 4],
+    /// Per-rank count of user inter-node sends.
+    pub internode_sent: Vec<u64>,
+    /// Number of allreduce invocations (any rank; counted on rank 0).
+    pub allreduces: u64,
+    /// Number of RMA puts.
+    pub rma_puts: u64,
+}
+
+impl Counters {
+    pub fn max_internode_per_rank(&self) -> u64 {
+        self.internode_sent.iter().copied().max().unwrap_or(0)
+    }
+    pub fn total_user_msgs(&self) -> u64 {
+        self.user_msgs.iter().sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rank / world state
+// ---------------------------------------------------------------------------
+
+/// An arrived-but-unmatched message sitting in the unexpected queue, or the
+/// RTS of a rendezvous message.
+struct InMsg {
+    src: usize,
+    tag: Tag,
+    payload: Payload,
+    /// Rendezvous: payload bytes still need a data transfer after matching.
+    rendezvous: bool,
+    /// Synchronous send waiting for a match ack (the sender's request).
+    sync_req: Option<Request>,
+}
+
+struct RecvSpec {
+    src: usize, // or ANY_SOURCE
+    tag: Tag,   // or ANY_TAG
+    req: Request,
+}
+
+pub(crate) struct RankState {
+    /// NIC busy-until (sender-side injection serialization).
+    nic_free: Time,
+    /// CPU busy-until (matching / software overheads serialize here).
+    cpu_free: Time,
+    unexpected: VecDeque<InMsg>,
+    posted: Vec<RecvSpec>,
+    /// Bumped on every arrival; probe futures watch it.
+    arrival_epoch: u64,
+    arrival_wakers: Vec<Waker>,
+    /// FIFO guard: per-destination last scheduled arrival time.
+    last_arrival_to: HashMap<usize, Time>,
+    /// Per-collective-kind sequence numbers (tag disambiguation).
+    pub(crate) coll_seq: HashMap<Tag, u32>,
+    /// RMA windows (indexed by window id).
+    pub(crate) windows: Vec<super::rma::WinState>,
+}
+
+impl RankState {
+    fn new() -> RankState {
+        RankState {
+            nic_free: 0,
+            cpu_free: 0,
+            unexpected: VecDeque::new(),
+            posted: Vec::new(),
+            arrival_epoch: 0,
+            arrival_wakers: Vec::new(),
+            last_arrival_to: HashMap::new(),
+            coll_seq: HashMap::new(),
+            windows: Vec::new(),
+        }
+    }
+}
+
+pub(crate) struct WorldState {
+    pub(crate) topo: Topology,
+    pub(crate) cost: CostModel,
+    pub(crate) sim: SimHandle,
+    pub(crate) ranks: Vec<RefCell<RankState>>,
+    pub(crate) counters: RefCell<Counters>,
+    /// Shared per-node NIC: transmit-side busy-until (inter-node messages
+    /// from all of a node's ranks serialize here — one HFI per node).
+    pub(crate) node_tx_free: Vec<Cell<Time>>,
+    /// Shared per-node NIC: receive-side busy-until.
+    pub(crate) node_rx_free: Vec<Cell<Time>>,
+}
+
+impl WorldState {
+    /// Compute (inject_end, arrival) for a transfer and book the shared
+    /// resources: the sender's per-rank NIC pipe, the *per-node* shared
+    /// NIC on both sides for inter-node messages (the Quartz HFI — this
+    /// contention is the scaling bottleneck the paper's aggregation
+    /// attacks), the wire, and the per-(src,dst) FIFO guard.
+    pub(crate) fn transfer_times(
+        &self,
+        src: usize,
+        dst: usize,
+        tier: Tier,
+        inj_bytes: usize,
+        wire_bytes: usize,
+    ) -> (Time, Time) {
+        let now = self.sim.now();
+        let inject_end = {
+            let mut r = self.ranks[src].borrow_mut();
+            let mut start = r.nic_free.max(now);
+            if tier == Tier::InterNode {
+                let node = self.topo.node_of(src);
+                start = start.max(self.node_tx_free[node].get());
+            }
+            let end = start + self.cost.inject_time(tier, inj_bytes);
+            r.nic_free = end;
+            if tier == Tier::InterNode {
+                self.node_tx_free[self.topo.node_of(src)].set(end);
+            }
+            end
+        };
+        let mut arrival = inject_end + self.cost.wire_time(tier, wire_bytes);
+        if tier == Tier::InterNode {
+            let node = self.topo.node_of(dst);
+            let rx = &self.node_rx_free[node];
+            arrival = arrival.max(rx.get()) + self.cost.rx_gap;
+            rx.set(arrival);
+        }
+        // FIFO guard: arrivals from src to dst must be non-decreasing.
+        let mut r = self.ranks[src].borrow_mut();
+        let last = r.last_arrival_to.entry(dst).or_insert(0);
+        let a = arrival.max(*last + 1);
+        *last = a;
+        (inject_end, a)
+    }
+}
+
+/// The simulated cluster: builds the executor, spawns one task per rank,
+/// runs to completion, and reports virtual time + traffic counters.
+pub struct World {
+    sim: Sim,
+    state: Rc<WorldState>,
+}
+
+/// Output of [`World::run`].
+pub struct RunOutput<R> {
+    /// Per-rank return values of the rank program.
+    pub results: Vec<R>,
+    /// Virtual time at which the last rank finished.
+    pub end_time: Time,
+    /// Traffic counters accumulated over the run.
+    pub counters: Counters,
+    /// (events, polls) executor statistics.
+    pub exec_stats: (u64, u64),
+}
+
+impl World {
+    pub fn new(topo: Topology, cost: CostModel) -> World {
+        let sim = Sim::new();
+        let n = topo.nranks();
+        let topo2 = topo.nodes;
+        let state = Rc::new(WorldState {
+            topo,
+            cost,
+            sim: sim.handle(),
+            ranks: (0..n).map(|_| RefCell::new(RankState::new())).collect(),
+            counters: RefCell::new(Counters {
+                internode_sent: vec![0; n],
+                ..Counters::default()
+            }),
+            node_tx_free: (0..topo2).map(|_| Cell::new(0)).collect(),
+            node_rx_free: (0..topo2).map(|_| Cell::new(0)).collect(),
+        });
+        World { sim, state }
+    }
+
+    /// Communicator handle for `rank` (used by [`World::run`]'s closure via
+    /// the argument it receives; exposed for custom spawning in tests).
+    pub fn comm(&self, rank: usize) -> Comm {
+        Comm {
+            state: self.state.clone(),
+            rank,
+        }
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.state.topo
+    }
+
+    /// Run `prog(comm)` on every rank to completion; returns per-rank
+    /// results, the virtual end time and traffic counters.
+    pub fn run<R, F, Fut>(self, prog: F) -> RunOutput<R>
+    where
+        R: 'static,
+        F: Fn(Comm) -> Fut,
+        Fut: Future<Output = R> + 'static,
+    {
+        let n = self.state.topo.nranks();
+        let results: Rc<RefCell<Vec<Option<R>>>> =
+            Rc::new(RefCell::new((0..n).map(|_| None).collect()));
+        for rank in 0..n {
+            let comm = self.comm(rank);
+            let fut = prog(comm);
+            let results = results.clone();
+            self.sim.spawn(async move {
+                let r = fut.await;
+                results.borrow_mut()[rank] = Some(r);
+            });
+        }
+        let end_time = self.sim.run();
+        let counters = self.state.counters.borrow().clone();
+        let exec_stats = self.sim.stats();
+        let results = Rc::try_unwrap(results)
+            .ok()
+            .expect("rank results still borrowed")
+            .into_inner()
+            .into_iter()
+            .map(|r| r.expect("rank did not finish"))
+            .collect();
+        RunOutput {
+            results,
+            end_time,
+            counters,
+            exec_stats,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Comm: the per-rank MPI handle
+// ---------------------------------------------------------------------------
+
+/// Per-rank communicator handle — the `MPI_COMM_WORLD` analog passed to
+/// every simulated rank program.
+#[derive(Clone)]
+pub struct Comm {
+    pub(crate) state: Rc<WorldState>,
+    pub(crate) rank: usize,
+}
+
+fn matches(spec_src: usize, spec_tag: Tag, src: usize, tag: Tag) -> bool {
+    (spec_src == ANY_SOURCE || spec_src == src) && (spec_tag == ANY_TAG || spec_tag == tag)
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.state.topo.nranks()
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.state.topo
+    }
+
+    pub fn cost(&self) -> &CostModel {
+        &self.state.cost
+    }
+
+    pub fn now(&self) -> Time {
+        self.state.sim.now()
+    }
+
+    pub fn sim(&self) -> &SimHandle {
+        &self.state.sim
+    }
+
+    /// Charge `cost` ns to this rank's CPU and wait until it is done.
+    /// (Matching, packing, software overheads all serialize here.)
+    pub async fn charge_cpu(&self, cost: Time) {
+        let until = {
+            let mut r = self.state.ranks[self.rank].borrow_mut();
+            let start = r.cpu_free.max(self.state.sim.now());
+            r.cpu_free = start + cost;
+            r.cpu_free
+        };
+        self.state.sim.sleep_until(until).await;
+    }
+
+    // -- sends --------------------------------------------------------------
+
+    /// Non-blocking standard send (eager below the eager limit, rendezvous
+    /// above). The returned request completes per MPI semantics: eager
+    /// sends complete once buffered/injected; rendezvous sends complete
+    /// when the receiver has matched and pulled the data.
+    pub async fn isend(&self, dst: usize, tag: Tag, payload: Payload) -> Request {
+        self.send_impl(dst, tag, payload, false).await
+    }
+
+    /// Non-blocking synchronous send (MPI_Issend): the request completes
+    /// only after the destination has *matched* the message (NBX relies on
+    /// this).
+    pub async fn issend(&self, dst: usize, tag: Tag, payload: Payload) -> Request {
+        self.send_impl(dst, tag, payload, true).await
+    }
+
+    async fn send_impl(&self, dst: usize, tag: Tag, payload: Payload, sync: bool) -> Request {
+        let st = &self.state;
+        assert!(dst < st.topo.nranks(), "send to invalid rank {dst}");
+        let tier = st.topo.tier(self.rank, dst);
+        let bytes = payload.bytes;
+        let rendezvous = st.cost.is_rendezvous(bytes) && tier != Tier::SelfMsg;
+
+        // Software posting overhead on the sender CPU.
+        self.charge_cpu(st.cost.post_overhead).await;
+
+        // Count traffic at injection time.
+        {
+            let mut c = st.counters.borrow_mut();
+            let t = tier as usize;
+            if tag < TAG_INTERNAL_BASE {
+                c.user_msgs[t] += 1;
+                c.user_bytes[t] += bytes as u64;
+                if tier == Tier::InterNode {
+                    c.internode_sent[self.rank] += 1;
+                }
+            } else {
+                c.int_msgs[t] += 1;
+                c.int_bytes[t] += bytes as u64;
+            }
+        }
+
+        // NIC serialization (per-rank pipe + shared per-node NIC) and wire.
+        // Rendezvous injects only the RTS here; the data bytes are charged
+        // when the receiver matches.
+        let xfer_bytes = if rendezvous { 16 } else { bytes };
+        let (inject_end, arrival) =
+            st.transfer_times(self.rank, dst, tier, xfer_bytes, xfer_bytes);
+
+        let req = Request::new();
+        // Eager non-sync sends complete at local injection completion.
+        if !sync && !rendezvous {
+            let req2 = req.clone();
+            st.sim.schedule(inject_end, move || req2.complete(None));
+        }
+
+        // Schedule the arrival at the destination.
+        let state = st.clone();
+        let src = self.rank;
+        let sync_req = if sync || rendezvous {
+            Some(req.clone())
+        } else {
+            None
+        };
+        st.sim.schedule(arrival, move || {
+            deliver(&state, src, dst, tag, payload, rendezvous, sync_req);
+        });
+        req
+    }
+
+    /// Blocking standard send.
+    pub async fn send(&self, dst: usize, tag: Tag, payload: Payload) {
+        let r = self.isend(dst, tag, payload).await;
+        r.await;
+    }
+
+    // -- receives -----------------------------------------------------------
+
+    /// Non-blocking receive. `src`/`tag` accept [`ANY_SOURCE`]/[`ANY_TAG`].
+    pub async fn irecv(&self, src: usize, tag: Tag) -> Request {
+        let st = &self.state;
+        // Scan the unexpected queue (queue-search cost ∝ entries scanned).
+        let scanned = {
+            let r = st.ranks[self.rank].borrow();
+            let mut scanned = r.unexpected.len();
+            for (i, m) in r.unexpected.iter().enumerate() {
+                if matches(src, tag, m.src, m.tag) {
+                    scanned = i + 1;
+                    break;
+                }
+            }
+            scanned
+        };
+        self.charge_cpu(st.cost.match_cost(scanned)).await;
+
+        // Authoritative match *after* the charge: a message may have
+        // arrived while the CPU was busy; matching must observe it, or the
+        // receive would be posted while its message rots in the queue.
+        let found = {
+            let mut r = st.ranks[self.rank].borrow_mut();
+            r.unexpected
+                .iter()
+                .position(|m| matches(src, tag, m.src, m.tag))
+                .map(|idx| r.unexpected.remove(idx).unwrap())
+        };
+        if let Some(m) = found {
+            return self.complete_match(m).await;
+        }
+
+        // Post the receive for a future arrival.
+        let req = Request::new();
+        st.ranks[self.rank].borrow_mut().posted.push(RecvSpec {
+            src,
+            tag,
+            req: req.clone(),
+        });
+        req
+    }
+
+    /// Matched an unexpected message: produce its (already- or about-to-be-)
+    /// completed request, honoring rendezvous data transfer and sync acks.
+    async fn complete_match(&self, m: InMsg) -> Request {
+        let st = &self.state;
+        let now = st.sim.now();
+        let tier = st.topo.tier(m.src, self.rank);
+        let req = Request::new();
+        let msg = Msg {
+            src: m.src,
+            tag: m.tag,
+            payload: m.payload,
+        };
+        if m.rendezvous {
+            // CTS back to the sender, then the data transfer.
+            let cts = st.cost.latency[tier as usize];
+            let data = st.cost.inject_time(tier, msg.payload.bytes)
+                + st.cost.wire_time(tier, msg.payload.bytes);
+            let done_at = now + cts + data;
+            let req2 = req.clone();
+            let sync_req = m.sync_req.clone();
+            st.sim.schedule(done_at, move || {
+                if let Some(s) = &sync_req {
+                    s.complete(None);
+                }
+                req2.complete(Some(msg));
+            });
+        } else {
+            if let Some(s) = &m.sync_req {
+                // Ack travels back one latency.
+                let s = s.clone();
+                st.sim
+                    .schedule(now + st.cost.latency[tier as usize], move || {
+                        s.complete(None)
+                    });
+            }
+            req.complete(Some(msg));
+        }
+        req
+    }
+
+    /// Blocking receive.
+    pub async fn recv(&self, src: usize, tag: Tag) -> Msg {
+        let req = self.irecv(src, tag).await;
+        req.await.expect("recv request produced no message")
+    }
+
+    // -- probes -------------------------------------------------------------
+
+    /// Non-blocking probe: scan the unexpected queue once (charging the
+    /// queue-search cost) and report a matching envelope if present.
+    pub async fn iprobe(&self, src: usize, tag: Tag) -> Option<ProbeInfo> {
+        let st = &self.state;
+        let (info, scanned) = {
+            let r = st.ranks[self.rank].borrow();
+            let mut info = None;
+            let mut scanned = 0usize;
+            for (i, m) in r.unexpected.iter().enumerate() {
+                scanned = i + 1;
+                if matches(src, tag, m.src, m.tag) {
+                    info = Some(ProbeInfo {
+                        src: m.src,
+                        tag: m.tag,
+                        count: m.payload.len(),
+                        bytes: m.payload.bytes,
+                    });
+                    break;
+                }
+            }
+            (info, scanned)
+        };
+        self.charge_cpu(st.cost.match_cost(scanned)).await;
+        info
+    }
+
+    /// Blocking probe: wait until a matching message is available without
+    /// consuming it.
+    pub async fn probe(&self, src: usize, tag: Tag) -> ProbeInfo {
+        loop {
+            // Record the arrival epoch *before* scanning: anything arriving
+            // during the scan's CPU charge bumps it and re-triggers a scan.
+            let epoch = self.state.ranks[self.rank].borrow().arrival_epoch;
+            if let Some(info) = self.iprobe(src, tag).await {
+                return info;
+            }
+            ArrivalWait::at_epoch(self, epoch).await;
+        }
+    }
+
+    /// Dynamic receive à la `MPI_Probe` + `MPI_Recv` of the probed message.
+    pub async fn probe_recv(&self, src: usize, tag: Tag) -> Msg {
+        let info = self.probe(src, tag).await;
+        self.recv(info.src, info.tag).await
+    }
+
+    /// Reserve and return the next sequence number for an internal
+    /// collective tag family (all ranks call collectives in the same
+    /// order, so sequence numbers agree).
+    pub(crate) fn next_seq(&self, family: Tag) -> u32 {
+        let mut r = self.state.ranks[self.rank].borrow_mut();
+        let seq = r.coll_seq.entry(family).or_insert(0);
+        let s = *seq;
+        *seq = seq.wrapping_add(1);
+        s
+    }
+
+    /// Current arrival epoch of this rank (bumps on every delivery).
+    pub fn arrival_epoch(&self) -> u64 {
+        self.state.ranks[self.rank].borrow().arrival_epoch
+    }
+
+    /// Register a waker for the next arrival at this rank.
+    pub fn register_arrival_waker(&self, waker: &Waker) {
+        self.state.ranks[self.rank]
+            .borrow_mut()
+            .arrival_wakers
+            .push(waker.clone());
+    }
+
+    /// Counters snapshot (shared across ranks; callers usually read it from
+    /// [`RunOutput`] instead).
+    pub fn counters(&self) -> Counters {
+        self.state.counters.borrow().clone()
+    }
+
+    pub(crate) fn bump_counter(&self, f: impl FnOnce(&mut Counters)) {
+        f(&mut self.state.counters.borrow_mut());
+    }
+}
+
+/// Arrival delivery: match against posted receives or append to the
+/// unexpected queue; wake probe waiters.
+fn deliver(
+    state: &Rc<WorldState>,
+    src: usize,
+    dst: usize,
+    tag: Tag,
+    payload: Payload,
+    rendezvous: bool,
+    sync_req: Option<Request>,
+) {
+    let mut r = state.ranks[dst].borrow_mut();
+    r.arrival_epoch += 1;
+    let wakers: Vec<Waker> = r.arrival_wakers.drain(..).collect();
+
+    // Match against posted receives, in post order.
+    let pos = r
+        .posted
+        .iter()
+        .position(|p| matches(p.src, p.tag, src, tag));
+    if let Some(i) = pos {
+        let spec = r.posted.remove(i);
+        // Charge the receiver's CPU for the match.
+        let now = state.sim.now();
+        let scanned = i + 1;
+        let mcost = state.cost.match_cost(scanned);
+        r.cpu_free = r.cpu_free.max(now) + mcost;
+        let tier = state.topo.tier(src, dst);
+        let msg = Msg { src, tag, payload };
+        if rendezvous {
+            let cts = state.cost.latency[tier as usize];
+            let data = state.cost.inject_time(tier, msg.payload.bytes)
+                + state.cost.wire_time(tier, msg.payload.bytes);
+            let done_at = now + mcost + cts + data;
+            drop(r);
+            let req = spec.req;
+            state.sim.schedule(done_at, move || {
+                if let Some(s) = &sync_req {
+                    s.complete(None);
+                }
+                req.complete(Some(msg));
+            });
+        } else {
+            if let Some(s) = &sync_req {
+                let s = s.clone();
+                state
+                    .sim
+                    .schedule(now + state.cost.latency[tier as usize], move || {
+                        s.complete(None)
+                    });
+            }
+            drop(r);
+            spec.req.complete(Some(msg));
+        }
+    } else {
+        r.unexpected.push_back(InMsg {
+            src,
+            tag,
+            payload,
+            rendezvous,
+            sync_req,
+        });
+        drop(r);
+    }
+    for w in wakers {
+        w.wake();
+    }
+}
+
+/// Future that completes on the next message arrival at `rank` (used by
+/// blocking probe).
+struct ArrivalWait {
+    state: Rc<WorldState>,
+    rank: usize,
+    epoch: u64,
+}
+
+impl ArrivalWait {
+    /// Completes once the rank's arrival epoch differs from `epoch`
+    /// (i.e. at least one arrival happened after the caller sampled it).
+    fn at_epoch(comm: &Comm, epoch: u64) -> ArrivalWait {
+        ArrivalWait {
+            state: comm.state.clone(),
+            rank: comm.rank,
+            epoch,
+        }
+    }
+}
+
+impl Future for ArrivalWait {
+    type Output = ();
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let mut r = self.state.ranks[self.rank].borrow_mut();
+        if r.arrival_epoch != self.epoch {
+            Poll::Ready(())
+        } else {
+            r.arrival_wakers.push(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::MpiFlavor;
+
+    fn world(nodes: usize, ppn: usize) -> World {
+        World::new(
+            Topology::quartz(nodes, ppn),
+            CostModel::preset(MpiFlavor::Mvapich2),
+        )
+    }
+
+    #[test]
+    fn ping_message() {
+        // ppn=4 → 2 ranks per socket; 0→1 is intra-socket.
+        let out = world(1, 4).run(|c| async move {
+            match c.rank() {
+                0 => {
+                    c.send(1, 7, Payload::ints(&[42])).await;
+                    0
+                }
+                1 => {
+                    let m = c.recv(0, 7).await;
+                    assert_eq!(m.src, 0);
+                    assert_eq!(m.payload.words, vec![42]);
+                    m.payload.words[0]
+                }
+                _ => 0,
+            }
+        });
+        assert_eq!(out.results, vec![0, 42, 0, 0]);
+        assert!(out.end_time > 0);
+        assert_eq!(out.counters.user_msgs[Tier::IntraSocket as usize], 1);
+    }
+
+    #[test]
+    fn wildcard_recv_and_probe() {
+        let out = world(1, 3).run(|c| async move {
+            match c.rank() {
+                0 => {
+                    c.send(2, 5, Payload::ints(&[1, 2, 3])).await;
+                    Vec::new()
+                }
+                1 => {
+                    c.send(2, 5, Payload::ints(&[9])).await;
+                    Vec::new()
+                }
+                _ => {
+                    let mut got = Vec::new();
+                    for _ in 0..2 {
+                        let info = c.probe(ANY_SOURCE, 5).await;
+                        let m = c.recv(info.src, info.tag).await;
+                        assert_eq!(m.payload.len(), info.count);
+                        got.push((m.src, m.payload.words.len()));
+                    }
+                    got.sort_unstable();
+                    got
+                }
+            }
+        });
+        assert_eq!(out.results[2], vec![(0, 3), (1, 1)]);
+    }
+
+    #[test]
+    fn issend_completes_only_after_match() {
+        // Receiver delays before receiving; the sync-send request must not
+        // complete before the receiver's recv call.
+        let out = world(2, 1).run(|c| async move {
+            if c.rank() == 0 {
+                let req = c.issend(1, 3, Payload::ints(&[5])).await;
+                let mut spins = 0u64;
+                while !req.is_done() {
+                    spins += 1;
+                    c.charge_cpu(100).await;
+                }
+                assert!(spins > 10, "sync send completed suspiciously early");
+                c.now()
+            } else {
+                c.sim().sleep(50_000).await;
+                let m = c.recv(0, 3).await;
+                assert_eq!(m.payload.words, vec![5]);
+                c.now()
+            }
+        });
+        // Sender finished after receiver matched (within an ack latency).
+        assert!(out.results[0] >= 50_000);
+    }
+
+    #[test]
+    fn eager_isend_completes_locally() {
+        let out = world(2, 1).run(|c| async move {
+            if c.rank() == 0 {
+                let req = c.isend(1, 3, Payload::ints(&[5])).await;
+                req.await;
+                let t_send_done = c.now();
+                assert!(t_send_done < 50_000, "eager send blocked on receiver");
+                t_send_done
+            } else {
+                c.sim().sleep(50_000).await;
+                c.recv(0, 3).await;
+                c.now()
+            }
+        });
+        assert!(out.results[1] >= 50_000);
+    }
+
+    #[test]
+    fn rendezvous_large_message() {
+        let big = vec![1u64; 10_000]; // 80 KB > eager limit
+        let out = world(2, 1).run(move |c| {
+            let big = big.clone();
+            async move {
+                if c.rank() == 0 {
+                    let req = c.isend(1, 9, Payload::longs(&big)).await;
+                    req.await; // rendezvous send completes only after pull
+                    c.now()
+                } else {
+                    c.sim().sleep(10_000).await;
+                    let m = c.recv(0, 9).await;
+                    assert_eq!(m.payload.words.len(), 10_000);
+                    c.now()
+                }
+            }
+        });
+        // Sender completion awaited the receiver's match.
+        assert!(out.results[0] >= 10_000);
+    }
+
+    #[test]
+    fn fifo_per_pair() {
+        let out = world(1, 2).run(|c| async move {
+            if c.rank() == 0 {
+                for i in 0..20u64 {
+                    c.isend(1, 1, Payload::ints(&[i])).await;
+                }
+                Vec::new()
+            } else {
+                let mut got = Vec::new();
+                for _ in 0..20 {
+                    got.push(c.recv(0, 1).await.payload.words[0]);
+                }
+                got
+            }
+        });
+        assert_eq!(out.results[1], (0..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn iprobe_returns_none_when_empty() {
+        let out = world(1, 1).run(|c| async move { c.iprobe(ANY_SOURCE, ANY_TAG).await });
+        assert!(out.results[0].is_none());
+    }
+
+    #[test]
+    fn self_send() {
+        let out = world(1, 1).run(|c| async move {
+            c.isend(0, 2, Payload::ints(&[11])).await;
+            c.recv(0, 2).await.payload.words[0]
+        });
+        assert_eq!(out.results[0], vec![11][0]);
+    }
+
+    #[test]
+    fn internode_costs_more_than_intranode() {
+        let t_intra = world(1, 2)
+            .run(|c| async move {
+                if c.rank() == 0 {
+                    c.send(1, 1, Payload::ints(&[1])).await;
+                } else {
+                    c.recv(0, 1).await;
+                }
+            })
+            .end_time;
+        let t_inter = world(2, 1)
+            .run(|c| async move {
+                if c.rank() == 0 {
+                    c.send(1, 1, Payload::ints(&[1])).await;
+                } else {
+                    c.recv(0, 1).await;
+                }
+            })
+            .end_time;
+        assert!(t_inter > t_intra, "inter={t_inter} intra={t_intra}");
+    }
+
+    #[test]
+    fn internode_counter_tracks_sender() {
+        let out = world(2, 2).run(|c| async move {
+            if c.rank() == 0 {
+                c.send(2, 1, Payload::ints(&[1])).await;
+                c.send(3, 1, Payload::ints(&[1])).await;
+                c.send(1, 1, Payload::ints(&[1])).await; // intra-node
+            } else if c.rank() == 1 {
+                c.recv(0, 1).await;
+            } else {
+                c.recv(0, 1).await;
+            }
+        });
+        assert_eq!(out.counters.internode_sent[0], 2);
+        assert_eq!(out.counters.max_internode_per_rank(), 2);
+    }
+
+    #[test]
+    fn deterministic_end_time() {
+        let run = || {
+            world(2, 4).run(|c| async move {
+                let n = c.nranks();
+                let me = c.rank();
+                // everyone sends to everyone
+                let mut reqs = Vec::new();
+                for d in 0..n {
+                    if d != me {
+                        reqs.push(c.isend(d, 1, Payload::ints(&[me as u64])).await);
+                    }
+                }
+                let mut sum = 0u64;
+                for _ in 0..n - 1 {
+                    sum += c.probe_recv(ANY_SOURCE, 1).await.payload.words[0];
+                }
+                waitall(&reqs).await;
+                sum
+            })
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.end_time, b.end_time);
+        assert_eq!(a.results, b.results);
+        let expect: u64 = (0..8).sum();
+        for (me, s) in a.results.iter().enumerate() {
+            assert_eq!(*s, expect - me as u64);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! **Extension** (paper §VI future work): locality-aware **RMA** SDDE.
+//!
+//! > "While this paper did not explore locality-aware aggregation for the
+//! > RMA method, similar concatenation strategies could be used within
+//! > MPI_Puts to reduce the synchronization overheads as well as
+//! > communication costs."
+//!
+//! Constant-size only (like Algorithm 3). Every rank aggregates its
+//! messages per destination region and `MPI_Put`s one buffer into a
+//! *fixed slot* (indexed by origin rank) of the corresponding process's
+//! window — so the put offsets stay statically known even though the
+//! aggregated payload length varies (the slot is sized for the worst case,
+//! region_size records). After one fence, the corresponding processes
+//! unpack the records and redistribute within their region with the
+//! personalized protocol, exactly like Algorithms 4/5's phase 2.
+//!
+//! Slot layout per origin: `[nrec, (final_dest, vals[sendcount])…]`,
+//! `nrec == SENTINEL` meaning "no buffer from this origin".
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::mpix::{CrsArgs, CrsResult, MpixComm, MpixInfo};
+
+use super::locality::{intra_personalized_crs, push_record};
+use super::{alloc_tags, rma::SENTINEL};
+
+pub async fn alltoall_crs(mx: &MpixComm, info: &MpixInfo, args: &CrsArgs) -> CrsResult {
+    let c = &mx.comm;
+    let n = c.nranks();
+    let me = c.rank();
+    let tags = alloc_tags(c);
+    let sc = args.sendcount;
+
+    // Worst-case records per aggregated buffer: one per rank of the
+    // largest region.
+    let max_region = (0..mx.nregions())
+        .map(|r| mx.region_ranks(r).len())
+        .max()
+        .unwrap_or(1);
+    let slot = 1 + max_region * (1 + sc);
+    let words = n * slot;
+
+    // ---- Phase 0: aggregate by destination region (records carry only
+    // final_dest + values; the origin is implied by the slot index). -----
+    let mut bufs: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+    for i in 0..args.dest.len() {
+        let d = args.dest[i];
+        let b = bufs.entry(mx.region(d)).or_default();
+        b.push(d as u64);
+        b.extend_from_slice(args.vals(i));
+    }
+    c.charge_cpu(args.sendvals.len() as u64 / 4).await;
+
+    // ---- Phase 1: one-sided exchange of aggregated buffers. -------------
+    let win = {
+        let cached = mx.cached_window.borrow().clone();
+        match cached {
+            Some(w) if info.reuse_rma_window && w.words() >= words => w,
+            _ => {
+                let w = Rc::new(c.win_allocate(words).await);
+                *mx.cached_window.borrow_mut() = Some(w.clone());
+                w
+            }
+        }
+    };
+    win.fill_local(SENTINEL);
+    c.charge_cpu((words as u64) / 8).await;
+    win.fence().await;
+    for (&region, buf) in &bufs {
+        let corr = mx.corresponding_rank(region);
+        let nrec = (buf.len() / (1 + sc)) as u64;
+        let mut payload = Vec::with_capacity(1 + buf.len());
+        payload.push(nrec);
+        payload.extend_from_slice(buf);
+        win.put(corr, me * slot, &payload, 4).await;
+    }
+    win.fence().await;
+
+    // ---- Unpack: records for me → results; others → phase-2 buffers. ----
+    let data = win.read_local(0, words);
+    c.charge_cpu(n as u64).await;
+    let mut pairs: Vec<(usize, Vec<u64>)> = Vec::new();
+    let mut local_bufs: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+    for origin in 0..n {
+        let base = origin * slot;
+        let nrec = data[base];
+        if nrec == SENTINEL {
+            continue;
+        }
+        let mut i = base + 1;
+        for _ in 0..nrec {
+            let final_dest = data[i] as usize;
+            let vals = &data[i + 1..i + 1 + sc];
+            if final_dest == me {
+                pairs.push((origin, vals.to_vec()));
+            } else {
+                push_record(local_bufs.entry(final_dest).or_default(), final_dest, origin, vals);
+            }
+            i += 1 + sc;
+        }
+    }
+
+    // ---- Phase 2: intra-region redistribution (personalized). -----------
+    intra_personalized_crs(mx, local_bufs, tags, &mut pairs).await;
+
+    pairs.sort_by_key(|&(s, _)| s);
+    let mut out = CrsResult::default();
+    for (s, v) in pairs {
+        out.src.push(s);
+        out.recvvals.extend_from_slice(&v);
+    }
+    out
+}

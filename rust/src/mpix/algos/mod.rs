@@ -1,0 +1,59 @@
+//! SDDE algorithm implementations (paper §IV).
+//!
+//! The constant-size (`MPIX_Alltoall_crs`) entry points for the
+//! personalized, non-blocking and locality-aware algorithms are thin
+//! wrappers over the variable-size implementations (a constant-size SDDE
+//! *is* a variable SDDE whose counts all equal `sendcount`; only their wire
+//! sizes differ, and those are identical too). RMA is constant-size only.
+
+pub mod locality;
+pub mod locality_rma;
+pub mod nonblocking;
+pub mod personalized;
+pub mod rma;
+
+use crate::mpi::{Comm, Tag};
+use crate::mpix::{CrsArgs, CrsResult, CrsvArgs, CrsvResult};
+
+/// User-tag family reserved for SDDE traffic (below `TAG_INTERNAL_BASE`, so
+/// SDDE messages count as *user* messages in the figure counters — they are
+/// the paper's red-dot metric).
+const TAG_SDDE: Tag = 0x1000;
+
+/// Per-call tag pair; every collective SDDE invocation gets fresh tags so
+/// back-to-back exchanges cannot cross-talk.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SddeTags {
+    /// Direct / inter-region data messages.
+    pub data: Tag,
+    /// Intra-region redistribution messages (locality-aware phase 2).
+    pub intra: Tag,
+}
+
+pub(crate) fn alloc_tags(comm: &Comm) -> SddeTags {
+    let seq = comm.next_seq(TAG_SDDE);
+    let base = TAG_SDDE + (seq % 0x800) * 4;
+    SddeTags {
+        data: base,
+        intra: base + 1,
+    }
+}
+
+/// View a constant-size SDDE as a variable one (counts all `sendcount`).
+pub(crate) fn crs_as_crsv(args: &CrsArgs) -> CrsvArgs {
+    CrsvArgs {
+        dest: args.dest.clone(),
+        sendcounts: vec![args.sendcount; args.dest.len()],
+        sendvals: args.sendvals.clone(),
+    }
+}
+
+/// Collapse a variable result whose counts are uniformly `sendcount` back
+/// into a constant-size result.
+pub(crate) fn crsv_as_crs(out: CrsvResult, sendcount: usize) -> CrsResult {
+    debug_assert!(out.recvcounts.iter().all(|&c| c == sendcount));
+    CrsResult {
+        src: out.src,
+        recvvals: out.recvvals,
+    }
+}

@@ -1,0 +1,63 @@
+//! Algorithm 2 — the **non-blocking** SDDE (Hoefler/Siebert/Lumsdaine NBX).
+//!
+//! Synchronous sends to every destination; dynamically receive whatever
+//! arrives (iprobe) while testing the sends; once all local sends have been
+//! matched, enter a non-blocking barrier and keep receiving until the
+//! barrier completes — at which point every rank's sends have been received
+//! globally. Avoids the allreduce entirely (paper §IV-B).
+
+use crate::mpi::wait::all_done_signal;
+use crate::mpi::{Payload, WaitAny, ANY_SOURCE};
+use crate::mpix::{CrsArgs, CrsResult, CrsvArgs, CrsvResult, MpixComm, MpixInfo};
+
+use super::{alloc_tags, crs_as_crsv, crsv_as_crs};
+
+pub async fn alltoallv_crs(mx: &MpixComm, _info: &MpixInfo, args: &CrsvArgs) -> CrsvResult {
+    let c = &mx.comm;
+    let tags = alloc_tags(c);
+
+    // Synchronous sends: complete only when the destination matches.
+    let mut reqs = Vec::with_capacity(args.dest.len());
+    for i in 0..args.dest.len() {
+        reqs.push(
+            c.issend(args.dest[i], tags.data, Payload::ints(args.vals(i)))
+                .await,
+        );
+    }
+
+    let sends_done = all_done_signal(&reqs);
+    let mut pairs = Vec::new();
+    let mut barrier: Option<crate::mpi::IBarrier> = None;
+    loop {
+        // Dynamically receive anything available (the epoch sample keeps
+        // arrivals racing the probe from being lost by the wait below).
+        let epoch = c.arrival_epoch();
+        if let Some(pi) = c.iprobe(ANY_SOURCE, tags.data).await {
+            let m = c.recv(pi.src, pi.tag).await;
+            pairs.push((m.src, m.payload.words));
+            continue;
+        }
+        match &barrier {
+            Some(b) => {
+                if b.is_done() {
+                    break;
+                }
+                WaitAny::new(c, &[b.signal()]).with_epoch(epoch).await;
+            }
+            None => {
+                if sends_done.is_set() {
+                    barrier = Some(c.ibarrier().await);
+                } else {
+                    WaitAny::new(c, &[&sends_done]).with_epoch(epoch).await;
+                }
+            }
+        }
+    }
+    CrsvResult::from_pairs(pairs)
+}
+
+pub async fn alltoall_crs(mx: &MpixComm, info: &MpixInfo, args: &CrsArgs) -> CrsResult {
+    let v = crs_as_crsv(args);
+    let out = alltoallv_crs(mx, info, &v).await;
+    crsv_as_crs(out, args.sendcount)
+}

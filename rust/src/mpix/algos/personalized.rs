@@ -1,0 +1,51 @@
+//! Algorithm 1 — the **personalized** SDDE.
+//!
+//! 1. Build a `sizes` vector with one slot per rank, marking each
+//!    destination; `MPI_Allreduce(SUM)` gives every rank the number of
+//!    messages it will receive.
+//! 2. Post a non-blocking send per destination.
+//! 3. Dynamically receive exactly `sizes[rank]` messages via probe + recv.
+//!
+//! The allreduce overhead grows with the process count, but lets all
+//! receive structures be counted up front (paper §IV-A).
+
+use crate::mpi::{waitall, Payload, ReduceOp, ANY_SOURCE};
+use crate::mpix::{CrsArgs, CrsResult, CrsvArgs, CrsvResult, MpixComm, MpixInfo};
+
+use super::{alloc_tags, crs_as_crsv, crsv_as_crs};
+
+pub async fn alltoallv_crs(mx: &MpixComm, info: &MpixInfo, args: &CrsvArgs) -> CrsvResult {
+    let c = &mx.comm;
+    let tags = alloc_tags(c);
+    let n = c.nranks();
+
+    // Post all sends up front (non-blocking standard sends).
+    let mut reqs = Vec::with_capacity(args.dest.len());
+    let mut msg_count = vec![0u64; n];
+    for i in 0..args.dest.len() {
+        let d = args.dest[i];
+        msg_count[d] = 1;
+        reqs.push(c.isend(d, tags.data, Payload::ints(args.vals(i))).await);
+    }
+
+    // How many messages will I receive? (allreduce unless the caller knows)
+    let n_recv = match info.known_recv_nnz {
+        Some(k) => k,
+        None => c.allreduce(msg_count, ReduceOp::Sum).await[c.rank()] as usize,
+    };
+
+    // Dynamically receive them.
+    let mut pairs = Vec::with_capacity(n_recv);
+    for _ in 0..n_recv {
+        let m = c.probe_recv(ANY_SOURCE, tags.data).await;
+        pairs.push((m.src, m.payload.words));
+    }
+    waitall(&reqs).await;
+    CrsvResult::from_pairs(pairs)
+}
+
+pub async fn alltoall_crs(mx: &MpixComm, info: &MpixInfo, args: &CrsArgs) -> CrsResult {
+    let v = crs_as_crsv(args);
+    let out = alltoallv_crs(mx, info, &v).await;
+    crsv_as_crs(out, args.sendcount)
+}

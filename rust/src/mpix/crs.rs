@@ -1,0 +1,252 @@
+//! Argument/result structs for the two SDDE APIs — the rust rendering of
+//! the paper's Table I. `dest`/`sendcounts`/`sdispls`/`sendvals` become
+//! `CrsArgs`/`CrsvArgs`; the output pointers become owned result structs
+//! (`src`, `recvcounts`, `rdispls`, `recvvals`).
+
+use anyhow::{ensure, Result};
+
+/// Send side of `MPIX_Alltoall_crs` (constant size): `sendcount` values go
+/// to each destination; `sendvals[i*sendcount..(i+1)*sendcount]` belongs to
+/// `dest[i]`.
+#[derive(Clone, Debug, Default)]
+pub struct CrsArgs {
+    pub dest: Vec<usize>,
+    pub sendcount: usize,
+    pub sendvals: Vec<u64>,
+}
+
+impl CrsArgs {
+    /// The paper's headline use: one integer (a future message size) per
+    /// destination.
+    pub fn sizes(dest_sizes: &[(usize, u64)]) -> CrsArgs {
+        CrsArgs {
+            dest: dest_sizes.iter().map(|&(d, _)| d).collect(),
+            sendcount: 1,
+            sendvals: dest_sizes.iter().map(|&(_, s)| s).collect(),
+        }
+    }
+
+    pub fn send_nnz(&self) -> usize {
+        self.dest.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.sendcount > 0, "sendcount must be positive");
+        ensure!(
+            self.sendvals.len() == self.dest.len() * self.sendcount,
+            "sendvals length {} != send_nnz {} x sendcount {}",
+            self.sendvals.len(),
+            self.dest.len(),
+            self.sendcount
+        );
+        let mut seen = std::collections::HashSet::new();
+        for &d in &self.dest {
+            ensure!(seen.insert(d), "duplicate destination {d}");
+        }
+        Ok(())
+    }
+
+    /// Values for destination index `i`.
+    pub fn vals(&self, i: usize) -> &[u64] {
+        &self.sendvals[i * self.sendcount..(i + 1) * self.sendcount]
+    }
+}
+
+/// Receive side of `MPIX_Alltoall_crs`: `recvvals[i*sendcount..]` came from
+/// `src[i]`. Canonical order: ascending `src`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CrsResult {
+    pub src: Vec<usize>,
+    pub recvvals: Vec<u64>,
+}
+
+impl CrsResult {
+    pub fn recv_nnz(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Sort by source rank (stable canonical form for comparisons).
+    pub fn canonicalize(&mut self, sendcount: usize) {
+        let mut idx: Vec<usize> = (0..self.src.len()).collect();
+        idx.sort_by_key(|&i| self.src[i]);
+        let src = idx.iter().map(|&i| self.src[i]).collect();
+        let mut vals = Vec::with_capacity(self.recvvals.len());
+        for &i in &idx {
+            vals.extend_from_slice(&self.recvvals[i * sendcount..(i + 1) * sendcount]);
+        }
+        self.src = src;
+        self.recvvals = vals;
+    }
+}
+
+/// Send side of `MPIX_Alltoallv_crs` (variable size): `sendcounts[i]`
+/// values go to `dest[i]`; `sendvals` is the concatenation (displacements
+/// are implicit — prefix sums of `sendcounts`).
+#[derive(Clone, Debug, Default)]
+pub struct CrsvArgs {
+    pub dest: Vec<usize>,
+    pub sendcounts: Vec<usize>,
+    pub sendvals: Vec<u64>,
+}
+
+impl CrsvArgs {
+    pub fn send_nnz(&self) -> usize {
+        self.dest.len()
+    }
+
+    pub fn send_size(&self) -> usize {
+        self.sendvals.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.dest.len() == self.sendcounts.len(),
+            "dest/sendcounts length mismatch"
+        );
+        let total: usize = self.sendcounts.iter().sum();
+        ensure!(
+            total == self.sendvals.len(),
+            "sendvals length {} != sum(sendcounts) {}",
+            self.sendvals.len(),
+            total
+        );
+        ensure!(
+            self.sendcounts.iter().all(|&c| c > 0),
+            "zero-sized message (omit the destination instead)"
+        );
+        let mut seen = std::collections::HashSet::new();
+        for &d in &self.dest {
+            ensure!(seen.insert(d), "duplicate destination {d}");
+        }
+        Ok(())
+    }
+
+    /// Values for destination index `i`.
+    pub fn vals(&self, i: usize) -> &[u64] {
+        let start: usize = self.sendcounts[..i].iter().sum();
+        &self.sendvals[start..start + self.sendcounts[i]]
+    }
+}
+
+/// Receive side of `MPIX_Alltoallv_crs`. Canonical order: ascending `src`;
+/// `rdispls` are the prefix sums of `recvcounts`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CrsvResult {
+    pub src: Vec<usize>,
+    pub recvcounts: Vec<usize>,
+    pub rdispls: Vec<usize>,
+    pub recvvals: Vec<u64>,
+}
+
+impl CrsvResult {
+    pub fn recv_nnz(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn recv_size(&self) -> usize {
+        self.recvvals.len()
+    }
+
+    /// Values received from `src[i]`.
+    pub fn vals(&self, i: usize) -> &[u64] {
+        &self.recvvals[self.rdispls[i]..self.rdispls[i] + self.recvcounts[i]]
+    }
+
+    /// Build from per-source buffers (helper for the algorithm impls).
+    pub fn from_pairs(mut pairs: Vec<(usize, Vec<u64>)>) -> CrsvResult {
+        pairs.sort_by_key(|&(s, _)| s);
+        let mut out = CrsvResult::default();
+        for (s, v) in pairs {
+            out.src.push(s);
+            out.recvcounts.push(v.len());
+            out.rdispls.push(out.recvvals.len());
+            out.recvvals.extend_from_slice(&v);
+        }
+        out
+    }
+
+    /// Sort by source rank (stable canonical form for comparisons).
+    pub fn canonicalize(&mut self) {
+        let mut idx: Vec<usize> = (0..self.src.len()).collect();
+        idx.sort_by_key(|&i| self.src[i]);
+        let mut out = CrsvResult::default();
+        for &i in &idx {
+            out.src.push(self.src[i]);
+            out.recvcounts.push(self.recvcounts[i]);
+            out.rdispls.push(out.recvvals.len());
+            out.recvvals
+                .extend_from_slice(&self.recvvals[self.rdispls[i]..self.rdispls[i] + self.recvcounts[i]]);
+        }
+        *self = out;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crs_args_validate() {
+        assert!(CrsArgs {
+            dest: vec![1, 2],
+            sendcount: 2,
+            sendvals: vec![1, 2, 3, 4],
+        }
+        .validate()
+        .is_ok());
+        assert!(CrsArgs {
+            dest: vec![1, 1],
+            sendcount: 1,
+            sendvals: vec![1, 2],
+        }
+        .validate()
+        .is_err());
+        assert!(CrsArgs {
+            dest: vec![1],
+            sendcount: 2,
+            sendvals: vec![1],
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn crsv_args_validate_and_vals() {
+        let a = CrsvArgs {
+            dest: vec![3, 5],
+            sendcounts: vec![2, 3],
+            sendvals: vec![10, 11, 20, 21, 22],
+        };
+        a.validate().unwrap();
+        assert_eq!(a.vals(0), &[10, 11]);
+        assert_eq!(a.vals(1), &[20, 21, 22]);
+        assert!(CrsvArgs {
+            dest: vec![3],
+            sendcounts: vec![0],
+            sendvals: vec![],
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn crs_result_canonicalize() {
+        let mut r = CrsResult {
+            src: vec![5, 2, 9],
+            recvvals: vec![50, 51, 20, 21, 90, 91],
+        };
+        r.canonicalize(2);
+        assert_eq!(r.src, vec![2, 5, 9]);
+        assert_eq!(r.recvvals, vec![20, 21, 50, 51, 90, 91]);
+    }
+
+    #[test]
+    fn crsv_result_from_pairs_and_vals() {
+        let r = CrsvResult::from_pairs(vec![(7, vec![70]), (1, vec![10, 11])]);
+        assert_eq!(r.src, vec![1, 7]);
+        assert_eq!(r.recvcounts, vec![2, 1]);
+        assert_eq!(r.rdispls, vec![0, 2]);
+        assert_eq!(r.vals(0), &[10, 11]);
+        assert_eq!(r.vals(1), &[70]);
+    }
+}

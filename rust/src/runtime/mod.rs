@@ -1,0 +1,261 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them from the
+//! rust request path. Python never runs at request time — the interchange
+//! format is HLO *text* (see /opt/xla-example/README.md: serialized
+//! HloModuleProto from jax ≥ 0.5 is rejected by xla_extension 0.5.1).
+//!
+//! The artifact directory contains a `manifest.txt` with one line per
+//! artifact: `spmv <rows_pad> <width> <xlen> <file>` or
+//! `dot <n> <file>`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::solver::LocalSpmv;
+use crate::sparse::BlockEll;
+
+/// A loaded artifact set: PJRT client + compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    spmv: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
+    dot: HashMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+/// Manifest entry describing one artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ManifestEntry {
+    Spmv {
+        rows_pad: usize,
+        width: usize,
+        xlen: usize,
+        file: String,
+    },
+    Dot {
+        n: usize,
+        file: String,
+    },
+}
+
+/// Parse `manifest.txt` (one artifact per line, `#` comments).
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = t.split_whitespace().collect();
+        match f[0] {
+            "spmv" if f.len() == 5 => out.push(ManifestEntry::Spmv {
+                rows_pad: f[1].parse().context("rows_pad")?,
+                width: f[2].parse().context("width")?,
+                xlen: f[3].parse().context("xlen")?,
+                file: f[4].to_string(),
+            }),
+            "dot" if f.len() == 3 => out.push(ManifestEntry::Dot {
+                n: f[1].parse().context("n")?,
+                file: f[2].to_string(),
+            }),
+            _ => bail!("manifest line {}: unrecognized entry: {t}", lineno + 1),
+        }
+    }
+    Ok(out)
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.txt` onto the PJRT
+    /// CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
+        let mut rt = Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            spmv: HashMap::new(),
+            dot: HashMap::new(),
+        };
+        for e in parse_manifest(&text)? {
+            match e {
+                ManifestEntry::Spmv {
+                    rows_pad,
+                    width,
+                    xlen,
+                    file,
+                } => {
+                    let exe = rt.compile(&file)?;
+                    rt.spmv.insert((rows_pad, width, xlen), exe);
+                }
+                ManifestEntry::Dot { n, file } => {
+                    let exe = rt.compile(&file)?;
+                    rt.dot.insert(n, exe);
+                }
+            }
+        }
+        Ok(rt)
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))
+    }
+
+    /// Available SpMV shapes `(rows_pad, width, xlen)`.
+    pub fn spmv_shapes(&self) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self.spmv.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Find the smallest SpMV artifact that fits `(rows, width, xlen)`.
+    pub fn find_spmv(&self, rows: usize, width: usize, xlen: usize) -> Option<(usize, usize, usize)> {
+        self.spmv_shapes()
+            .into_iter()
+            .find(|&(r, w, x)| r >= rows && w >= width && x >= xlen)
+    }
+
+    /// Execute the SpMV artifact for shape key `shape`:
+    /// `y[i] = Σ_j vals[i,j] · x[cols[i,j]]`.
+    pub fn run_spmv(
+        &self,
+        shape: (usize, usize, usize),
+        vals: &[f32],
+        cols: &[i32],
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (rows_pad, width, xlen) = shape;
+        let exe = self
+            .spmv
+            .get(&shape)
+            .with_context(|| format!("no spmv artifact for shape {shape:?}"))?;
+        anyhow::ensure!(vals.len() == rows_pad * width, "vals shape mismatch");
+        anyhow::ensure!(cols.len() == rows_pad * width, "cols shape mismatch");
+        anyhow::ensure!(x.len() == xlen, "x length mismatch");
+        let lv = xla::Literal::vec1(vals).reshape(&[rows_pad as i64, width as i64])?;
+        let lc = xla::Literal::vec1(cols).reshape(&[rows_pad as i64, width as i64])?;
+        let lx = xla::Literal::vec1(x);
+        let result = exe.execute::<xla::Literal>(&[lv, lc, lx])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute the dot artifact: `Σ a[i]·b[i]` for vectors of length `n`.
+    pub fn run_dot(&self, n: usize, a: &[f32], b: &[f32]) -> Result<f32> {
+        let exe = self
+            .dot
+            .get(&n)
+            .with_context(|| format!("no dot artifact for n={n}"))?;
+        anyhow::ensure!(a.len() == n && b.len() == n, "dot length mismatch");
+        let la = xla::Literal::vec1(a);
+        let lb = xla::Literal::vec1(b);
+        let result = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        Ok(v[0])
+    }
+}
+
+/// [`LocalSpmv`] backed by an XLA artifact: the E2E solver plugs this into
+/// [`crate::solver::DistMatrix::spmv_with`] so every local SpMV runs the
+/// AOT-compiled JAX/Pallas kernel.
+pub struct XlaLocal<'a> {
+    pub rt: &'a Runtime,
+    pub shape: (usize, usize, usize),
+    pub ell: BlockEll,
+    /// Pre-padded scratch sizes.
+    vals: Vec<f32>,
+    cols: Vec<i32>,
+}
+
+impl<'a> XlaLocal<'a> {
+    /// Pad the local Block-ELL matrix into the artifact's static shape.
+    pub fn new(rt: &'a Runtime, ell: BlockEll) -> Result<XlaLocal<'a>> {
+        let need_x = ell.ncols;
+        let shape = rt
+            .find_spmv(ell.rows_pad, ell.width, need_x)
+            .with_context(|| {
+                format!(
+                    "no spmv artifact fits rows_pad={} width={} xlen={} (have {:?})",
+                    ell.rows_pad,
+                    ell.width,
+                    need_x,
+                    rt.spmv_shapes()
+                )
+            })?;
+        let (rp, w, _) = shape;
+        let mut vals = vec![0.0f32; rp * w];
+        let mut cols = vec![0i32; rp * w];
+        for r in 0..ell.rows_pad {
+            for j in 0..ell.width {
+                vals[r * w + j] = ell.vals[r * ell.width + j];
+                cols[r * w + j] = ell.cols[r * ell.width + j];
+            }
+        }
+        Ok(XlaLocal {
+            rt,
+            shape,
+            ell,
+            vals,
+            cols,
+        })
+    }
+}
+
+impl LocalSpmv for XlaLocal<'_> {
+    fn apply(&self, x_ext: &[f64]) -> Vec<f64> {
+        let (_, _, xlen) = self.shape;
+        let mut x = vec![0.0f32; xlen];
+        for (i, &v) in x_ext.iter().enumerate() {
+            x[i] = v as f32;
+        }
+        let y = self
+            .rt
+            .run_spmv(self.shape, &self.vals, &self.cols, &x)
+            .expect("artifact execution failed");
+        y[..self.ell.nrows].iter().map(|&v| v as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = parse_manifest(
+            "# comment\n\
+             spmv 1024 8 2048 spmv_1024x8_x2048.hlo.txt\n\
+             dot 1024 dot_1024.hlo.txt\n\
+             \n",
+        )
+        .unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(
+            m[0],
+            ManifestEntry::Spmv {
+                rows_pad: 1024,
+                width: 8,
+                xlen: 2048,
+                file: "spmv_1024x8_x2048.hlo.txt".into()
+            }
+        );
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("frobnicate 1 2\n").is_err());
+        assert!(parse_manifest("spmv 1 2\n").is_err());
+        assert!(parse_manifest("dot x file\n").is_err());
+    }
+}

@@ -1,0 +1,447 @@
+//! Deterministic single-threaded async executor with a virtual clock.
+//!
+//! Simulated ranks are ordinary `async fn`s spawned as tasks. Time only
+//! advances when every runnable task has yielded: the executor then pops the
+//! earliest timer event, sets the virtual clock, and runs the event's
+//! callback (which typically mutates shared state — e.g. delivers a message
+//! into a rank's unexpected queue — and wakes a task).
+//!
+//! Determinism: the ready queue is FIFO, the timer heap breaks time ties by
+//! insertion sequence number, and everything runs on one OS thread, so a
+//! given program + seed always produces the same interleaving and the same
+//! virtual end time.
+
+use std::cell::{Cell, RefCell};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::{Rc, Weak};
+use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
+
+/// Virtual time in nanoseconds since simulation start.
+pub type Time = u64;
+
+type BoxFut = Pin<Box<dyn Future<Output = ()> + 'static>>;
+type EventCb = Box<dyn FnOnce() + 'static>;
+
+/// Timer payload: waking a task directly (the overwhelmingly common case —
+/// every `Sleep`) avoids a callback Box allocation per event.
+enum TimerAction {
+    Wake(Waker),
+    Call(EventCb),
+}
+
+/// Owner handle: create tasks, then [`Sim::run`] to completion.
+pub struct Sim {
+    inner: Rc<SimInner>,
+}
+
+/// Cheap clonable handle used by futures and event callbacks.
+#[derive(Clone)]
+pub struct SimHandle {
+    inner: Weak<SimInner>,
+}
+
+#[derive(Default)]
+struct SimInner {
+    now: Cell<Time>,
+    seq: Cell<u64>,
+    ready: RefCell<VecDeque<usize>>,
+    queued: RefCell<Vec<bool>>,
+    tasks: RefCell<Vec<Option<BoxFut>>>,
+    /// Lazily-created cached waker per task (§Perf: one Rc per task, not
+    /// one per poll).
+    wakers: RefCell<Vec<Option<Waker>>>,
+    live_tasks: Cell<usize>,
+    /// Timer heap: Reverse((time, seq, action-slot)).
+    timers: RefCell<BinaryHeap<Reverse<(Time, u64, usize)>>>,
+    callbacks: RefCell<Vec<Option<TimerAction>>>,
+    free_cb_slots: RefCell<Vec<usize>>,
+    events_run: Cell<u64>,
+    polls: Cell<u64>,
+}
+
+// ---------------------------------------------------------------------------
+// Waker plumbing: a Waker whose data pointer is an Rc<WakeSlot>. Safe for a
+// single-threaded executor (wakers never cross threads here).
+// ---------------------------------------------------------------------------
+
+struct WakeSlot {
+    exec: Weak<SimInner>,
+    task: usize,
+}
+
+impl WakeSlot {
+    fn wake(&self) {
+        if let Some(exec) = self.exec.upgrade() {
+            exec.enqueue(self.task);
+        }
+    }
+}
+
+const VTABLE: RawWakerVTable = RawWakerVTable::new(wk_clone, wk_wake, wk_wake_by_ref, wk_drop);
+
+unsafe fn wk_clone(p: *const ()) -> RawWaker {
+    Rc::increment_strong_count(p as *const WakeSlot);
+    RawWaker::new(p, &VTABLE)
+}
+unsafe fn wk_wake(p: *const ()) {
+    let slot = Rc::from_raw(p as *const WakeSlot);
+    slot.wake();
+}
+unsafe fn wk_wake_by_ref(p: *const ()) {
+    let slot = &*(p as *const WakeSlot);
+    slot.wake();
+}
+unsafe fn wk_drop(p: *const ()) {
+    drop(Rc::from_raw(p as *const WakeSlot));
+}
+
+fn make_waker(exec: &Rc<SimInner>, task: usize) -> Waker {
+    let slot = Rc::new(WakeSlot {
+        exec: Rc::downgrade(exec),
+        task,
+    });
+    let raw = RawWaker::new(Rc::into_raw(slot) as *const (), &VTABLE);
+    // SAFETY: the vtable upholds RawWaker's contract; single-threaded use.
+    unsafe { Waker::from_raw(raw) }
+}
+
+impl SimInner {
+    fn enqueue(&self, task: usize) {
+        let mut queued = self.queued.borrow_mut();
+        if task < queued.len() && !queued[task] {
+            queued[task] = true;
+            self.ready.borrow_mut().push_back(task);
+        }
+    }
+
+    fn schedule_action(&self, at: Time, action: TimerAction) {
+        debug_assert!(at >= self.now.get(), "scheduling into the past");
+        let slot = match self.free_cb_slots.borrow_mut().pop() {
+            Some(s) => {
+                self.callbacks.borrow_mut()[s] = Some(action);
+                s
+            }
+            None => {
+                let mut cbs = self.callbacks.borrow_mut();
+                cbs.push(Some(action));
+                cbs.len() - 1
+            }
+        };
+        let seq = self.seq.get();
+        self.seq.set(seq + 1);
+        self.timers.borrow_mut().push(Reverse((at, seq, slot)));
+    }
+
+    fn schedule(&self, at: Time, cb: EventCb) {
+        self.schedule_action(at, TimerAction::Call(cb));
+    }
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    pub fn new() -> Sim {
+        Sim {
+            inner: Rc::new(SimInner::default()),
+        }
+    }
+
+    pub fn handle(&self) -> SimHandle {
+        SimHandle {
+            inner: Rc::downgrade(&self.inner),
+        }
+    }
+
+    /// Spawn a task; it becomes runnable immediately.
+    pub fn spawn<F: Future<Output = ()> + 'static>(&self, fut: F) {
+        let mut tasks = self.inner.tasks.borrow_mut();
+        let id = tasks.len();
+        tasks.push(Some(Box::pin(fut)));
+        drop(tasks);
+        self.inner.queued.borrow_mut().push(false);
+        self.inner.wakers.borrow_mut().push(None);
+        self.inner.live_tasks.set(self.inner.live_tasks.get() + 1);
+        self.inner.enqueue(id);
+    }
+
+    /// Run until no task is runnable and no timer is pending.
+    ///
+    /// Returns the final virtual time. Panics if tasks remain alive but
+    /// nothing can make progress (a deadlock in the simulated program).
+    pub fn run(&self) -> Time {
+        loop {
+            // Drain all runnable tasks at the current instant.
+            loop {
+                let id = self.inner.ready.borrow_mut().pop_front();
+                let Some(id) = id else { break };
+                self.inner.queued.borrow_mut()[id] = false;
+                let fut = self.inner.tasks.borrow_mut()[id].take();
+                let Some(mut fut) = fut else { continue };
+                // Cached per-task waker (created once, cloned cheaply).
+                let waker = {
+                    let mut wakers = self.inner.wakers.borrow_mut();
+                    if wakers[id].is_none() {
+                        wakers[id] = Some(make_waker(&self.inner, id));
+                    }
+                    wakers[id].as_ref().unwrap().clone()
+                };
+                let mut cx = Context::from_waker(&waker);
+                self.inner.polls.set(self.inner.polls.get() + 1);
+                match fut.as_mut().poll(&mut cx) {
+                    Poll::Pending => {
+                        self.inner.tasks.borrow_mut()[id] = Some(fut);
+                    }
+                    Poll::Ready(()) => {
+                        self.inner.live_tasks.set(self.inner.live_tasks.get() - 1);
+                        self.inner.wakers.borrow_mut()[id] = None;
+                    }
+                }
+            }
+            // Advance virtual time to the next event.
+            let next = self.inner.timers.borrow_mut().pop();
+            match next {
+                Some(Reverse((t, _, slot))) => {
+                    debug_assert!(t >= self.inner.now.get());
+                    self.inner.now.set(t);
+                    let action = self.inner.callbacks.borrow_mut()[slot].take();
+                    self.inner.free_cb_slots.borrow_mut().push(slot);
+                    self.inner.events_run.set(self.inner.events_run.get() + 1);
+                    match action {
+                        Some(TimerAction::Wake(w)) => w.wake(),
+                        Some(TimerAction::Call(cb)) => cb(),
+                        None => {}
+                    }
+                }
+                None => break,
+            }
+        }
+        assert_eq!(
+            self.inner.live_tasks.get(),
+            0,
+            "simulation deadlock: {} task(s) blocked with no pending events at t={}",
+            self.inner.live_tasks.get(),
+            self.inner.now.get()
+        );
+        self.inner.now.get()
+    }
+
+    pub fn now(&self) -> Time {
+        self.inner.now.get()
+    }
+
+    /// (events run, futures polled) — used by the §Perf harness.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.inner.events_run.get(), self.inner.polls.get())
+    }
+}
+
+impl SimHandle {
+    fn upgrade(&self) -> Rc<SimInner> {
+        self.inner.upgrade().expect("simulation already dropped")
+    }
+
+    /// Spawn a task from inside the simulation (e.g. a background
+    /// non-blocking-barrier progress engine).
+    pub fn spawn<F: Future<Output = ()> + 'static>(&self, fut: F) {
+        let inner = self.upgrade();
+        let mut tasks = inner.tasks.borrow_mut();
+        let id = tasks.len();
+        tasks.push(Some(Box::pin(fut)));
+        drop(tasks);
+        inner.queued.borrow_mut().push(false);
+        inner.wakers.borrow_mut().push(None);
+        inner.live_tasks.set(inner.live_tasks.get() + 1);
+        inner.enqueue(id);
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.upgrade().now.get()
+    }
+
+    /// Schedule `cb` to run at absolute virtual time `at`.
+    pub fn schedule(&self, at: Time, cb: impl FnOnce() + 'static) {
+        self.upgrade().schedule(at, Box::new(cb));
+    }
+
+    /// Schedule `cb` to run `delay` ns from now.
+    pub fn schedule_in(&self, delay: Time, cb: impl FnOnce() + 'static) {
+        let inner = self.upgrade();
+        inner.schedule(inner.now.get() + delay, Box::new(cb));
+    }
+
+    /// Sleep until absolute virtual time `at`.
+    pub fn sleep_until(&self, at: Time) -> Sleep {
+        Sleep {
+            sim: self.clone(),
+            at,
+            scheduled: false,
+        }
+    }
+
+    /// Sleep for `d` ns of virtual time.
+    pub fn sleep(&self, d: Time) -> Sleep {
+        let at = self.now() + d;
+        self.sleep_until(at)
+    }
+}
+
+/// Future returned by [`SimHandle::sleep`].
+pub struct Sleep {
+    sim: SimHandle,
+    at: Time,
+    scheduled: bool,
+}
+
+impl Future for Sleep {
+    type Output = ();
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let inner = self.sim.upgrade();
+        if inner.now.get() >= self.at {
+            return Poll::Ready(());
+        }
+        if !self.scheduled {
+            self.scheduled = true;
+            inner.schedule_action(self.at, TimerAction::Wake(cx.waker().clone()));
+        }
+        Poll::Pending
+    }
+}
+
+/// Cooperative yield: requeue the current task behind the ready queue
+/// without advancing time. Used to break livelocks in polling loops.
+pub fn yield_now() -> YieldNow {
+    YieldNow { yielded: false }
+}
+
+pub struct YieldNow {
+    yielded: bool,
+}
+
+impl Future for YieldNow {
+    type Output = ();
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.yielded {
+            Poll::Ready(())
+        } else {
+            self.yielded = true;
+            cx.waker().wake_by_ref();
+            Poll::Pending
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn empty_sim_runs() {
+        let sim = Sim::new();
+        assert_eq!(sim.run(), 0);
+    }
+
+    #[test]
+    fn sleep_advances_virtual_time() {
+        let sim = Sim::new();
+        let h = sim.handle();
+        sim.spawn(async move {
+            h.sleep(1_000).await;
+            h.sleep(500).await;
+        });
+        assert_eq!(sim.run(), 1_500);
+    }
+
+    #[test]
+    fn tasks_interleave_deterministically() {
+        let sim = Sim::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for id in 0..3u32 {
+            let h = sim.handle();
+            let order = order.clone();
+            sim.spawn(async move {
+                h.sleep((3 - id as u64) * 100).await;
+                order.borrow_mut().push(id);
+            });
+        }
+        sim.run();
+        assert_eq!(*order.borrow(), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn same_deadline_fifo_by_schedule_order() {
+        let sim = Sim::new();
+        let order = Rc::new(RefCell::new(Vec::new()));
+        for id in 0..4u32 {
+            let h = sim.handle();
+            let order = order.clone();
+            sim.spawn(async move {
+                h.sleep(100).await;
+                order.borrow_mut().push(id);
+            });
+        }
+        sim.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn event_callback_wakes_task() {
+        let sim = Sim::new();
+        let h = sim.handle();
+        let flag = Rc::new(Cell::new(false));
+        let flag2 = flag.clone();
+        // A "message delivery" at t=42 sets the flag; the task busy-waits
+        // via a manually-registered waker through sleep polling.
+        sim.spawn(async move {
+            h.schedule_in(42, move || flag2.set(true));
+            h.sleep(100).await;
+            assert!(flag.get());
+        });
+        assert_eq!(sim.run(), 100);
+    }
+
+    #[test]
+    fn yield_now_keeps_time() {
+        let sim = Sim::new();
+        sim.spawn(async move {
+            for _ in 0..10 {
+                yield_now().await;
+            }
+        });
+        assert_eq!(sim.run(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn deadlock_detected() {
+        let sim = Sim::new();
+        sim.spawn(async move {
+            // A future that is never woken.
+            std::future::pending::<()>().await;
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn spawn_many_scales() {
+        let sim = Sim::new();
+        for i in 0..2048u64 {
+            let h = sim.handle();
+            sim.spawn(async move {
+                h.sleep(i % 17).await;
+                h.sleep(3).await;
+            });
+        }
+        let end = sim.run();
+        assert_eq!(end, 16 + 3);
+    }
+}

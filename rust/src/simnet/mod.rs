@@ -1,0 +1,19 @@
+//! Deterministic virtual-time cluster simulator substrate.
+//!
+//! This is the testbed substitution for LLNL Quartz (see DESIGN.md):
+//! * [`exec`] — a single-threaded async executor with a virtual clock.
+//!   Every simulated rank is a plain `async fn`; blocking MPI semantics are
+//!   expressed as futures; the executor advances virtual time by draining a
+//!   deterministic event heap.
+//! * [`topology`] — node → socket → core placement of ranks and the
+//!   locality *tier* of any (src, dst) pair.
+//! * [`cost`] — the LogGP-with-matching cost model and the two calibration
+//!   presets standing in for OpenMPI 4.1.2 / Mvapich2 2.3.7 on Quartz.
+
+pub mod cost;
+pub mod exec;
+pub mod topology;
+
+pub use cost::{CostModel, MpiFlavor};
+pub use exec::{Sim, SimHandle, Time};
+pub use topology::{RegionKind, Tier, Topology};

@@ -1,0 +1,245 @@
+//! Hierarchical cluster topology: node → socket → core, with ranks packed
+//! sequentially across nodes (the layout the paper assumes: "if there are
+//! PPN processes per region and ranks are laid out sequentially across the
+//! regions, each process p has local rank p % PPN").
+
+/// Locality tier of a (src, dst) pair, ordered from cheapest to most
+/// expensive. The paper's regions aggregate over [`RegionKind`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    /// src == dst (self message; loopback copy).
+    SelfMsg = 0,
+    /// Same node, same socket.
+    IntraSocket = 1,
+    /// Same node, different socket.
+    InterSocket = 2,
+    /// Different node (crosses the NIC / interconnect).
+    InterNode = 3,
+}
+
+/// Aggregation-region granularity for the locality-aware algorithms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RegionKind {
+    Socket,
+    Node,
+}
+
+impl RegionKind {
+    pub fn parse(s: &str) -> Option<RegionKind> {
+        match s {
+            "socket" => Some(RegionKind::Socket),
+            "node" => Some(RegionKind::Node),
+            _ => None,
+        }
+    }
+}
+
+/// Cluster shape. `ppn` ranks per node are used (the paper uses 32 of the
+/// 36 Quartz cores); ranks fill nodes sequentially, and within a node fill
+/// socket 0 first, then socket 1 (block placement).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub sockets_per_node: usize,
+    /// Ranks actually used per node (≤ sockets_per_node × cores_per_socket).
+    pub ppn: usize,
+}
+
+impl Topology {
+    /// Quartz-like: 2 sockets/node, `ppn` ranks per node.
+    pub fn quartz(nodes: usize, ppn: usize) -> Topology {
+        assert!(nodes >= 1 && ppn >= 1);
+        Topology {
+            nodes,
+            sockets_per_node: 2,
+            ppn,
+        }
+    }
+
+    /// Paper default: 32 ranks per node.
+    pub fn paper(nodes: usize) -> Topology {
+        Topology::quartz(nodes, 32)
+    }
+
+    /// Single-node convenience (tests).
+    pub fn single(ranks: usize) -> Topology {
+        Topology {
+            nodes: 1,
+            sockets_per_node: 2,
+            ppn: ranks,
+        }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nodes * self.ppn
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ppn
+    }
+
+    /// Ranks per socket (block placement; last socket may be smaller if ppn
+    /// does not divide evenly).
+    fn per_socket(&self) -> usize {
+        self.ppn.div_ceil(self.sockets_per_node)
+    }
+
+    pub fn socket_of(&self, rank: usize) -> usize {
+        let local = rank % self.ppn;
+        (self.node_of(rank) * self.sockets_per_node) + local / self.per_socket()
+    }
+
+    /// Locality tier of a message from `src` to `dst`.
+    pub fn tier(&self, src: usize, dst: usize) -> Tier {
+        if src == dst {
+            Tier::SelfMsg
+        } else if self.node_of(src) != self.node_of(dst) {
+            Tier::InterNode
+        } else if self.socket_of(src) != self.socket_of(dst) {
+            Tier::InterSocket
+        } else {
+            Tier::IntraSocket
+        }
+    }
+
+    /// Region id of `rank` at granularity `kind`.
+    pub fn region_of(&self, rank: usize, kind: RegionKind) -> usize {
+        match kind {
+            RegionKind::Node => self.node_of(rank),
+            RegionKind::Socket => self.socket_of(rank),
+        }
+    }
+
+    /// Number of regions at granularity `kind`.
+    pub fn num_regions(&self, kind: RegionKind) -> usize {
+        match kind {
+            RegionKind::Node => self.nodes,
+            RegionKind::Socket => self.nodes * self.sockets_per_node,
+        }
+    }
+
+    /// Ranks in region `r` at granularity `kind`, ascending.
+    pub fn region_ranks(&self, r: usize, kind: RegionKind) -> Vec<usize> {
+        (0..self.nranks())
+            .filter(|&q| self.region_of(q, kind) == r)
+            .collect()
+    }
+
+    /// Local rank of `rank` within its region (position among the region's
+    /// ranks in ascending order).
+    pub fn local_rank(&self, rank: usize, kind: RegionKind) -> usize {
+        match kind {
+            RegionKind::Node => rank % self.ppn,
+            RegionKind::Socket => {
+                let local = rank % self.ppn;
+                local % self.per_socket()
+            }
+        }
+    }
+
+    /// Region size at granularity `kind` for the region containing `rank`.
+    pub fn region_size(&self, rank: usize, kind: RegionKind) -> usize {
+        match kind {
+            RegionKind::Node => self.ppn,
+            RegionKind::Socket => {
+                let local = rank % self.ppn;
+                let per = self.per_socket();
+                let sock = local / per;
+                let start = sock * per;
+                (self.ppn - start).min(per)
+            }
+        }
+    }
+
+    /// The paper's corresponding-process rule: the rank in region `region`
+    /// with local rank `local_rank(p)` — or, if that region is smaller than
+    /// the sender's local rank, wrap around.
+    pub fn corresponding_rank(&self, p: usize, region: usize, kind: RegionKind) -> usize {
+        let ranks = self.region_ranks(region, kind);
+        let lr = self.local_rank(p, kind);
+        ranks[lr % ranks.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_layout_32ppn() {
+        let t = Topology::paper(4);
+        assert_eq!(t.nranks(), 128);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(31), 0);
+        assert_eq!(t.node_of(32), 1);
+        assert_eq!(t.local_rank(33, RegionKind::Node), 1);
+        // block socket placement: 16 per socket
+        assert_eq!(t.socket_of(0), 0);
+        assert_eq!(t.socket_of(15), 0);
+        assert_eq!(t.socket_of(16), 1);
+        assert_eq!(t.socket_of(32), 2);
+    }
+
+    #[test]
+    fn tiers() {
+        let t = Topology::paper(2);
+        assert_eq!(t.tier(5, 5), Tier::SelfMsg);
+        assert_eq!(t.tier(0, 1), Tier::IntraSocket);
+        assert_eq!(t.tier(0, 16), Tier::InterSocket);
+        assert_eq!(t.tier(0, 32), Tier::InterNode);
+        assert_eq!(t.tier(33, 1), Tier::InterNode);
+    }
+
+    #[test]
+    fn regions_node() {
+        let t = Topology::paper(3);
+        assert_eq!(t.num_regions(RegionKind::Node), 3);
+        assert_eq!(t.region_of(70, RegionKind::Node), 2);
+        assert_eq!(t.region_ranks(1, RegionKind::Node), (32..64).collect::<Vec<_>>());
+        assert_eq!(t.region_size(0, RegionKind::Node), 32);
+    }
+
+    #[test]
+    fn regions_socket() {
+        let t = Topology::paper(2);
+        assert_eq!(t.num_regions(RegionKind::Socket), 4);
+        assert_eq!(t.region_of(0, RegionKind::Socket), 0);
+        assert_eq!(t.region_of(16, RegionKind::Socket), 1);
+        assert_eq!(t.region_of(32, RegionKind::Socket), 2);
+        assert_eq!(t.local_rank(17, RegionKind::Socket), 1);
+        assert_eq!(t.region_size(17, RegionKind::Socket), 16);
+    }
+
+    #[test]
+    fn corresponding_rank_rule() {
+        let t = Topology::paper(2);
+        // rank 3 (local rank 3 on node 0) corresponds to rank 32+3 on node 1.
+        assert_eq!(t.corresponding_rank(3, 1, RegionKind::Node), 35);
+        // and symmetric back.
+        assert_eq!(t.corresponding_rank(35, 0, RegionKind::Node), 3);
+    }
+
+    #[test]
+    fn odd_ppn_socket_split() {
+        let t = Topology::quartz(1, 5); // 3 + 2 per socket
+        assert_eq!(t.socket_of(0), 0);
+        assert_eq!(t.socket_of(2), 0);
+        assert_eq!(t.socket_of(3), 1);
+        assert_eq!(t.region_size(0, RegionKind::Socket), 3);
+        assert_eq!(t.region_size(4, RegionKind::Socket), 2);
+        // every rank appears in exactly one socket region
+        let all: Vec<usize> = (0..2)
+            .flat_map(|s| t.region_ranks(s, RegionKind::Socket))
+            .collect();
+        assert_eq!(all.len(), 5);
+    }
+
+    #[test]
+    fn corresponding_rank_wraps_for_uneven_regions() {
+        let t = Topology::quartz(1, 5);
+        // socket 1 has ranks {3,4}; a sender with local rank 2 wraps to 3.
+        let p = 2; // socket 0, local rank 2
+        let c = t.corresponding_rank(p, 1, RegionKind::Socket);
+        assert!(t.region_ranks(1, RegionKind::Socket).contains(&c));
+    }
+}

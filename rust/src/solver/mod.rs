@@ -1,0 +1,14 @@
+//! Distributed solvers — the consumers that prove SDDE-formed communication
+//! packages correct end to end: a [`dist::DistMatrix`] performs halo
+//! exchanges over the pattern the SDDE discovered, and [`jacobi`]/[`cg`]
+//! iterate it to convergence. Local per-rank compute is pluggable
+//! ([`LocalSpmv`]): a pure-rust CSR kernel, or the AOT-compiled JAX/Pallas
+//! artifact via [`crate::runtime`] (the E2E example).
+
+pub mod cg;
+pub mod dist;
+pub mod jacobi;
+
+pub use cg::cg;
+pub use dist::{CsrLocal, DistMatrix, LocalSpmv};
+pub use jacobi::jacobi;

@@ -1,0 +1,309 @@
+//! Communication-package formation — the paper's motivating SDDE use case
+//! (§II): every rank derives *what it must receive* from its local sparsity
+//! (off-process columns grouped by owner), then an `MPIX_Alltoallv_crs`
+//! discovers *what it must send* (the transpose). The resulting
+//! [`CommPkg`] drives every subsequent SpMV halo exchange.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::gen::MatrixPreset;
+use super::partition::Partition;
+use crate::mpix::{alltoall_crs, alltoallv_crs, CrsArgs, CrsvArgs, MpixComm, MpixInfo};
+
+/// Per-rank receive requirements: for each owner rank, the sorted global
+/// columns this rank needs from it. This is the *known* half of the
+/// pattern (and the SDDE's send side: we send our index requests to the
+/// owners).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SpmvPattern {
+    pub rank: usize,
+    /// (owner, sorted global columns), ascending by owner; never contains
+    /// the rank itself.
+    pub needed: Vec<(usize, Vec<usize>)>,
+}
+
+impl SpmvPattern {
+    /// Build from the row-deterministic generator without materializing
+    /// values (the figure-sweep fast path).
+    pub fn build(preset: &MatrixPreset, part: Partition, rank: usize, seed: u64) -> SpmvPattern {
+        let (start, end) = part.range(rank);
+        let mut off: Vec<usize> = Vec::new();
+        let mut row_buf: Vec<usize> = Vec::new();
+        for row in start..end {
+            preset.row_cols_into(row, seed, &mut row_buf);
+            for &c in &row_buf {
+                if c < start || c >= end {
+                    off.push(c);
+                }
+            }
+        }
+        off.sort_unstable();
+        off.dedup();
+        Self::from_columns(part, rank, &off)
+    }
+
+    /// Build from an explicit off-process column set.
+    pub fn from_columns(part: Partition, rank: usize, off_cols: &[usize]) -> SpmvPattern {
+        // Fast path (§Perf): for a contiguous row partition, owners are
+        // monotone in the column index, so sorted input groups by simple
+        // boundary detection — no map lookups.
+        if off_cols.windows(2).all(|w| w[0] < w[1]) {
+            let mut needed: Vec<(usize, Vec<usize>)> = Vec::new();
+            let mut i = 0;
+            while i < off_cols.len() {
+                let o = part.owner(off_cols[i]);
+                debug_assert_ne!(o, rank, "column {} is local", off_cols[i]);
+                let (_, oe) = part.range(o);
+                let j = i + off_cols[i..].partition_point(|&c| c < oe);
+                needed.push((o, off_cols[i..j].to_vec()));
+                i = j;
+            }
+            return SpmvPattern { rank, needed };
+        }
+        let mut by_owner: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &c in off_cols {
+            let o = part.owner(c);
+            debug_assert_ne!(o, rank, "column {c} is local");
+            by_owner.entry(o).or_default().push(c);
+        }
+        SpmvPattern {
+            rank,
+            needed: by_owner.into_iter().collect(),
+        }
+    }
+
+    /// Number of neighbor ranks this rank receives from.
+    pub fn recv_nnz(&self) -> usize {
+        self.needed.len()
+    }
+
+    /// Total off-process columns needed.
+    pub fn recv_size(&self) -> usize {
+        self.needed.iter().map(|(_, c)| c.len()).sum()
+    }
+
+    /// SDDE send side for `MPIX_Alltoallv_crs`: request lists (the indices
+    /// we need) addressed to their owners.
+    pub fn crsv_args(&self) -> CrsvArgs {
+        CrsvArgs {
+            dest: self.needed.iter().map(|&(o, _)| o).collect(),
+            sendcounts: self.needed.iter().map(|(_, c)| c.len()).collect(),
+            sendvals: self
+                .needed
+                .iter()
+                .flat_map(|(_, c)| c.iter().map(|&x| x as u64))
+                .collect(),
+        }
+    }
+
+    /// SDDE send side for `MPIX_Alltoall_crs`: one integer per owner — the
+    /// number of elements we will pull in later exchanges (the paper's
+    /// Fig. 5/6 workload).
+    pub fn crs_size_args(&self) -> CrsArgs {
+        CrsArgs {
+            dest: self.needed.iter().map(|&(o, _)| o).collect(),
+            sendcount: 1,
+            sendvals: self.needed.iter().map(|(_, c)| c.len() as u64).collect(),
+        }
+    }
+}
+
+/// The formed communication pattern: both halves of the SpMV halo
+/// exchange for one rank.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CommPkg {
+    /// (owner, global columns) this rank receives each SpMV — known a
+    /// priori from the local sparsity.
+    pub recv_from: Vec<(usize, Vec<usize>)>,
+    /// (neighbor, global rows) this rank must send each SpMV — discovered
+    /// by the SDDE.
+    pub send_to: Vec<(usize, Vec<usize>)>,
+}
+
+impl CommPkg {
+    pub fn send_size(&self) -> usize {
+        self.send_to.iter().map(|(_, v)| v.len()).sum()
+    }
+    pub fn recv_size(&self) -> usize {
+        self.recv_from.iter().map(|(_, v)| v.len()).sum()
+    }
+}
+
+/// Form the full communication package via the variable-size SDDE
+/// (`MPIX_Alltoallv_crs`) — the Hypre/BoomerAMG-style use (paper §III).
+pub async fn form_commpkg(
+    mx: &MpixComm,
+    info: &MpixInfo,
+    pattern: &SpmvPattern,
+) -> Result<CommPkg> {
+    let res = alltoallv_crs(mx, info, &pattern.crsv_args()).await?;
+    let send_to = res
+        .src
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| (s, res.vals(i).iter().map(|&x| x as usize).collect()))
+        .collect();
+    Ok(CommPkg {
+        recv_from: pattern.needed.clone(),
+        send_to,
+    })
+}
+
+/// Form only the receive *sizes* via the constant-size SDDE
+/// (`MPIX_Alltoall_crs`) — the CELLAR-style use (paper §III): returns
+/// (neighbor, element-count) pairs for the messages this rank will send in
+/// later exchanges.
+pub async fn form_commpkg_sizes(
+    mx: &MpixComm,
+    info: &MpixInfo,
+    pattern: &SpmvPattern,
+) -> Result<Vec<(usize, u64)>> {
+    let res = alltoall_crs(mx, info, &pattern.crs_size_args()).await?;
+    Ok(res
+        .src
+        .iter()
+        .zip(res.recvvals.iter())
+        .map(|(&s, &v)| (s, v))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::World;
+    use crate::mpix::SddeAlgorithm;
+    use crate::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+    use std::rc::Rc;
+
+    #[test]
+    fn pattern_paper_example() {
+        // Figure 1's 4×4 matrix over 4 processes (1 row each):
+        //   row 0: cols {0, 1}
+        //   row 1: cols {1, 3}
+        //   row 2: cols {0, 2, 3}
+        //   row 3: cols {1, 3}
+        let part = Partition::new(4, 4);
+        let rows: [&[usize]; 4] = [&[0, 1], &[1, 3], &[0, 2, 3], &[1, 3]];
+        let pats: Vec<SpmvPattern> = (0..4)
+            .map(|p| {
+                let off: Vec<usize> = rows[p].iter().copied().filter(|&c| c != p).collect();
+                SpmvPattern::from_columns(part, p, &off)
+            })
+            .collect();
+        // P2 needs v0 and v3 (paper §II-B).
+        assert_eq!(pats[2].needed, vec![(0, vec![0]), (3, vec![3])]);
+        assert_eq!(pats[0].needed, vec![(1, vec![1])]);
+    }
+
+    #[test]
+    fn build_matches_generator() {
+        let preset = MatrixPreset::fault_639_like().scaled(2000);
+        let part = Partition::new(preset.n, 8);
+        let pat = SpmvPattern::build(&preset, part, 3, 11);
+        // every needed column really appears in some local row and is off-proc
+        let (s, e) = part.range(3);
+        let mut all_off: Vec<usize> = Vec::new();
+        for row in s..e {
+            for c in preset.row_cols(row, 11) {
+                if c < s || c >= e {
+                    all_off.push(c);
+                }
+            }
+        }
+        all_off.sort_unstable();
+        all_off.dedup();
+        let from_pat: Vec<usize> = pat
+            .needed
+            .iter()
+            .flat_map(|(_, c)| c.iter().copied())
+            .collect();
+        assert_eq!(from_pat, all_off);
+        for (o, cols) in &pat.needed {
+            for &c in cols {
+                assert_eq!(part.owner(c), *o);
+            }
+        }
+    }
+
+    #[test]
+    fn commpkg_duality_all_algorithms() {
+        // The formed send side must be the exact transpose of the receive
+        // side, for every SDDE algorithm.
+        let preset = MatrixPreset::cage14_like().scaled(4000);
+        let topo = Topology::quartz(2, 4);
+        let n = topo.nranks();
+        let part = Partition::new(preset.n, n);
+        let pats: Vec<SpmvPattern> = (0..n)
+            .map(|p| SpmvPattern::build(&preset, part, p, 5))
+            .collect();
+        let pats = Rc::new(pats);
+        for algo in SddeAlgorithm::VARIABLE {
+            let pats2 = pats.clone();
+            let world = World::new(topo.clone(), CostModel::preset(MpiFlavor::Mvapich2));
+            let out = world.run(move |c| {
+                let pats = pats2.clone();
+                async move {
+                    let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                    let info = MpixInfo::with_algorithm(algo);
+                    form_commpkg(&mx, &info, &pats[c.rank()]).await.unwrap()
+                }
+            });
+            // transpose check
+            for p in 0..n {
+                for (owner, cols) in &out.results[p].recv_from {
+                    let back = out.results[*owner]
+                        .send_to
+                        .iter()
+                        .find(|(r, _)| r == &p)
+                        .unwrap_or_else(|| panic!("algo {algo:?}: {owner} missing send to {p}"));
+                    assert_eq!(&back.1, cols, "algo {algo:?}: {owner}->{p}");
+                }
+                let total_sends: usize = out.results[p].send_to.len();
+                let expected: usize = (0..n)
+                    .filter(|&q| {
+                        out.results[q]
+                            .recv_from
+                            .iter()
+                            .any(|(o, _)| *o == p)
+                    })
+                    .count();
+                assert_eq!(total_sends, expected, "algo {algo:?} rank {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn commpkg_sizes_matches_full() {
+        let preset = MatrixPreset::dielfilterv2clx_like().scaled(1000);
+        let topo = Topology::quartz(2, 3);
+        let n = topo.nranks();
+        let part = Partition::new(preset.n, n);
+        let pats: Vec<SpmvPattern> = (0..n)
+            .map(|p| SpmvPattern::build(&preset, part, p, 9))
+            .collect();
+        let pats = Rc::new(pats);
+        let world = World::new(topo, CostModel::preset(MpiFlavor::OpenMpi));
+        let out = world.run(move |c| {
+            let pats = pats.clone();
+            async move {
+                let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                let info = MpixInfo::with_algorithm(SddeAlgorithm::Personalized);
+                let full = form_commpkg(&mx, &info, &pats[c.rank()]).await.unwrap();
+                let sizes = form_commpkg_sizes(&mx, &info, &pats[c.rank()])
+                    .await
+                    .unwrap();
+                (full, sizes)
+            }
+        });
+        for (full, sizes) in &out.results {
+            let from_full: Vec<(usize, u64)> = full
+                .send_to
+                .iter()
+                .map(|(r, v)| (*r, v.len() as u64))
+                .collect();
+            assert_eq!(&from_full, sizes);
+        }
+    }
+}

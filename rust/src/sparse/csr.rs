@@ -1,0 +1,184 @@
+//! CSR storage and the Block-ELL layout the Pallas kernel consumes.
+
+/// Compressed sparse row matrix (f64 values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rowptr: Vec<usize>,
+    pub cols: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from per-row (col, val) lists (cols need not be sorted).
+    pub fn from_rows(nrows: usize, ncols: usize, rows: Vec<Vec<(usize, f64)>>) -> CsrMatrix {
+        assert_eq!(rows.len(), nrows);
+        let mut rowptr = Vec::with_capacity(nrows + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        rowptr.push(0);
+        for mut row in rows {
+            row.sort_by_key(|&(c, _)| c);
+            for (c, v) in row {
+                debug_assert!(c < ncols);
+                cols.push(c);
+                vals.push(v);
+            }
+            rowptr.push(cols.len());
+        }
+        CsrMatrix {
+            nrows,
+            ncols,
+            rowptr,
+            cols,
+            vals,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Columns of row `r`.
+    pub fn row_cols(&self, r: usize) -> &[usize] {
+        &self.cols[self.rowptr[r]..self.rowptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    pub fn row_vals(&self, r: usize) -> &[f64] {
+        &self.vals[self.rowptr[r]..self.rowptr[r + 1]]
+    }
+
+    /// Dense sequential SpMV (reference for tests): `y = A x`.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for r in 0..self.nrows {
+            let mut acc = 0.0;
+            for k in self.rowptr[r]..self.rowptr[r + 1] {
+                acc += self.vals[k] * x[self.cols[k]];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Maximum row degree.
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.nrows)
+            .map(|r| self.rowptr[r + 1] - self.rowptr[r])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Convert to the padded Block-ELL layout consumed by the Pallas/XLA
+    /// kernel: `rows_pad × width` dense arrays of values and column
+    /// indices, rows padded to a multiple of `row_tile` and entries padded
+    /// with (col 0, val 0). `x` must also be padded so index 0 is valid.
+    pub fn to_block_ell(&self, row_tile: usize, width: usize) -> BlockEll {
+        assert!(width >= self.max_row_nnz(), "ELL width too small");
+        let rows_pad = self.nrows.div_ceil(row_tile).max(1) * row_tile;
+        let mut vals = vec![0.0f32; rows_pad * width];
+        let mut cols = vec![0i32; rows_pad * width];
+        for r in 0..self.nrows {
+            let (s, e) = (self.rowptr[r], self.rowptr[r + 1]);
+            for (j, k) in (s..e).enumerate() {
+                vals[r * width + j] = self.vals[k] as f32;
+                cols[r * width + j] = self.cols[k] as i32;
+            }
+        }
+        BlockEll {
+            nrows: self.nrows,
+            rows_pad,
+            width,
+            ncols: self.ncols,
+            vals,
+            cols,
+        }
+    }
+}
+
+/// Padded ELL layout with row-tile alignment (see
+/// `python/compile/kernels/spmv.py` — identical semantics: the kernel
+/// computes `y[i] = Σ_j vals[i,j] · x[cols[i,j]]`).
+#[derive(Clone, Debug)]
+pub struct BlockEll {
+    pub nrows: usize,
+    pub rows_pad: usize,
+    pub width: usize,
+    pub ncols: usize,
+    /// Row-major `rows_pad × width` (f32 — the XLA artifact's dtype).
+    pub vals: Vec<f32>,
+    pub cols: Vec<i32>,
+}
+
+impl BlockEll {
+    /// Reference SpMV on the ELL layout (f32; oracle for the XLA artifact).
+    pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert!(x.len() >= self.ncols);
+        let mut y = vec![0.0f32; self.rows_pad];
+        for r in 0..self.rows_pad {
+            let mut acc = 0.0f32;
+            for j in 0..self.width {
+                acc += self.vals[r * self.width + j] * x[self.cols[r * self.width + j] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CsrMatrix {
+        // [2 0 1]
+        // [0 3 0]
+        // [4 0 5]
+        CsrMatrix::from_rows(
+            3,
+            3,
+            vec![
+                vec![(0, 2.0), (2, 1.0)],
+                vec![(1, 3.0)],
+                vec![(2, 5.0), (0, 4.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn csr_layout() {
+        let a = small();
+        assert_eq!(a.nnz(), 5);
+        assert_eq!(a.rowptr, vec![0, 2, 3, 5]);
+        assert_eq!(a.row_cols(2), &[0, 2]); // sorted
+        assert_eq!(a.row_vals(2), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn spmv_reference() {
+        let a = small();
+        let y = a.spmv(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![5.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn block_ell_round_trip() {
+        let a = small();
+        let ell = a.to_block_ell(4, 2);
+        assert_eq!(ell.rows_pad, 4);
+        assert_eq!(ell.width, 2);
+        let x = [1.0f32, 2.0, 3.0];
+        let y = ell.spmv_ref(&x);
+        assert_eq!(&y[..3], &[5.0, 6.0, 19.0]);
+        assert_eq!(y[3], 0.0); // padded row
+    }
+
+    #[test]
+    #[should_panic(expected = "ELL width too small")]
+    fn block_ell_width_checked() {
+        small().to_block_ell(4, 1);
+    }
+}

@@ -1,0 +1,449 @@
+//! Synthetic matrix generators, including analogs of the paper's four
+//! SuiteSparse matrices (nnz ≈ 25 M; see DESIGN.md §Substitutions).
+//!
+//! Generation is *row-deterministic*: the columns of global row `r` depend
+//! only on `(preset, seed, r)`, so any rank can generate exactly its own
+//! rows (or just their sparsity) without materializing the global matrix —
+//! this keeps the 2048-rank figure sweeps cheap.
+//!
+//! The four analogs are calibrated to the communication regimes the paper
+//! exploits:
+//! * `dielfilterv2clx_like` — tight FEM band → *fewest* messages/rank
+//!   (the matrix where locality-aware aggregation loses, Fig. 7–8);
+//! * `fault_639_like` — band + contact clusters → moderate counts;
+//! * `curlcurl_4_like` — wide multi-band edge elements → moderate-high;
+//! * `cage14_like` — scattered long-range couplings → *highest* counts
+//!   (the 20×-speedup regime).
+
+use super::csr::CsrMatrix;
+use crate::util::Rng;
+
+/// Sparsity-structure family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Gaussian band around the diagonal.
+    Band,
+    /// Band plus occasional far "contact" clusters.
+    BandCluster,
+    /// Superposition of three bands of increasing width.
+    MultiBand,
+    /// Band plus a fraction of uniformly scattered columns.
+    Scattered,
+    /// Exact 5-point Poisson stencil on an nx × ny grid (SPD; solver tests).
+    Poisson2D,
+    /// Fully uniform random columns.
+    Uniform,
+}
+
+/// A reproducible matrix description. See module docs; constructors below.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixPreset {
+    pub name: String,
+    pub kind: Kind,
+    /// Dimension (rows == cols). For Poisson2D this is nx·ny.
+    pub n: usize,
+    /// Mean row degree (ignored by Poisson2D).
+    pub deg: usize,
+    /// Band standard deviation in columns (Band-ish kinds); nx for Poisson2D.
+    pub band: usize,
+    /// Percent of entries drawn uniformly at random (Scattered).
+    pub far_pct: u8,
+}
+
+impl MatrixPreset {
+    /// dielFilterV2clx: n=607,232, 25.3M nnz, high-order FEM, narrow
+    /// coupling → lowest message count of the set (paper §V).
+    pub fn dielfilterv2clx_like() -> MatrixPreset {
+        MatrixPreset {
+            name: "dielfilterv2clx_like".into(),
+            kind: Kind::Band,
+            n: 607_232,
+            deg: 42,
+            band: 900,
+            far_pct: 0,
+        }
+    }
+
+    /// Fault_639: n=638,802, 28.6M nnz, solid mechanics with contact.
+    pub fn fault_639_like() -> MatrixPreset {
+        MatrixPreset {
+            name: "fault_639_like".into(),
+            kind: Kind::BandCluster,
+            n: 638_802,
+            deg: 45,
+            band: 3_500,
+            far_pct: 0,
+        }
+    }
+
+    /// CurlCurl_4: n=2,380,515, 26.5M nnz, edge elements, wide stencil.
+    pub fn curlcurl_4_like() -> MatrixPreset {
+        MatrixPreset {
+            name: "curlcurl_4_like".into(),
+            kind: Kind::MultiBand,
+            n: 2_380_515,
+            deg: 11,
+            band: 2_500,
+            far_pct: 0,
+        }
+    }
+
+    /// cage14: n=1,505,785, 27.1M nnz, DNA electrophoresis transition
+    /// graph — scattered couplings, the highest message counts.
+    pub fn cage14_like() -> MatrixPreset {
+        MatrixPreset {
+            name: "cage14_like".into(),
+            kind: Kind::Scattered,
+            n: 1_505_785,
+            deg: 18,
+            band: 15_000,
+            far_pct: 20,
+        }
+    }
+
+    /// The paper's evaluation set (§V).
+    pub fn paper_set() -> Vec<MatrixPreset> {
+        vec![
+            MatrixPreset::dielfilterv2clx_like(),
+            MatrixPreset::fault_639_like(),
+            MatrixPreset::curlcurl_4_like(),
+            MatrixPreset::cage14_like(),
+        ]
+    }
+
+    /// 5-point Poisson stencil on an `nx × ny` grid (SPD — CG converges).
+    pub fn poisson2d(nx: usize, ny: usize) -> MatrixPreset {
+        MatrixPreset {
+            name: format!("poisson2d_{nx}x{ny}"),
+            kind: Kind::Poisson2D,
+            n: nx * ny,
+            deg: 5,
+            band: nx,
+            far_pct: 0,
+        }
+    }
+
+    pub fn banded(n: usize, deg: usize, band: usize) -> MatrixPreset {
+        MatrixPreset {
+            name: format!("banded_n{n}_d{deg}_b{band}"),
+            kind: Kind::Band,
+            n,
+            deg,
+            band,
+            far_pct: 0,
+        }
+    }
+
+    pub fn uniform(n: usize, deg: usize) -> MatrixPreset {
+        MatrixPreset {
+            name: format!("uniform_n{n}_d{deg}"),
+            kind: Kind::Uniform,
+            n,
+            deg,
+            band: 0,
+            far_pct: 100,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MatrixPreset> {
+        match s {
+            "dielfilterv2clx" | "dielfilterv2clx_like" => {
+                Some(MatrixPreset::dielfilterv2clx_like())
+            }
+            "fault_639" | "fault_639_like" => Some(MatrixPreset::fault_639_like()),
+            "curlcurl_4" | "curlcurl_4_like" => Some(MatrixPreset::curlcurl_4_like()),
+            "cage14" | "cage14_like" => Some(MatrixPreset::cage14_like()),
+            _ => None,
+        }
+    }
+
+    /// Shrink the problem by `div` (n and band scale down, degree kept):
+    /// preserves the per-rank communication character at smaller scales —
+    /// used by tests and the quick bench mode.
+    pub fn scaled(&self, div: usize) -> MatrixPreset {
+        assert!(div >= 1);
+        if self.kind == Kind::Poisson2D {
+            let nx = (self.band / div).max(2);
+            let ny = (self.n / self.band / div).max(2);
+            return MatrixPreset::poisson2d(nx, ny);
+        }
+        MatrixPreset {
+            name: format!("{}_div{div}", self.name),
+            n: (self.n / div).max(16),
+            band: (self.band / div).max(2),
+            ..self.clone()
+        }
+    }
+
+    /// Approximate nnz (n · deg).
+    pub fn approx_nnz(&self) -> usize {
+        self.n * self.deg
+    }
+
+    fn row_rng(&self, row: usize, seed: u64) -> Rng {
+        let mut h = seed;
+        for b in self.name.bytes() {
+            h = h.wrapping_mul(0x100000001B3).wrapping_add(b as u64);
+        }
+        Rng::stream(h, row as u64)
+    }
+
+    /// Sorted, deduplicated columns of global row `row` (always includes
+    /// the diagonal).
+    pub fn row_cols(&self, row: usize, seed: u64) -> Vec<usize> {
+        let mut cols = Vec::new();
+        self.row_cols_into(row, seed, &mut cols);
+        cols
+    }
+
+    /// Like [`MatrixPreset::row_cols`] but reusing `cols` (§Perf: the
+    /// pattern builder calls this once per row — no per-row allocation).
+    pub fn row_cols_into(&self, row: usize, seed: u64, cols: &mut Vec<usize>) {
+        cols.clear();
+        let n = self.n as i64;
+        let r = row as i64;
+        match self.kind {
+            Kind::Poisson2D => {
+                let nx = self.band as i64;
+                let (x, y) = (r % nx, r / nx);
+                let ny = n / nx;
+                cols.push(row);
+                if x > 0 {
+                    cols.push((r - 1) as usize);
+                }
+                if x + 1 < nx {
+                    cols.push((r + 1) as usize);
+                }
+                if y > 0 {
+                    cols.push((r - nx) as usize);
+                }
+                if y + 1 < ny {
+                    cols.push((r + nx) as usize);
+                }
+            }
+            _ => {
+                let mut rng = self.row_rng(row, seed);
+                let jitter = (self.deg / 4).max(1) as i64;
+                let deg = (self.deg as i64 + rng.range(-jitter, jitter + 1)).max(2) as usize;
+                cols.push(row);
+                for _ in 0..deg - 1 {
+                    let c = match self.kind {
+                        Kind::Band => band_col(&mut rng, r, self.band as f64, n),
+                        Kind::BandCluster => {
+                            if rng.chance(0.08) {
+                                // contact cluster: each row couples to one
+                                // persistent far block (structural, so
+                                // nearby rows share owners)
+                                let center = cluster_center(self, row, 0, n);
+                                band_col(&mut rng, center, 24.0, n)
+                            } else {
+                                band_col(&mut rng, r, self.band as f64, n)
+                            }
+                        }
+                        Kind::MultiBand => {
+                            let sigma = match rng.below(20) {
+                                0..=13 => self.band as f64,
+                                14..=17 => self.band as f64 * 12.0,
+                                _ => self.band as f64 * 40.0,
+                            };
+                            band_col(&mut rng, r, sigma, n)
+                        }
+                        Kind::Scattered => {
+                            if rng.below(100) < self.far_pct as u64 {
+                                // hub-structured long-range coupling: rows
+                                // of one block share FAR_HUBS possible
+                                // targets (graph locality — without this,
+                                // the pattern degenerates to all-to-all at
+                                // scale, which cage14 is not)
+                                let hub = rng.below(FAR_HUBS);
+                                let center = cluster_center(self, row, hub, n);
+                                band_col(&mut rng, center, 200.0, n)
+                            } else {
+                                band_col(&mut rng, r, self.band as f64, n)
+                            }
+                        }
+                        Kind::Uniform => rng.usize_below(self.n),
+                        Kind::Poisson2D => unreachable!(),
+                    };
+                    cols.push(c);
+                }
+            }
+        }
+        cols.sort_unstable();
+        cols.dedup();
+    }
+
+    /// Row entries with diagonally-dominant values (off-diagonals in
+    /// (-1, -0.5]; diagonal = 1 + Σ|off|), so Jacobi converges and the
+    /// symmetrized Poisson case is SPD.
+    pub fn row_entries(&self, row: usize, seed: u64) -> Vec<(usize, f64)> {
+        if self.kind == Kind::Poisson2D {
+            return self
+                .row_cols(row, seed)
+                .into_iter()
+                .map(|c| (c, if c == row { 4.0 } else { -1.0 }))
+                .collect();
+        }
+        let cols = self.row_cols(row, seed);
+        let mut rng = self.row_rng(row, seed ^ 0xABCD);
+        let mut entries: Vec<(usize, f64)> = Vec::with_capacity(cols.len());
+        let mut offsum = 0.0;
+        for c in cols {
+            if c == row {
+                entries.push((c, 0.0)); // placeholder, fixed below
+            } else {
+                let v = -(0.5 + 0.5 * rng.f64());
+                offsum += v.abs();
+                entries.push((c, v));
+            }
+        }
+        for e in entries.iter_mut() {
+            if e.0 == row {
+                // strongly diagonally dominant (ρ_Jacobi ≤ 1/2)
+                e.1 = 1.0 + 2.0 * offsum;
+            }
+        }
+        entries
+    }
+
+    /// Materialize the full CSR matrix (small presets / examples only).
+    pub fn to_csr(&self, seed: u64) -> CsrMatrix {
+        let rows = (0..self.n).map(|r| self.row_entries(r, seed)).collect();
+        CsrMatrix::from_rows(self.n, self.n, rows)
+    }
+}
+
+fn band_col(rng: &mut Rng, center: i64, sigma: f64, n: i64) -> usize {
+    let off = (rng.normal() * sigma).round() as i64;
+    (center + off).clamp(0, n - 1) as usize
+}
+
+/// Rows per structural block sharing the same far-coupling hubs.
+const HUB_BLOCK: usize = 2048;
+/// Number of candidate far hubs per block (bounds per-rank neighbor
+/// counts at scale — cage14's "high message count" is hundreds of
+/// neighbors, not all-to-all).
+const FAR_HUBS: u64 = 256;
+
+/// Deterministic far-coupling target for (row block, hub index): a hash
+/// independent of the per-row RNG stream, so all rows of a block agree.
+fn cluster_center(preset: &MatrixPreset, row: usize, hub: u64, n: i64) -> i64 {
+    let block = (row / HUB_BLOCK) as u64;
+    let mut h = 0xcbf29ce484222325u64 ^ block.wrapping_mul(0x9E3779B97F4A7C15);
+    h ^= hub.wrapping_mul(0xD1B54A32D192ED03);
+    for b in preset.name.bytes().take(8) {
+        h = h.wrapping_mul(0x100000001B3) ^ b as u64;
+    }
+    h = h ^ (h >> 29);
+    h = h.wrapping_mul(0xBF58476D1CE4E5B9);
+    (h % n as u64) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_cols_deterministic_sorted_dedup() {
+        let p = MatrixPreset::cage14_like().scaled(100);
+        for row in [0usize, 1, 500, p.n - 1] {
+            let a = p.row_cols(row, 42);
+            let b = p.row_cols(row, 42);
+            assert_eq!(a, b);
+            assert!(a.contains(&row), "diagonal missing in row {row}");
+            for w in a.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(a.iter().all(|&c| c < p.n));
+        }
+        // different seed → different structure
+        assert_ne!(p.row_cols(500, 42), p.row_cols(500, 43));
+    }
+
+    #[test]
+    fn poisson2d_stencil_exact() {
+        let p = MatrixPreset::poisson2d(4, 3);
+        assert_eq!(p.n, 12);
+        // interior point (1,1) = row 5: all 5 neighbors
+        assert_eq!(p.row_cols(5, 0), vec![1, 4, 5, 6, 9]);
+        // corner (0,0): 3 entries
+        assert_eq!(p.row_cols(0, 0), vec![0, 1, 4]);
+        let a = p.to_csr(0);
+        // symmetric
+        for r in 0..a.nrows {
+            for (idx, &c) in a.row_cols(r).iter().enumerate() {
+                let v = a.row_vals(r)[idx];
+                let back = a.row_cols(c).iter().position(|&cc| cc == r).unwrap();
+                assert_eq!(a.row_vals(c)[back], v);
+            }
+        }
+    }
+
+    #[test]
+    fn diag_dominance() {
+        let p = MatrixPreset::fault_639_like().scaled(1000);
+        let a = p.to_csr(7);
+        for r in 0..a.nrows {
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for (i, &c) in a.row_cols(r).iter().enumerate() {
+                if c == r {
+                    diag = a.row_vals(r)[i];
+                } else {
+                    off += a.row_vals(r)[i].abs();
+                }
+            }
+            assert!(diag > off, "row {r} not diagonally dominant");
+        }
+    }
+
+    #[test]
+    fn paper_set_sizes() {
+        let set = MatrixPreset::paper_set();
+        assert_eq!(set.len(), 4);
+        for p in &set {
+            let nnz = p.approx_nnz();
+            assert!(
+                (6_000_000..40_000_000).contains(&nnz),
+                "{}: nnz {nnz} far from 25M",
+                p.name
+            );
+        }
+    }
+
+    #[test]
+    fn scattered_reaches_far_columns() {
+        let p = MatrixPreset::cage14_like().scaled(10);
+        let mut far = 0;
+        let mut total = 0;
+        for row in (0..p.n).step_by(997) {
+            for c in p.row_cols(row, 1) {
+                total += 1;
+                if (c as i64 - row as i64).unsigned_abs() as usize > p.n / 10 {
+                    far += 1;
+                }
+            }
+        }
+        assert!(far * 100 / total >= 5, "far fraction only {far}/{total}");
+    }
+
+    #[test]
+    fn banded_stays_near_diagonal() {
+        let p = MatrixPreset::dielfilterv2clx_like().scaled(10);
+        for row in (0..p.n).step_by(1003) {
+            for c in p.row_cols(row, 1) {
+                let d = (c as i64 - row as i64).unsigned_abs() as usize;
+                assert!(d <= p.band * 8, "row {row} col {c} distance {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_preserves_shape() {
+        let p = MatrixPreset::curlcurl_4_like();
+        let s = p.scaled(100);
+        assert_eq!(s.kind, p.kind);
+        assert_eq!(s.deg, p.deg);
+        assert!(s.n <= p.n / 99);
+    }
+}

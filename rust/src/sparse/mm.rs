@@ -1,0 +1,168 @@
+//! MatrixMarket reader: when the real SuiteSparse files are available
+//! (e.g. `dielFilterV2clx.mtx`), the figure harness can run on them
+//! instead of the synthetic analogs (`--mtx path`). Supports the
+//! `coordinate` format with `real`/`integer`/`pattern` fields and
+//! `general`/`symmetric` symmetry.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::csr::CsrMatrix;
+
+/// Read a MatrixMarket `.mtx` file into CSR.
+pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut lines = BufReader::new(f).lines();
+
+    let header = lines
+        .next()
+        .context("empty file")?
+        .context("read header")?;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 4 || !h[0].starts_with("%%MatrixMarket") || h[1] != "matrix" {
+        bail!("not a MatrixMarket matrix header: {header}");
+    }
+    if h[2] != "coordinate" {
+        bail!("only coordinate format supported, got {}", h[2]);
+    }
+    let field = h[3];
+    let symmetry = h.get(4).copied().unwrap_or("general");
+    if !matches!(field, "real" | "integer" | "pattern") {
+        bail!("unsupported field type {field}");
+    }
+    if !matches!(symmetry, "general" | "symmetric") {
+        bail!("unsupported symmetry {symmetry}");
+    }
+
+    // Skip comments, read the size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line.context("read line")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.context("missing size line")?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|x| x.parse().context("parse dims"))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("bad size line: {size_line}");
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); nrows];
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line.context("read entry")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("row")?.parse()?;
+        let j: usize = it.next().context("col")?.parse()?;
+        let v: f64 = match field {
+            "pattern" => 1.0,
+            _ => it.next().context("val")?.parse()?,
+        };
+        if i == 0 || j == 0 || i > nrows || j > ncols {
+            bail!("entry out of range: {t}");
+        }
+        rows[i - 1].push((j - 1, v));
+        if symmetry == "symmetric" && i != j {
+            rows[j - 1].push((i - 1, v));
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("expected {nnz} entries, found {seen}");
+    }
+    Ok(CsrMatrix::from_rows(nrows, ncols, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(content: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "sdde_mm_test_{}.mtx",
+            std::process::id() as u64 + content.len() as u64
+        ));
+        let mut f = File::create(&p).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn reads_general_real() {
+        let p = write_tmp(
+            "%%MatrixMarket matrix coordinate real general\n\
+             % comment\n\
+             3 3 4\n\
+             1 1 2.0\n\
+             1 3 1.0\n\
+             2 2 3.0\n\
+             3 1 4.0\n",
+        );
+        let a = read_matrix_market(&p).unwrap();
+        assert_eq!(a.nrows, 3);
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.spmv(&[1.0, 1.0, 1.0]), vec![3.0, 3.0, 4.0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn reads_symmetric_expands() {
+        let p = write_tmp(
+            "%%MatrixMarket matrix coordinate real symmetric\n\
+             2 2 2\n\
+             1 1 1.0\n\
+             2 1 5.0\n",
+        );
+        let a = read_matrix_market(&p).unwrap();
+        assert_eq!(a.nnz(), 3); // off-diag mirrored
+        assert_eq!(a.spmv(&[1.0, 1.0]), vec![6.0, 5.0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn reads_pattern() {
+        let p = write_tmp(
+            "%%MatrixMarket matrix coordinate pattern general\n\
+             2 2 2\n\
+             1 2\n\
+             2 1\n",
+        );
+        let a = read_matrix_market(&p).unwrap();
+        assert_eq!(a.spmv(&[3.0, 4.0]), vec![4.0, 3.0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = write_tmp("hello world\n");
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_nnz() {
+        let p = write_tmp(
+            "%%MatrixMarket matrix coordinate real general\n\
+             2 2 2\n\
+             1 1 1.0\n",
+        );
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,15 @@
+//! Sparse-matrix substrate: storage ([`csr`]), row-wise partitioning
+//! ([`partition`]), synthetic SuiteSparse analogs ([`gen`]), MatrixMarket
+//! I/O ([`mm`]) and SDDE-driven communication-package formation
+//! ([`commpkg`]) — the paper's motivating use case (§II).
+
+pub mod commpkg;
+pub mod csr;
+pub mod gen;
+pub mod mm;
+pub mod partition;
+
+pub use commpkg::{form_commpkg, form_commpkg_sizes, CommPkg, SpmvPattern};
+pub use csr::{BlockEll, CsrMatrix};
+pub use gen::MatrixPreset;
+pub use partition::Partition;

@@ -1,0 +1,103 @@
+//! Row-wise block partition (paper §II-A): `n` rows split contiguously
+//! across `nparts` processes; the first `n % nparts` parts hold one extra
+//! row. Owner lookup is O(1).
+
+/// Contiguous row-block partition of `n` rows over `nparts` parts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub n: usize,
+    pub nparts: usize,
+}
+
+impl Partition {
+    pub fn new(n: usize, nparts: usize) -> Partition {
+        assert!(nparts >= 1);
+        Partition { n, nparts }
+    }
+
+    /// Rows held by part `p`.
+    pub fn size(&self, p: usize) -> usize {
+        self.n / self.nparts + usize::from(p < self.n % self.nparts)
+    }
+
+    /// First global row of part `p`.
+    pub fn start(&self, p: usize) -> usize {
+        let q = self.n / self.nparts;
+        let r = self.n % self.nparts;
+        p * q + p.min(r)
+    }
+
+    /// Global row range `[start, end)` of part `p`.
+    pub fn range(&self, p: usize) -> (usize, usize) {
+        (self.start(p), self.start(p) + self.size(p))
+    }
+
+    /// Owner of global row `i`.
+    pub fn owner(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        let q = self.n / self.nparts;
+        let r = self.n % self.nparts;
+        let cut = r * (q + 1);
+        if q == 0 {
+            // more parts than rows: rows 0..r map 1:1, rest are empty
+            i
+        } else if i < cut {
+            i / (q + 1)
+        } else {
+            r + (i - cut) / q
+        }
+    }
+
+    /// Local index of global row `i` within its owner.
+    pub fn to_local(&self, i: usize) -> usize {
+        i - self.start(self.owner(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split() {
+        let p = Partition::new(12, 4);
+        for q in 0..4 {
+            assert_eq!(p.size(q), 3);
+            assert_eq!(p.range(q), (q * 3, q * 3 + 3));
+        }
+        assert_eq!(p.owner(0), 0);
+        assert_eq!(p.owner(11), 3);
+    }
+
+    #[test]
+    fn uneven_split_consistent() {
+        for (n, parts) in [(13usize, 4usize), (7, 3), (100, 7), (5, 8), (1, 1)] {
+            let p = Partition::new(n, parts);
+            // sizes sum to n, ranges tile [0, n)
+            let total: usize = (0..parts).map(|q| p.size(q)).sum();
+            assert_eq!(total, n, "n={n} parts={parts}");
+            let mut next = 0;
+            for q in 0..parts {
+                let (s, e) = p.range(q);
+                assert_eq!(s, next);
+                next = e;
+            }
+            assert_eq!(next, n);
+            // owner agrees with ranges
+            for i in 0..n {
+                let o = p.owner(i);
+                let (s, e) = p.range(o);
+                assert!(s <= i && i < e, "row {i} owner {o} range ({s},{e})");
+                assert_eq!(p.to_local(i), i - s);
+            }
+        }
+    }
+
+    #[test]
+    fn more_parts_than_rows() {
+        let p = Partition::new(3, 5);
+        assert_eq!(p.size(0), 1);
+        assert_eq!(p.size(3), 0);
+        assert_eq!(p.owner(2), 2);
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal CLI argument parser (the offline vendor mirror has no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, bare `--switch`es and positional
+//! arguments. Unknown flags are collected and can be rejected by callers.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.entry(stripped.to_string()).or_default().push(v);
+                } else {
+                    out.flags.entry(stripped.to_string()).or_default().push(String::new());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Last value of `--key` (flags may repeat; last wins).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// `--key` present at all (switch)?
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).filter(|s| !s.is_empty()).unwrap_or(default)
+    }
+
+    /// Parse `--key` as T or fall back.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list value.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|s| {
+            s.split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn kv_styles() {
+        let a = parse("figures --fig 7 --quick --out=results --nodes 2,4,8");
+        assert_eq!(a.positional, vec!["figures"]);
+        assert_eq!(a.get("fig"), Some("7"));
+        assert!(a.has("quick"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(
+            a.get_list("nodes").unwrap(),
+            vec!["2".to_string(), "4".into(), "8".into()]
+        );
+    }
+
+    #[test]
+    fn parsed_and_defaults() {
+        let a = parse("--ppn 16");
+        assert_eq!(a.get_parsed("ppn", 32usize), 16);
+        assert_eq!(a.get_parsed("seed", 42u64), 42);
+        assert_eq!(a.get_or("mpi", "mvapich2"), "mvapich2");
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("--quick --fig 5");
+        assert!(a.has("quick"));
+        assert_eq!(a.get("fig"), Some("5"));
+    }
+}

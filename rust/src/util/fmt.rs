@@ -1,0 +1,95 @@
+//! Human-readable formatting of times, byte counts and aligned tables.
+
+/// Format a virtual-time duration in nanoseconds with an adaptive unit.
+pub fn ns(t: u64) -> String {
+    let t = t as f64;
+    if t < 1e3 {
+        format!("{t:.0} ns")
+    } else if t < 1e6 {
+        format!("{:.2} us", t / 1e3)
+    } else if t < 1e9 {
+        format!("{:.3} ms", t / 1e6)
+    } else {
+        format!("{:.4} s", t / 1e9)
+    }
+}
+
+/// Format a byte count with an adaptive unit.
+pub fn bytes(b: u64) -> String {
+    let b = b as f64;
+    if b < 1024.0 {
+        format!("{b:.0} B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1} MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+/// Render rows as an aligned plain-text table (first row = header).
+pub fn table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let mut out = String::new();
+    for (ri, r) in rows.iter().enumerate() {
+        for (i, c) in r.iter().enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(c);
+            if i + 1 < r.len() {
+                for _ in 0..widths[i].saturating_sub(c.len()) {
+                    out.push(' ');
+                }
+            }
+        }
+        out.push('\n');
+        if ri == 0 {
+            let total: usize = widths.iter().sum::<usize>() + 2 * (cols - 1);
+            for _ in 0..total {
+                out.push('-');
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ns_units() {
+        assert_eq!(ns(500), "500 ns");
+        assert_eq!(ns(1_500), "1.50 us");
+        assert_eq!(ns(2_500_000), "2.500 ms");
+        assert_eq!(ns(3_000_000_000), "3.0000 s");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(10), "10 B");
+        assert_eq!(bytes(2048), "2.0 KiB");
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(&[
+            vec!["a".into(), "bb".into()],
+            vec!["ccc".into(), "d".into()],
+        ]);
+        assert!(t.contains("a    bb"));
+        assert!(t.contains("ccc  d"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities (offline build: no external crates).
+
+pub mod args;
+pub mod fmt;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use args::Args;
+pub use rng::Rng;

@@ -1,0 +1,128 @@
+//! Minimal property-testing harness (the offline vendor mirror has no
+//! `proptest`, so we roll a seeded-case runner with failure reporting and
+//! a simple halving shrinker for sized cases).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(100, |rng| {
+//!     let n = 1 + rng.usize_below(64);
+//!     /* build inputs from rng, assert invariant, return Ok(()) or Err(msg) */
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` randomized cases of `f`. Panics with the failing seed on the
+/// first failure so the case can be replayed with [`replay`].
+pub fn check<F>(cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = std::env::var("SDDE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property failed (case {case}, seed {seed}): {msg}\n\
+                 replay with SDDE_PROP_SEED={seed} and 1 case"
+            );
+        }
+    }
+}
+
+/// Replay a single seed (for debugging a failure reported by [`check`]).
+pub fn replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property failed (seed {seed}): {msg}");
+    }
+}
+
+/// Run a *sized* property at shrinking sizes: tries `size` first and on
+/// failure retries smaller sizes to report the smallest failing size.
+pub fn check_sized<F>(cases: u64, max_size: usize, mut f: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let base = std::env::var("SDDE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xBEEF_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B9));
+        let size = 1 + (Rng::new(seed).usize_below(max_size));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng, size) {
+            // Shrink: halve the size until it passes; report smallest failure.
+            let mut failing = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(seed);
+                match f(&mut rng, s) {
+                    Err(m) => failing = (s, m),
+                    Ok(()) => break,
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            panic!(
+                "sized property failed (case {case}, seed {seed}, smallest failing size {}): {}",
+                failing.0, failing.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |rng| {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(50, |rng| {
+            if rng.below(10) < 9 {
+                Ok(())
+            } else {
+                Err("hit the 10% case".into())
+            }
+        });
+    }
+
+    #[test]
+    fn sized_property_passes() {
+        check_sized(20, 128, |rng, size| {
+            let mut v: Vec<u64> = (0..size).map(|_| rng.below(1000)).collect();
+            v.sort_unstable();
+            for w in v.windows(2) {
+                if w[0] > w[1] {
+                    return Err("sort broken".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

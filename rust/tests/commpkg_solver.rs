@@ -1,0 +1,148 @@
+//! Integration: SDDE-formed communication packages drive real distributed
+//! solves on the paper-matrix analogs, and the PJRT runtime round-trips
+//! the AOT artifacts (the rust half of the L1/L2/L3 composition).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use sdde::mpi::World;
+use sdde::mpix::{MpixComm, MpixInfo, SddeAlgorithm};
+use sdde::runtime::{Runtime, XlaLocal};
+use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+use sdde::solver::{cg, jacobi, CsrLocal, DistMatrix, LocalSpmv};
+use sdde::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
+
+/// Jacobi on every paper-matrix analog (scaled), pattern formed by every
+/// SDDE algorithm — residuals must agree across algorithms bit-for-bit
+/// (they form identical packages).
+#[test]
+fn jacobi_converges_all_matrices_all_algorithms() {
+    for preset in MatrixPreset::paper_set() {
+        let preset = preset.scaled(3000);
+        let topo = Topology::quartz(2, 4);
+        let part = Partition::new(preset.n, topo.nranks());
+        let mut baseline: Option<Vec<f64>> = None;
+        for algo in SddeAlgorithm::VARIABLE {
+            let preset2 = preset.clone();
+            let world = World::new(topo.clone(), CostModel::preset(MpiFlavor::Mvapich2));
+            let out = world.run(move |c| {
+                let preset = preset2.clone();
+                async move {
+                    let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                    let info = MpixInfo::with_algorithm(algo);
+                    let pat = SpmvPattern::build(&preset, part, c.rank(), 4);
+                    let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+                    let a = DistMatrix::build(&preset, part, c.rank(), 4, pkg);
+                    let b = vec![1.0; a.local_n()];
+                    let (_, hist) = jacobi(&c, &a, &b, &CsrLocal(&a.local), 25, 1.0).await;
+                    hist
+                }
+            });
+            let hist = out.results[0].clone();
+            assert!(
+                hist.last().unwrap() / hist[0] < 1e-5,
+                "{} with {algo:?}: {hist:?}",
+                preset.name
+            );
+            match &baseline {
+                None => baseline = Some(hist),
+                Some(b) => assert_eq!(
+                    b, &hist,
+                    "{}: {algo:?} changed numerics",
+                    preset.name
+                ),
+            }
+        }
+    }
+}
+
+/// The XLA artifact computes the same SpMV as the rust ELL reference
+/// (requires `make artifacts`; run as part of `make test`).
+#[test]
+fn xla_artifact_matches_ell_reference() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/manifest.txt missing (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::load(dir).expect("load artifacts");
+    let preset = MatrixPreset::poisson2d(16, 16);
+    let a = preset.to_csr(0);
+    let width = a.max_row_nnz();
+    let ell = a.to_block_ell(128, width);
+    let xlen_needed = ell.ncols;
+    let x: Vec<f64> = (0..xlen_needed).map(|i| (i % 17) as f64 - 8.0).collect();
+    let expect: Vec<f32> = {
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        ell.spmv_ref(&xf)
+    };
+    let xla = XlaLocal::new(&rt, ell.clone()).expect("artifact fits");
+    let got = xla.apply(&x);
+    assert_eq!(got.len(), ell.nrows);
+    for i in 0..ell.nrows {
+        assert!(
+            (got[i] - expect[i] as f64).abs() < 1e-3,
+            "row {i}: {} vs {}",
+            got[i],
+            expect[i]
+        );
+    }
+}
+
+/// dot artifact round-trip.
+#[test]
+fn xla_dot_artifact() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let rt = Runtime::load(dir).expect("load artifacts");
+    let n = 256;
+    let a: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01).collect();
+    let b: Vec<f32> = (0..n).map(|i| 1.0 - (i as f32) * 0.005).collect();
+    let got = rt.run_dot(n, &a, &b).expect("dot runs");
+    let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+    assert!((got - want).abs() < 1e-2, "{got} vs {want}");
+}
+
+/// CG through the full stack (smaller than the example; asserts the same
+/// composition in CI).
+#[test]
+fn cg_with_xla_kernel_matches_rust_kernel() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let rt = Rc::new(Runtime::load(dir).expect("load artifacts"));
+    let preset = MatrixPreset::poisson2d(16, 16);
+    let topo = Topology::quartz(1, 4);
+    let part = Partition::new(preset.n, topo.nranks());
+    let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
+    let rt2 = rt.clone();
+    let out = world.run(move |c| {
+        let rt = rt2.clone();
+        let preset = MatrixPreset::poisson2d(16, 16);
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let info = MpixInfo::with_algorithm(SddeAlgorithm::NonBlocking);
+            let pat = SpmvPattern::build(&preset, part, c.rank(), 0);
+            let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+            let a = DistMatrix::build(&preset, part, c.rank(), 0, pkg);
+            let width = a.local.max_row_nnz().max(1);
+            let ell = a.local.to_block_ell(128, width);
+            let xla = XlaLocal::new(&rt, ell).expect("fits");
+            let b = vec![1.0; a.local_n()];
+            let (x1, h1) = cg(&c, &a, &b, &xla, 300, 1e-8).await;
+            let (x2, _) = cg(&c, &a, &b, &CsrLocal(&a.local), 300, 1e-8).await;
+            (x1, x2, h1)
+        }
+    });
+    for (x1, x2, h1) in &out.results {
+        assert!(h1.last().unwrap() / h1[0] < 1e-7);
+        for (a, b) in x1.iter().zip(x2) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Smoke tests of the figure harness at reduced scale: the paper's
+//! *qualitative* claims must hold in the simulator (who wins, where, and
+//! the red-dot reduction) without running the multi-minute full sweep.
+
+use sdde::bench::{render_figure, run_sweep, write_csv, FigureId, SweepConfig, Variant};
+use sdde::mpix::SddeAlgorithm;
+use sdde::sparse::MatrixPreset;
+
+fn quick(fig: FigureId, div: usize, nodes: Vec<usize>) -> SweepConfig {
+    let mut cfg = SweepConfig::quick(fig, div);
+    cfg.nodes = nodes;
+    cfg
+}
+
+#[test]
+fn fig7_shape_locality_wins_on_high_message_matrix() {
+    // cage14-like at the largest quick scale: a locality-aware variant
+    // must beat both standard variants (paper §V: up to 20x at scale).
+    let mut cfg = quick(FigureId::Fig7, 64, vec![8]);
+    cfg.ppn = 16;
+    cfg.matrices = vec![MatrixPreset::cage14_like().scaled(64)];
+    let pts = run_sweep(&cfg);
+    let t = |name: &str| pts.iter().find(|p| p.algo == name).unwrap().time_ns;
+    let best_std = t("personalized").min(t("nonblocking"));
+    let best_loc = t("loc-personalized").min(t("loc-nonblocking"));
+    assert!(
+        best_loc < best_std,
+        "locality-aware {best_loc} not faster than standard {best_std}"
+    );
+}
+
+#[test]
+fn fig7_shape_locality_loses_on_low_message_matrix() {
+    // dielFilterV2clx-like: the standard non-blocking method should win
+    // (paper §V: "incurring slowdown for matrices that require few
+    // messages").
+    let mut cfg = quick(FigureId::Fig7, 64, vec![8]);
+    cfg.ppn = 16;
+    cfg.matrices = vec![MatrixPreset::dielfilterv2clx_like().scaled(64)];
+    let pts = run_sweep(&cfg);
+    let t = |name: &str| pts.iter().find(|p| p.algo == name).unwrap().time_ns;
+    let best_std = t("personalized").min(t("nonblocking"));
+    let best_loc = t("loc-personalized").min(t("loc-nonblocking"));
+    assert!(
+        best_std < best_loc,
+        "standard {best_std} should beat locality-aware {best_loc} on dielFilter-like"
+    );
+}
+
+#[test]
+fn red_dots_aggregated_bounded_by_nodes() {
+    let mut cfg = quick(FigureId::Fig5, 128, vec![4, 8]);
+    cfg.matrices = vec![MatrixPreset::cage14_like().scaled(128)];
+    cfg.algos = vec![
+        SddeAlgorithm::NonBlocking,
+        SddeAlgorithm::LocalityNonBlocking,
+    ];
+    let pts = run_sweep(&cfg);
+    for p in &pts {
+        if p.algo == "loc-nonblocking" {
+            assert!(
+                p.max_internode < p.nodes as u64,
+                "aggregated count {} at {} nodes",
+                p.max_internode,
+                p.nodes
+            );
+        }
+    }
+    // aggregation reduced the count vs the standard method at same scale
+    for nodes in [4usize, 8] {
+        let std = pts
+            .iter()
+            .find(|p| p.nodes == nodes && p.algo == "nonblocking")
+            .unwrap()
+            .max_internode;
+        let agg = pts
+            .iter()
+            .find(|p| p.nodes == nodes && p.algo == "loc-nonblocking")
+            .unwrap()
+            .max_internode;
+        assert!(agg <= std, "nodes={nodes}: agg {agg} > std {std}");
+    }
+}
+
+#[test]
+fn const_and_variable_variants_both_run_rma_only_in_const() {
+    let cfg5 = quick(FigureId::Fig5, 256, vec![2]);
+    let pts5 = run_sweep(&cfg5);
+    assert!(pts5.iter().any(|p| p.algo == "rma"));
+    let cfg7 = quick(FigureId::Fig7, 256, vec![2]);
+    let pts7 = run_sweep(&cfg7);
+    assert!(!pts7.iter().any(|p| p.algo == "rma"));
+}
+
+#[test]
+fn render_and_csv_pipeline() {
+    let mut cfg = quick(FigureId::Fig6, 256, vec![2]);
+    cfg.matrices.truncate(1);
+    let pts = run_sweep(&cfg);
+    let rendered = render_figure(&FigureId::Fig6.title(), &pts);
+    assert!(rendered.contains("Figure 6"));
+    assert!(rendered.contains("openmpi"));
+    assert!(rendered.contains("speedup"));
+    let path = std::env::temp_dir().join("sdde_fig_smoke.csv");
+    write_csv(&path, &pts).unwrap();
+    let csv = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(csv.lines().count(), pts.len() + 1);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn openmpi_and_mvapich_differ_but_agree_on_ranking_at_scale() {
+    // Same workload, two MPI presets: absolute times differ, the winner at
+    // the largest scale is stable (paper: consistent across both MPIs).
+    let mk = |fig| {
+        let mut cfg = quick(fig, 64, vec![8]);
+        cfg.ppn = 16;
+        cfg.matrices = vec![MatrixPreset::cage14_like().scaled(64)];
+        run_sweep(&cfg)
+    };
+    let mv = mk(FigureId::Fig7);
+    let om = mk(FigureId::Fig8);
+    let winner = |pts: &[sdde::bench::Point]| {
+        pts.iter()
+            .min_by_key(|p| p.time_ns)
+            .map(|p| p.algo)
+            .unwrap()
+    };
+    let (wm, wo) = (winner(&mv), winner(&om));
+    assert!(
+        wm.starts_with("loc-") && wo.starts_with("loc-"),
+        "winners: mvapich2={wm} openmpi={wo}"
+    );
+    // absolute times differ between presets
+    let tm: u64 = mv.iter().map(|p| p.time_ns).sum();
+    let to: u64 = om.iter().map(|p| p.time_ns).sum();
+    assert_ne!(tm, to);
+}
+
+#[test]
+fn variant_enum_consistency() {
+    assert_eq!(FigureId::Fig5.variant(), Variant::ConstSize);
+    assert_eq!(FigureId::Fig7.variant(), Variant::Variable);
+}

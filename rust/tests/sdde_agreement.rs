@@ -1,0 +1,427 @@
+//! Integration tests: every SDDE algorithm must produce the exact result a
+//! sequential oracle computes from the global pattern (paper invariant 1 in
+//! DESIGN.md), across topologies, region kinds and pattern densities.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use sdde::mpi::World;
+use sdde::mpix::{
+    alltoall_crs, alltoallv_crs, CrsArgs, CrsResult, CrsvArgs, CrsvResult, IntraAlgo, MpixComm,
+    MpixInfo, SddeAlgorithm,
+};
+use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+use sdde::util::Rng;
+
+/// Random sparse send pattern: for each rank, a sorted set of distinct
+/// destinations with variable-length value lists.
+fn random_pattern(nranks: usize, max_deg: usize, max_len: usize, seed: u64) -> Vec<CrsvArgs> {
+    let mut rng = Rng::new(seed);
+    (0..nranks)
+        .map(|p| {
+            let deg = rng.usize_below(max_deg.min(nranks) + 1);
+            let dest = rng.sample_distinct(nranks, deg);
+            let sendcounts: Vec<usize> = dest.iter().map(|_| 1 + rng.usize_below(max_len)).collect();
+            let mut sendvals = Vec::new();
+            for (i, &d) in dest.iter().enumerate() {
+                for k in 0..sendcounts[i] {
+                    sendvals.push((p * 1_000_000 + d * 1_000 + k) as u64);
+                }
+            }
+            CrsvArgs {
+                dest,
+                sendcounts,
+                sendvals,
+            }
+        })
+        .collect()
+}
+
+/// Sequential oracle: transpose the global send pattern.
+fn oracle_v(pattern: &[CrsvArgs]) -> Vec<CrsvResult> {
+    let n = pattern.len();
+    let mut recv: Vec<BTreeMap<usize, Vec<u64>>> = vec![BTreeMap::new(); n];
+    for (p, args) in pattern.iter().enumerate() {
+        for (i, &d) in args.dest.iter().enumerate() {
+            recv[d].insert(p, args.vals(i).to_vec());
+        }
+    }
+    recv.into_iter()
+        .map(|m| CrsvResult::from_pairs(m.into_iter().collect()))
+        .collect()
+}
+
+fn run_v(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    intra: IntraAlgo,
+    pattern: Vec<CrsvArgs>,
+) -> Vec<CrsvResult> {
+    let pattern = Rc::new(pattern);
+    let world = World::new(topo, CostModel::preset(flavor));
+    let out = world.run(move |c| {
+        let pattern = pattern.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), region);
+            let info = MpixInfo {
+                algorithm: algo,
+                region,
+                intra,
+                ..MpixInfo::default()
+            };
+            alltoallv_crs(&mx, &info, &pattern[c.rank()]).await.unwrap()
+        }
+    });
+    out.results
+}
+
+fn check_algo_v(topo: Topology, algo: SddeAlgorithm, seed: u64) {
+    let n = topo.nranks();
+    let pattern = random_pattern(n, n / 2 + 2, 6, seed);
+    let expect = oracle_v(&pattern);
+    for flavor in [MpiFlavor::Mvapich2, MpiFlavor::OpenMpi] {
+        let got = run_v(
+            topo.clone(),
+            flavor,
+            algo,
+            RegionKind::Node,
+            IntraAlgo::Personalized,
+            pattern.clone(),
+        );
+        assert_eq!(got, expect, "algo={algo:?} flavor={flavor:?} seed={seed}");
+    }
+}
+
+#[test]
+fn personalized_matches_oracle() {
+    check_algo_v(Topology::quartz(2, 4), SddeAlgorithm::Personalized, 1);
+    check_algo_v(Topology::quartz(4, 8), SddeAlgorithm::Personalized, 2);
+}
+
+#[test]
+fn nonblocking_matches_oracle() {
+    check_algo_v(Topology::quartz(2, 4), SddeAlgorithm::NonBlocking, 3);
+    check_algo_v(Topology::quartz(4, 8), SddeAlgorithm::NonBlocking, 4);
+}
+
+#[test]
+fn locality_personalized_matches_oracle() {
+    check_algo_v(Topology::quartz(2, 4), SddeAlgorithm::LocalityPersonalized, 5);
+    check_algo_v(Topology::quartz(4, 8), SddeAlgorithm::LocalityPersonalized, 6);
+    check_algo_v(Topology::quartz(3, 5), SddeAlgorithm::LocalityPersonalized, 7);
+}
+
+#[test]
+fn locality_nonblocking_matches_oracle() {
+    check_algo_v(Topology::quartz(2, 4), SddeAlgorithm::LocalityNonBlocking, 8);
+    check_algo_v(Topology::quartz(4, 8), SddeAlgorithm::LocalityNonBlocking, 9);
+    check_algo_v(Topology::quartz(3, 5), SddeAlgorithm::LocalityNonBlocking, 10);
+}
+
+#[test]
+fn locality_socket_regions_match_oracle() {
+    let topo = Topology::quartz(2, 8);
+    let pattern = random_pattern(topo.nranks(), 6, 4, 11);
+    let expect = oracle_v(&pattern);
+    for algo in [
+        SddeAlgorithm::LocalityPersonalized,
+        SddeAlgorithm::LocalityNonBlocking,
+    ] {
+        let got = run_v(
+            topo.clone(),
+            MpiFlavor::Mvapich2,
+            algo,
+            RegionKind::Socket,
+            IntraAlgo::Personalized,
+            pattern.clone(),
+        );
+        assert_eq!(got, expect, "algo={algo:?} socket regions");
+    }
+}
+
+#[test]
+fn locality_alltoallv_intra_matches_oracle() {
+    let topo = Topology::quartz(2, 6);
+    let pattern = random_pattern(topo.nranks(), 8, 4, 12);
+    let expect = oracle_v(&pattern);
+    for algo in [
+        SddeAlgorithm::LocalityPersonalized,
+        SddeAlgorithm::LocalityNonBlocking,
+    ] {
+        let got = run_v(
+            topo.clone(),
+            MpiFlavor::Mvapich2,
+            algo,
+            RegionKind::Node,
+            IntraAlgo::Alltoallv,
+            pattern.clone(),
+        );
+        assert_eq!(got, expect, "algo={algo:?} intra=alltoallv");
+    }
+}
+
+#[test]
+fn empty_pattern_all_algorithms() {
+    let topo = Topology::quartz(2, 3);
+    let pattern: Vec<CrsvArgs> = (0..topo.nranks()).map(|_| CrsvArgs::default()).collect();
+    let expect = oracle_v(&pattern);
+    for algo in SddeAlgorithm::VARIABLE {
+        let got = run_v(
+            topo.clone(),
+            MpiFlavor::OpenMpi,
+            algo,
+            RegionKind::Node,
+            IntraAlgo::Personalized,
+            pattern.clone(),
+        );
+        assert_eq!(got, expect, "algo={algo:?} empty");
+    }
+}
+
+#[test]
+fn dense_pattern_all_algorithms() {
+    // Everyone sends to everyone — stresses queue matching and aggregation.
+    let topo = Topology::quartz(2, 4);
+    let n = topo.nranks();
+    let pattern: Vec<CrsvArgs> = (0..n)
+        .map(|p| CrsvArgs {
+            dest: (0..n).collect(),
+            sendcounts: vec![2; n],
+            sendvals: (0..n).flat_map(|d| vec![(p * 100 + d) as u64, 7]).collect(),
+        })
+        .collect();
+    let expect = oracle_v(&pattern);
+    for algo in SddeAlgorithm::VARIABLE {
+        let got = run_v(
+            topo.clone(),
+            MpiFlavor::Mvapich2,
+            algo,
+            RegionKind::Node,
+            IntraAlgo::Personalized,
+            pattern.clone(),
+        );
+        assert_eq!(got, expect, "algo={algo:?} dense");
+    }
+}
+
+#[test]
+fn known_recv_nnz_skips_allreduce() {
+    let topo = Topology::quartz(2, 4);
+    let n = topo.nranks();
+    let pattern = random_pattern(n, 4, 3, 13);
+    let expect = oracle_v(&pattern);
+    let recv_nnz: Vec<usize> = expect.iter().map(|r| r.recv_nnz()).collect();
+    let pattern = Rc::new(pattern);
+    let recv_nnz = Rc::new(recv_nnz);
+    let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
+    let out = world.run(move |c| {
+        let pattern = pattern.clone();
+        let recv_nnz = recv_nnz.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let info = MpixInfo {
+                algorithm: SddeAlgorithm::Personalized,
+                known_recv_nnz: Some(recv_nnz[c.rank()]),
+                ..MpixInfo::default()
+            };
+            alltoallv_crs(&mx, &info, &pattern[c.rank()]).await.unwrap()
+        }
+    });
+    assert_eq!(out.results, expect);
+    assert_eq!(out.counters.allreduces, 0, "allreduce should be skipped");
+}
+
+// ---------------------------------------------------------------------------
+// Constant-size API (MPIX_Alltoall_crs) — including RMA.
+// ---------------------------------------------------------------------------
+
+fn random_const_pattern(nranks: usize, max_deg: usize, sendcount: usize, seed: u64) -> Vec<CrsArgs> {
+    let mut rng = Rng::new(seed);
+    (0..nranks)
+        .map(|p| {
+            let deg = rng.usize_below(max_deg.min(nranks) + 1);
+            let dest = rng.sample_distinct(nranks, deg);
+            let sendvals = dest
+                .iter()
+                .flat_map(|&d| (0..sendcount).map(move |k| (p * 1000 + d * 10 + k) as u64))
+                .collect();
+            CrsArgs {
+                dest,
+                sendcount,
+                sendvals,
+            }
+        })
+        .collect()
+}
+
+fn oracle_c(pattern: &[CrsArgs], sendcount: usize) -> Vec<CrsResult> {
+    let n = pattern.len();
+    let mut recv: Vec<BTreeMap<usize, Vec<u64>>> = vec![BTreeMap::new(); n];
+    for (p, args) in pattern.iter().enumerate() {
+        for (i, &d) in args.dest.iter().enumerate() {
+            recv[d].insert(p, args.vals(i).to_vec());
+        }
+    }
+    recv.into_iter()
+        .map(|m| {
+            let mut res = CrsResult::default();
+            for (s, v) in m {
+                res.src.push(s);
+                res.recvvals.extend(v);
+            }
+            debug_assert_eq!(res.recvvals.len(), res.src.len() * sendcount);
+            res
+        })
+        .collect()
+}
+
+fn check_algo_c(topo: Topology, algo: SddeAlgorithm, sendcount: usize, seed: u64) {
+    let n = topo.nranks();
+    let pattern = random_const_pattern(n, n / 2 + 2, sendcount, seed);
+    let expect = oracle_c(&pattern, sendcount);
+    let pattern = Rc::new(pattern);
+    let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
+    let out = world.run(move |c| {
+        let pattern = pattern.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let info = MpixInfo::with_algorithm(algo);
+            alltoall_crs(&mx, &info, &pattern[c.rank()]).await.unwrap()
+        }
+    });
+    assert_eq!(out.results, expect, "algo={algo:?} seed={seed}");
+}
+
+#[test]
+fn alltoall_crs_all_algorithms_match_oracle() {
+    // CONST_SIZE = the paper's five plus the locality-RMA extension (§VI).
+    for (i, algo) in SddeAlgorithm::CONST_SIZE.into_iter().enumerate() {
+        check_algo_c(Topology::quartz(2, 4), algo, 1, 20 + i as u64);
+        check_algo_c(Topology::quartz(4, 4), algo, 3, 40 + i as u64);
+    }
+}
+
+#[test]
+fn locality_rma_uneven_regions_and_reuse() {
+    // Wrap-around corresponding ranks + window reuse across calls.
+    let topo = Topology::quartz(3, 5);
+    let n = topo.nranks();
+    let p1 = random_const_pattern(n, 6, 2, 90);
+    let p2 = random_const_pattern(n, 6, 2, 91);
+    let e1 = oracle_c(&p1, 2);
+    let e2 = oracle_c(&p2, 2);
+    let p1 = Rc::new(p1);
+    let p2 = Rc::new(p2);
+    let world = World::new(topo, CostModel::preset(MpiFlavor::OpenMpi));
+    let out = world.run(move |c| {
+        let p1 = p1.clone();
+        let p2 = p2.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let info = MpixInfo::with_algorithm(SddeAlgorithm::LocalityRma);
+            let r1 = alltoall_crs(&mx, &info, &p1[c.rank()]).await.unwrap();
+            let r2 = alltoall_crs(&mx, &info, &p2[c.rank()]).await.unwrap();
+            (r1, r2)
+        }
+    });
+    for (rank, (r1, r2)) in out.results.into_iter().enumerate() {
+        assert_eq!(r1, e1[rank], "rank {rank} call 1");
+        assert_eq!(r2, e2[rank], "rank {rank} call 2");
+    }
+}
+
+#[test]
+fn locality_rma_rejected_for_variable() {
+    let world = World::new(
+        Topology::quartz(1, 2),
+        CostModel::preset(MpiFlavor::Mvapich2),
+    );
+    let out = world.run(|c| async move {
+        let mx = MpixComm::new(c.clone(), RegionKind::Node);
+        let info = MpixInfo::with_algorithm(SddeAlgorithm::LocalityRma);
+        alltoallv_crs(&mx, &info, &CrsvArgs::default()).await.is_err()
+    });
+    assert!(out.results.iter().all(|&e| e));
+}
+
+#[test]
+fn rma_window_reuse_across_calls() {
+    let topo = Topology::quartz(2, 2);
+    let n = topo.nranks();
+    let p1 = random_const_pattern(n, 3, 1, 50);
+    let p2 = random_const_pattern(n, 3, 1, 51);
+    let e1 = oracle_c(&p1, 1);
+    let e2 = oracle_c(&p2, 1);
+    let p1 = Rc::new(p1);
+    let p2 = Rc::new(p2);
+    let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
+    let out = world.run(move |c| {
+        let p1 = p1.clone();
+        let p2 = p2.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let info = MpixInfo::with_algorithm(SddeAlgorithm::Rma);
+            let r1 = alltoall_crs(&mx, &info, &p1[c.rank()]).await.unwrap();
+            let r2 = alltoall_crs(&mx, &info, &p2[c.rank()]).await.unwrap();
+            (r1, r2)
+        }
+    });
+    for (rank, (r1, r2)) in out.results.into_iter().enumerate() {
+        assert_eq!(r1, e1[rank]);
+        assert_eq!(r2, e2[rank], "stale window state leaked into call 2");
+    }
+}
+
+#[test]
+fn rma_rejected_for_variable() {
+    let world = World::new(
+        Topology::quartz(1, 2),
+        CostModel::preset(MpiFlavor::Mvapich2),
+    );
+    let out = world.run(|c| async move {
+        let mx = MpixComm::new(c.clone(), RegionKind::Node);
+        let info = MpixInfo::with_algorithm(SddeAlgorithm::Rma);
+        alltoallv_crs(&mx, &info, &CrsvArgs::default()).await.is_err()
+    });
+    assert!(out.results.iter().all(|&e| e));
+}
+
+#[test]
+fn dispatch_resolves_and_matches_oracle() {
+    check_algo_v(Topology::quartz(2, 4), SddeAlgorithm::Dispatch, 60);
+}
+
+#[test]
+fn back_to_back_exchanges_do_not_crosstalk() {
+    // Two SDDE calls in a row with different patterns; tags must isolate.
+    let topo = Topology::quartz(2, 4);
+    let n = topo.nranks();
+    let pa = random_pattern(n, 4, 3, 70);
+    let pb = random_pattern(n, 4, 3, 71);
+    let ea = oracle_v(&pa);
+    let eb = oracle_v(&pb);
+    let pa = Rc::new(pa);
+    let pb = Rc::new(pb);
+    for algo in [SddeAlgorithm::NonBlocking, SddeAlgorithm::LocalityNonBlocking] {
+        let world = World::new(topo.clone(), CostModel::preset(MpiFlavor::Mvapich2));
+        let pa = pa.clone();
+        let pb = pb.clone();
+        let out = world.run(move |c| {
+            let pa = pa.clone();
+            let pb = pb.clone();
+            async move {
+                let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                let info = MpixInfo::with_algorithm(algo);
+                let ra = alltoallv_crs(&mx, &info, &pa[c.rank()]).await.unwrap();
+                let rb = alltoallv_crs(&mx, &info, &pb[c.rank()]).await.unwrap();
+                (ra, rb)
+            }
+        });
+        for (rank, (ra, rb)) in out.results.into_iter().enumerate() {
+            assert_eq!(ra, ea[rank], "algo={algo:?} first call");
+            assert_eq!(rb, eb[rank], "algo={algo:?} second call");
+        }
+    }
+}

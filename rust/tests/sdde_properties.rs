@@ -1,0 +1,263 @@
+//! Property-based tests over randomized topologies and patterns, checking
+//! the DESIGN.md invariants:
+//! 1. agreement with the sequential oracle (all algorithms),
+//! 2. duality (recv pattern == transpose of send pattern),
+//! 3. conservation (Σ sent == Σ received, payloads intact),
+//! 4. determinism (same seed → identical virtual times and counters).
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use sdde::mpi::World;
+use sdde::mpix::{
+    alltoallv_crs, CrsvArgs, CrsvResult, IntraAlgo, MpixComm, MpixInfo, SddeAlgorithm,
+};
+use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+use sdde::util::{prop, Rng};
+
+fn random_topology(rng: &mut Rng) -> Topology {
+    let nodes = 1 + rng.usize_below(5);
+    let ppn = 1 + rng.usize_below(8);
+    Topology::quartz(nodes, ppn)
+}
+
+fn random_pattern(rng: &mut Rng, n: usize) -> Vec<CrsvArgs> {
+    (0..n)
+        .map(|p| {
+            let deg = rng.usize_below(n);
+            let dest = rng.sample_distinct(n, deg);
+            let sendcounts: Vec<usize> = dest.iter().map(|_| 1 + rng.usize_below(5)).collect();
+            let mut sendvals = Vec::new();
+            for (i, &d) in dest.iter().enumerate() {
+                for k in 0..sendcounts[i] {
+                    sendvals.push((p * 100_000 + d * 100 + k) as u64);
+                }
+            }
+            CrsvArgs {
+                dest,
+                sendcounts,
+                sendvals,
+            }
+        })
+        .collect()
+}
+
+fn oracle(pattern: &[CrsvArgs]) -> Vec<CrsvResult> {
+    let n = pattern.len();
+    let mut recv: Vec<BTreeMap<usize, Vec<u64>>> = vec![BTreeMap::new(); n];
+    for (p, args) in pattern.iter().enumerate() {
+        for (i, &d) in args.dest.iter().enumerate() {
+            recv[d].insert(p, args.vals(i).to_vec());
+        }
+    }
+    recv.into_iter()
+        .map(|m| CrsvResult::from_pairs(m.into_iter().collect()))
+        .collect()
+}
+
+fn run(
+    topo: &Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    intra: IntraAlgo,
+    pattern: &[CrsvArgs],
+) -> (Vec<CrsvResult>, u64) {
+    let world = World::new(topo.clone(), CostModel::preset(flavor));
+    let pats = Rc::new(pattern.to_vec());
+    let out = world.run(move |c| {
+        let pats = pats.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), region);
+            let info = MpixInfo {
+                algorithm: algo,
+                region,
+                intra,
+                ..MpixInfo::default()
+            };
+            alltoallv_crs(&mx, &info, &pats[c.rank()]).await.unwrap()
+        }
+    });
+    (out.results, out.end_time)
+}
+
+#[test]
+fn prop_agreement_all_algorithms_random_worlds() {
+    prop::check(30, |rng| {
+        let topo = random_topology(rng);
+        let pattern = random_pattern(rng, topo.nranks());
+        let expect = oracle(&pattern);
+        let region = if rng.chance(0.5) {
+            RegionKind::Node
+        } else {
+            RegionKind::Socket
+        };
+        let intra = if rng.chance(0.5) {
+            IntraAlgo::Personalized
+        } else {
+            IntraAlgo::Alltoallv
+        };
+        let flavor = if rng.chance(0.5) {
+            MpiFlavor::Mvapich2
+        } else {
+            MpiFlavor::OpenMpi
+        };
+        for algo in SddeAlgorithm::VARIABLE {
+            let (got, _) = run(&topo, flavor, algo, region, intra, &pattern);
+            if got != expect {
+                return Err(format!(
+                    "{algo:?}/{region:?}/{intra:?} disagreed with oracle on {}x{}",
+                    topo.nodes, topo.ppn
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_duality_and_conservation() {
+    prop::check(30, |rng| {
+        let topo = random_topology(rng);
+        let n = topo.nranks();
+        let pattern = random_pattern(rng, n);
+        let (results, _) = run(
+            &topo,
+            MpiFlavor::Mvapich2,
+            SddeAlgorithm::LocalityNonBlocking,
+            RegionKind::Node,
+            IntraAlgo::Personalized,
+            &pattern,
+        );
+        // duality: rank d received exactly what rank p addressed to d
+        for (p, args) in pattern.iter().enumerate() {
+            for (i, &d) in args.dest.iter().enumerate() {
+                let r = &results[d];
+                let Some(j) = r.src.iter().position(|&s| s == p) else {
+                    return Err(format!("rank {d} missing message from {p}"));
+                };
+                if r.vals(j) != args.vals(i) {
+                    return Err(format!("payload {p}->{d} corrupted"));
+                }
+            }
+        }
+        // conservation: total words sent == total words received
+        let sent: usize = pattern.iter().map(|a| a.sendvals.len()).sum();
+        let recvd: usize = results.iter().map(|r| r.recv_size()).sum();
+        if sent != recvd {
+            return Err(format!("sent {sent} != received {recvd}"));
+        }
+        // no phantom sources
+        for (d, r) in results.iter().enumerate() {
+            for (j, &s) in r.src.iter().enumerate() {
+                let args = &pattern[s];
+                let Some(i) = args.dest.iter().position(|&x| x == d) else {
+                    return Err(format!("rank {d} got phantom message from {s}"));
+                };
+                if args.vals(i) != r.vals(j) {
+                    return Err(format!("phantom payload {s}->{d}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_determinism() {
+    prop::check(10, |rng| {
+        let topo = random_topology(rng);
+        let pattern = random_pattern(rng, topo.nranks());
+        for algo in [
+            SddeAlgorithm::Personalized,
+            SddeAlgorithm::NonBlocking,
+            SddeAlgorithm::LocalityNonBlocking,
+        ] {
+            let (r1, t1) = run(
+                &topo,
+                MpiFlavor::OpenMpi,
+                algo,
+                RegionKind::Node,
+                IntraAlgo::Personalized,
+                &pattern,
+            );
+            let (r2, t2) = run(
+                &topo,
+                MpiFlavor::OpenMpi,
+                algo,
+                RegionKind::Node,
+                IntraAlgo::Personalized,
+                &pattern,
+            );
+            if t1 != t2 {
+                return Err(format!("{algo:?}: virtual time {t1} != {t2}"));
+            }
+            if r1 != r2 {
+                return Err(format!("{algo:?}: results differ between identical runs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_invalid_args_rejected() {
+    // API-contract checks under random inputs: duplicate destinations and
+    // count mismatches must be rejected, not silently mangled.
+    prop::check(20, |rng| {
+        let n = 4 + rng.usize_below(8);
+        let d = rng.usize_below(n);
+        let bad = CrsvArgs {
+            dest: vec![d, d],
+            sendcounts: vec![1, 1],
+            sendvals: vec![1, 2],
+        };
+        if bad.validate().is_ok() {
+            return Err("duplicate destination accepted".into());
+        }
+        let bad2 = CrsvArgs {
+            dest: vec![d],
+            sendcounts: vec![3],
+            sendvals: vec![1],
+        };
+        if bad2.validate().is_ok() {
+            return Err("count mismatch accepted".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_locality_reduces_or_preserves_internode_count() {
+    // Structural invariant of aggregation: max inter-node user messages of
+    // the locality-aware algorithm never exceed standard + region bound.
+    prop::check(15, |rng| {
+        let nodes = 2 + rng.usize_below(4);
+        let topo = Topology::quartz(nodes, 2 + rng.usize_below(6));
+        let n = topo.nranks();
+        let pattern = random_pattern(rng, n);
+        let count = |algo| {
+            let world = World::new(topo.clone(), CostModel::preset(MpiFlavor::Mvapich2));
+            let pats = Rc::new(pattern.clone());
+            let out = world.run(move |c| {
+                let pats = pats.clone();
+                async move {
+                    let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                    let info = MpixInfo::with_algorithm(algo);
+                    alltoallv_crs(&mx, &info, &pats[c.rank()]).await.unwrap();
+                }
+            });
+            out.counters.max_internode_per_rank()
+        };
+        let agg = count(SddeAlgorithm::LocalityNonBlocking);
+        // aggregated inter-node sends per rank are bounded by nodes-1 per
+        // phase; intra-phase sends are never inter-node
+        if agg > (nodes as u64 - 1) {
+            return Err(format!(
+                "aggregated inter-node count {agg} exceeds nodes-1={}",
+                nodes - 1
+            ));
+        }
+        Ok(())
+    });
+}
