@@ -1,0 +1,37 @@
+//! Bench: steady-state persistent neighbor alltoallv (standard vs
+//! locality-aware vs legacy p2p halo) across iteration counts, topologies
+//! and both MPI presets. Scaled-down by default; `SDDE_BENCH_FULL=1` for
+//! a larger sweep. `sdde neighbor` is the CLI equivalent with CSV output.
+
+use sdde::bench::{render_neighbor_figure, run_neighbor_sweep, NeighborSweepConfig};
+use sdde::simnet::MpiFlavor;
+
+fn main() {
+    let full = std::env::var("SDDE_BENCH_FULL").is_ok();
+    for flavor in [MpiFlavor::Mvapich2, MpiFlavor::OpenMpi] {
+        let cfg = if full {
+            let mut c = NeighborSweepConfig::quick(flavor, 4);
+            c.nodes = vec![2, 4, 8, 16];
+            c.ppn = 16;
+            c.iters = vec![1, 16, 256, 1024];
+            c
+        } else {
+            let mut c = NeighborSweepConfig::quick(flavor, 64);
+            c.nodes = vec![2, 4];
+            c.iters = vec![1, 16, 128];
+            c
+        };
+        let t0 = std::time::Instant::now();
+        let points = run_neighbor_sweep(&cfg);
+        let title = format!(
+            "Neighbor figure: persistent neighbor alltoallv using {}",
+            flavor.name()
+        );
+        println!("{}", render_neighbor_figure(&title, &points));
+        println!(
+            "[bench] {} points in {:.1}s (real)\n",
+            points.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

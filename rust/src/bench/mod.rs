@@ -1,10 +1,15 @@
 //! Figure-regeneration harness: sweeps node counts × matrices × algorithms
 //! × MPI flavors and reports the virtual SDDE time plus the paper's
 //! red-dot metric (max inter-node messages per rank). One [`figures`]
-//! sweep per paper figure (5–8); [`report`] renders tables/CSV.
+//! sweep per paper figure (5–8); [`neighbor`] sweeps the steady-state
+//! persistent neighborhood collectives; [`report`] renders tables/CSV.
 
 pub mod figures;
+pub mod neighbor;
 pub mod report;
 
 pub use figures::{run_sweep, FigureId, Point, SweepConfig, Variant};
-pub use report::{render_figure, write_csv};
+pub use neighbor::{
+    run_halo_once, run_neighbor_sweep, HaloMethod, NeighborPoint, NeighborSweepConfig,
+};
+pub use report::{render_figure, render_neighbor_figure, write_csv, write_neighbor_csv};

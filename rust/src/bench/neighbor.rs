@@ -1,0 +1,253 @@
+//! The neighbor figure: amortized-setup and locality-aggregation wins of
+//! the persistent neighborhood collectives in the *steady state*.
+//!
+//! For each (matrix, topology, halo method, iteration count): form the
+//! pattern once with an SDDE, set the exchange engine up (free for legacy
+//! p2p; plan negotiation for the persistent methods), then run `iters`
+//! halo exchanges and report the per-iteration virtual time plus the
+//! per-iteration max inter-node message count — the steady-state analog of
+//! the paper's red dots. Sweeping `iters` shows where the persistent
+//! setup cost amortizes; sweeping methods shows the locality win.
+
+use std::rc::Rc;
+
+use crate::mpi::World;
+use crate::mpix::{MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
+use crate::simnet::{CostModel, MpiFlavor, RegionKind, Time, Topology};
+use crate::solver::DistMatrix;
+use crate::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
+
+/// Halo-exchange engine under measurement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HaloMethod {
+    /// Legacy per-exchange tagged p2p (the reference path).
+    P2p,
+    /// Persistent neighbor alltoallv, standard p2p channels.
+    Persistent,
+    /// Persistent neighbor alltoallv, locality-aware aggregation.
+    LocalityPersistent,
+}
+
+impl HaloMethod {
+    pub const ALL: [HaloMethod; 3] = [
+        HaloMethod::P2p,
+        HaloMethod::Persistent,
+        HaloMethod::LocalityPersistent,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HaloMethod::P2p => "p2p",
+            HaloMethod::Persistent => "persistent",
+            HaloMethod::LocalityPersistent => "loc-persistent",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HaloMethod> {
+        match s.to_ascii_lowercase().as_str() {
+            "p2p" => Some(HaloMethod::P2p),
+            "persistent" | "std" | "standard" => Some(HaloMethod::Persistent),
+            "loc-persistent" | "locality" | "loc" => Some(HaloMethod::LocalityPersistent),
+            _ => None,
+        }
+    }
+}
+
+/// Sweep configuration for the neighbor figure.
+#[derive(Clone, Debug)]
+pub struct NeighborSweepConfig {
+    pub flavor: MpiFlavor,
+    pub nodes: Vec<usize>,
+    pub ppn: usize,
+    pub matrices: Vec<MatrixPreset>,
+    pub methods: Vec<HaloMethod>,
+    pub iters: Vec<usize>,
+    pub region: RegionKind,
+    /// SDDE algorithm forming the pattern (identical across methods so
+    /// only the steady-state engine differs).
+    pub algo: SddeAlgorithm,
+    pub seed: u64,
+    pub progress: bool,
+}
+
+impl NeighborSweepConfig {
+    /// Quick default: two topologies, three iteration counts, matrices
+    /// shrunk by `div`.
+    pub fn quick(flavor: MpiFlavor, div: usize) -> NeighborSweepConfig {
+        NeighborSweepConfig {
+            flavor,
+            nodes: vec![2, 4],
+            ppn: 8,
+            matrices: vec![
+                MatrixPreset::cage14_like().scaled(div),
+                MatrixPreset::dielfilterv2clx_like().scaled(div),
+            ],
+            methods: HaloMethod::ALL.to_vec(),
+            iters: vec![1, 16, 256],
+            region: RegionKind::Node,
+            algo: SddeAlgorithm::LocalityNonBlocking,
+            seed: 2023,
+            progress: false,
+        }
+    }
+}
+
+/// One measured point of the neighbor figure.
+#[derive(Clone, Debug)]
+pub struct NeighborPoint {
+    pub matrix: String,
+    pub method: &'static str,
+    pub flavor: &'static str,
+    pub nodes: usize,
+    pub ranks: usize,
+    pub iters: usize,
+    /// Max per-rank virtual time of the engine setup (0 for legacy p2p).
+    pub setup_ns: Time,
+    /// Max per-rank virtual time of the whole iteration loop.
+    pub loop_ns: Time,
+    /// `loop_ns / iters`.
+    pub per_iter_ns: f64,
+    /// Max over ranks of inter-node user messages sent during the loop,
+    /// divided by `iters` (steady-state red dots).
+    pub internode_per_iter: f64,
+}
+
+/// Run one steady-state measurement; returns
+/// (max setup ns, max loop ns, max per-rank inter-node sends in the loop).
+pub fn run_halo_once(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    method: HaloMethod,
+    iters: usize,
+    preset: Rc<MatrixPreset>,
+    seed: u64,
+) -> (Time, Time, u64) {
+    let part = Partition::new(preset.n, topo.nranks());
+    let world = World::new(topo, CostModel::preset(flavor));
+    let out = world.run(move |c| {
+        let preset = preset.clone();
+        async move {
+            let rank = c.rank();
+            let mx = MpixComm::new(c.clone(), region);
+            let info = MpixInfo {
+                algorithm: algo,
+                region,
+                ..MpixInfo::default()
+            };
+            let pat = SpmvPattern::build(&preset, part, rank, seed);
+            let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+            let mut a = DistMatrix::build(&preset, part, rank, seed, pkg);
+
+            // Engine setup, timed separately from the steady state.
+            c.barrier().await;
+            let t0 = c.now();
+            match method {
+                HaloMethod::P2p => {}
+                HaloMethod::Persistent => a.init_halo(&mx, NeighborMethod::Standard).await,
+                HaloMethod::LocalityPersistent => {
+                    a.init_halo(&mx, NeighborMethod::Locality).await
+                }
+            }
+            let setup = c.now() - t0;
+
+            // Steady state: `iters` halo exchanges of a fixed vector.
+            c.barrier().await;
+            let sent0 = c.counters().internode_sent[rank];
+            let t1 = c.now();
+            let (s, e) = part.range(rank);
+            let x: Vec<f64> = (s..e).map(|i| (i % 23) as f64 - 11.0).collect();
+            let mut sink = 0.0;
+            for _ in 0..iters {
+                let x_ext = a.halo_exchange(&c, &x).await;
+                sink += x_ext.last().copied().unwrap_or(0.0);
+            }
+            let loop_t = c.now() - t1;
+            c.barrier().await;
+            let sent1 = c.counters().internode_sent[rank];
+            std::hint::black_box(sink);
+            (setup, loop_t, sent1 - sent0)
+        }
+    });
+    let setup = out.results.iter().map(|r| r.0).max().unwrap_or(0);
+    let loop_t = out.results.iter().map(|r| r.1).max().unwrap_or(0);
+    let sent = out.results.iter().map(|r| r.2).max().unwrap_or(0);
+    (setup, loop_t, sent)
+}
+
+/// Run the full sweep and return every measured point.
+pub fn run_neighbor_sweep(cfg: &NeighborSweepConfig) -> Vec<NeighborPoint> {
+    let mut points = Vec::new();
+    for preset in &cfg.matrices {
+        let preset = Rc::new(preset.clone());
+        for &nodes in &cfg.nodes {
+            let topo = Topology::quartz(nodes, cfg.ppn);
+            let ranks = topo.nranks();
+            for &method in &cfg.methods {
+                for &iters in &cfg.iters {
+                    let (setup_ns, loop_ns, sent) = run_halo_once(
+                        topo.clone(),
+                        cfg.flavor,
+                        cfg.algo,
+                        cfg.region,
+                        method,
+                        iters,
+                        preset.clone(),
+                        cfg.seed,
+                    );
+                    if cfg.progress {
+                        eprintln!(
+                            "[neighbor] {} nodes={nodes} {:>14} iters={iters:>5}: \
+                             {}/iter (setup {})",
+                            preset.name,
+                            method.name(),
+                            crate::util::fmt::ns((loop_ns as f64 / iters as f64) as u64),
+                            crate::util::fmt::ns(setup_ns),
+                        );
+                    }
+                    points.push(NeighborPoint {
+                        matrix: preset.name.clone(),
+                        method: method.name(),
+                        flavor: cfg.flavor.name(),
+                        nodes,
+                        ranks,
+                        iters,
+                        setup_ns,
+                        loop_ns,
+                        per_iter_ns: loop_ns as f64 / iters as f64,
+                        internode_per_iter: sent as f64 / iters as f64,
+                    });
+                }
+            }
+        }
+    }
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbor_sweep_produces_points() {
+        let mut cfg = NeighborSweepConfig::quick(MpiFlavor::Mvapich2, 400);
+        cfg.nodes = vec![2];
+        cfg.matrices.truncate(1);
+        cfg.iters = vec![1, 4];
+        let pts = run_neighbor_sweep(&cfg);
+        // 1 matrix x 1 node count x 3 methods x 2 iteration counts
+        assert_eq!(pts.len(), 6);
+        for p in &pts {
+            assert!(p.loop_ns > 0, "{p:?}");
+            assert!(p.per_iter_ns > 0.0, "{p:?}");
+            if p.method == "p2p" {
+                assert_eq!(p.setup_ns, 0, "legacy path has no setup: {p:?}");
+            }
+        }
+    }
+
+    // The locality-vs-direct inter-node message assertion lives in
+    // tests/neighbor_agreement.rs (steady_state_locality_reduces_
+    // internode_messages) — not duplicated here.
+}

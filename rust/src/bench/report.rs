@@ -9,6 +9,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::figures::Point;
+use super::neighbor::{HaloMethod, NeighborPoint};
 use crate::util::fmt;
 
 /// Render one figure's points as per-matrix tables. Columns: node count,
@@ -119,6 +120,127 @@ pub fn speedup_summary(points: &[Point]) -> String {
     out
 }
 
+/// Render the neighbor figure: per matrix, one row per (node count,
+/// iteration count) with per-iteration exchange time per halo method, the
+/// persistent setup cost, and the steady-state speedup of the
+/// locality-aware engine over legacy p2p.
+pub fn render_neighbor_figure(title: &str, points: &[NeighborPoint]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let matrices: Vec<String> = {
+        let mut seen = BTreeSet::new();
+        points
+            .iter()
+            .filter(|p| seen.insert(p.matrix.clone()))
+            .map(|p| p.matrix.clone())
+            .collect()
+    };
+    let methods: Vec<&'static str> = {
+        let mut seen = BTreeSet::new();
+        points
+            .iter()
+            .filter(|p| seen.insert(p.method))
+            .map(|p| p.method)
+            .collect()
+    };
+    for m in &matrices {
+        out.push_str(&format!("\n-- {m} --\n"));
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        let mut header = vec!["nodes".to_string(), "ranks".to_string(), "iters".to_string()];
+        for meth in &methods {
+            header.push(format!("{meth}/iter"));
+        }
+        header.push("setup(pers)".into());
+        header.push("setup(loc)".into());
+        header.push("msgs/iter p2p".into());
+        header.push("msgs/iter loc".into());
+        header.push("loc vs p2p".into());
+        rows.push(header);
+        let keys: BTreeSet<(usize, usize)> = points
+            .iter()
+            .filter(|p| &p.matrix == m)
+            .map(|p| (p.nodes, p.iters))
+            .collect();
+        for &(nodes, iters) in &keys {
+            let at = |method: &str| {
+                points.iter().find(|p| {
+                    &p.matrix == m && p.nodes == nodes && p.iters == iters && p.method == method
+                })
+            };
+            let mut row = vec![
+                nodes.to_string(),
+                at(methods[0]).map(|p| p.ranks.to_string()).unwrap_or_default(),
+                iters.to_string(),
+            ];
+            for meth in &methods {
+                row.push(
+                    at(meth)
+                        .map(|p| fmt::ns(p.per_iter_ns as u64))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            // Column keys come from HaloMethod::name() — the same source
+            // the sweep stamps into NeighborPoint.method.
+            let (p2p, pers, loc) = (
+                HaloMethod::P2p.name(),
+                HaloMethod::Persistent.name(),
+                HaloMethod::LocalityPersistent.name(),
+            );
+            row.push(at(pers).map(|p| fmt::ns(p.setup_ns)).unwrap_or_default());
+            row.push(at(loc).map(|p| fmt::ns(p.setup_ns)).unwrap_or_default());
+            row.push(
+                at(p2p)
+                    .map(|p| format!("{:.1}", p.internode_per_iter))
+                    .unwrap_or_default(),
+            );
+            row.push(
+                at(loc)
+                    .map(|p| format!("{:.1}", p.internode_per_iter))
+                    .unwrap_or_default(),
+            );
+            row.push(match (at(p2p), at(loc)) {
+                (Some(a), Some(b)) if b.per_iter_ns > 0.0 => {
+                    format!("{:.2}x", a.per_iter_ns / b.per_iter_ns)
+                }
+                _ => String::new(),
+            });
+            rows.push(row);
+        }
+        out.push_str(&fmt::table(&rows));
+    }
+    out
+}
+
+/// Write neighbor-figure points as CSV (one row per measurement).
+pub fn write_neighbor_csv(path: &Path, points: &[NeighborPoint]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f =
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    writeln!(
+        f,
+        "matrix,method,mpi,nodes,ranks,iters,setup_ns,loop_ns,per_iter_ns,internode_per_iter"
+    )?;
+    for p in points {
+        writeln!(
+            f,
+            "{},{},{},{},{},{},{},{},{:.2},{:.2}",
+            p.matrix,
+            p.method,
+            p.flavor,
+            p.nodes,
+            p.ranks,
+            p.iters,
+            p.setup_ns,
+            p.loop_ns,
+            p.per_iter_ns,
+            p.internode_per_iter
+        )?;
+    }
+    Ok(())
+}
+
 /// Write points as CSV (one row per measurement).
 pub fn write_csv(path: &Path, points: &[Point]) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -168,6 +290,45 @@ mod tests {
         assert!(s.contains("m1"));
         assert!(s.contains("personalized"));
         assert!(s.contains("10.00x speedup"));
+    }
+
+    fn npt(method: &'static str, iters: usize, per_iter: f64) -> NeighborPoint {
+        NeighborPoint {
+            matrix: "m1".into(),
+            method,
+            flavor: "mvapich2",
+            nodes: 2,
+            ranks: 16,
+            iters,
+            setup_ns: 500,
+            loop_ns: (per_iter * iters as f64) as u64,
+            per_iter_ns: per_iter,
+            internode_per_iter: 4.0,
+        }
+    }
+
+    #[test]
+    fn renders_neighbor_table() {
+        let pts = vec![
+            npt("p2p", 16, 1000.0),
+            npt("persistent", 16, 800.0),
+            npt("loc-persistent", 16, 250.0),
+        ];
+        let s = render_neighbor_figure("neighbor fig", &pts);
+        assert!(s.contains("m1"));
+        assert!(s.contains("loc-persistent/iter"));
+        assert!(s.contains("4.00x"));
+    }
+
+    #[test]
+    fn neighbor_csv_has_all_rows() {
+        let pts = vec![npt("p2p", 4, 100.0), npt("loc-persistent", 4, 50.0)];
+        let path = std::env::temp_dir().join("sdde_neighbor_csv_test.csv");
+        write_neighbor_csv(&path, &pts).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("matrix,method,mpi"));
+        assert_eq!(content.lines().count(), 3);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

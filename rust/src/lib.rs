@@ -17,6 +17,9 @@
 //!   one-sided RMA windows).
 //! * [`mpix`] — **the paper's contribution**: the MPI Advance-style SDDE
 //!   API and all five algorithms.
+//! * [`mpix::neighbor`] — the consumer side: distributed-graph topology
+//!   communicators ([`mpix::NeighborComm`]) and persistent (standard +
+//!   locality-aware) neighbor alltoallv built from SDDE-formed patterns.
 //! * [`sparse`] — sparse-matrix substrate: CSR, synthetic SuiteSparse
 //!   analogs, row-wise partitioning, and communication-package formation
 //!   (the paper's motivating use case).
@@ -40,7 +43,7 @@ pub mod prelude {
     pub use crate::mpi::{Comm, Payload, Tag, World, ANY_SOURCE, ANY_TAG};
     pub use crate::mpix::{
         alltoall_crs, alltoallv_crs, CrsArgs, CrsResult, CrsvArgs, CrsvResult, MpixComm,
-        MpixInfo, SddeAlgorithm,
+        MpixInfo, NeighborAlltoallv, NeighborComm, NeighborMethod, SddeAlgorithm,
     };
     pub use crate::simnet::{CostModel, MpiFlavor, RegionKind, Tier, Time, Topology};
 }

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //! * `figures`  — regenerate the paper's Figures 5–8 (tables + CSV).
+//! * `neighbor` — steady-state persistent neighbor-alltoallv figure
+//!   (amortized setup + locality aggregation, across iteration counts).
 //! * `sdde`     — run a single SDDE instance and print details.
 //! * `solve`    — distributed CG/Jacobi solve over an SDDE-formed pattern.
 //! * `info`     — list matrix presets, algorithms and cost-model presets.
@@ -10,17 +12,21 @@
 //! ```text
 //! sdde figures --fig 7 --quick
 //! sdde figures --fig all --out results/
+//! sdde neighbor --nodes 2,4 --iters 1,16,256 --mpi both
 //! sdde sdde --matrix cage14 --nodes 8 --algo loc-nonblocking --variant v
-//! sdde solve --nx 48 --ny 48 --nodes 2 --ppn 4 --solver cg
+//! sdde solve --nx 48 --ny 48 --nodes 2 --ppn 4 --solver cg --halo loc
 //! ```
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use sdde::bench::{render_figure, run_sweep, write_csv, FigureId, SweepConfig};
+use sdde::bench::{
+    render_figure, render_neighbor_figure, run_neighbor_sweep, run_sweep, write_csv,
+    write_neighbor_csv, FigureId, HaloMethod, NeighborSweepConfig, SweepConfig,
+};
 use sdde::mpi::World;
-use sdde::mpix::{IntraAlgo, MpixComm, MpixInfo, SddeAlgorithm};
+use sdde::mpix::{IntraAlgo, MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
 use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
 use sdde::solver::{cg, jacobi, CsrLocal, DistMatrix};
 use sdde::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
@@ -32,6 +38,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let r = match cmd {
         "figures" => cmd_figures(&args),
+        "neighbor" => cmd_neighbor(&args),
         "sdde" => cmd_sdde(&args),
         "solve" => cmd_solve(&args),
         "info" => cmd_info(),
@@ -53,10 +60,14 @@ fn print_help() {
          figures --fig <5|6|7|8|all> [--quick] [--div N] [--out DIR]\n\
                  [--nodes 2,4,..] [--ppn N] [--matrices a,b] [--algos x,y]\n\
                  [--region node|socket] [--seed N]\n\
+         neighbor [--nodes 2,4,..] [--ppn N] [--iters 1,16,256] [--div N]\n\
+                 [--matrices a,b] [--methods p2p,persistent,loc-persistent]\n\
+                 [--mpi openmpi|mvapich2|both] [--region node|socket]\n\
+                 [--out DIR] [--seed N]\n\
          sdde    --matrix <preset> --nodes N [--ppn N] [--algo NAME]\n\
                  [--variant crs|v] [--mpi openmpi|mvapich2] [--div N]\n\
          solve   [--nx N --ny N] [--nodes N --ppn N] [--solver cg|jacobi]\n\
-                 [--algo NAME] [--iters N]\n\
+                 [--algo NAME] [--iters N] [--halo p2p|standard|loc]\n\
          info"
     );
 }
@@ -121,6 +132,77 @@ fn cmd_figures(args: &Args) -> Result<()> {
             );
             let path = dir.join(name);
             write_csv(&path, &points)?;
+            println!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_neighbor(args: &Args) -> Result<()> {
+    let div = args.get_parsed("div", 16usize);
+    let flavors: Vec<MpiFlavor> = match args.get_or("mpi", "both") {
+        "both" | "all" => vec![MpiFlavor::Mvapich2, MpiFlavor::OpenMpi],
+        s => vec![MpiFlavor::parse(s).ok_or_else(|| anyhow::anyhow!("unknown mpi flavor {s}"))?],
+    };
+    let out_dir = args.get("out").map(PathBuf::from);
+    for flavor in flavors {
+        let mut cfg = NeighborSweepConfig::quick(flavor, div);
+        if let Some(nodes) = args.get_list("nodes") {
+            cfg.nodes = nodes
+                .iter()
+                .map(|s| {
+                    s.parse::<usize>()
+                        .ok()
+                        .filter(|&v| v > 0)
+                        .ok_or_else(|| anyhow::anyhow!("bad node count {s}"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        cfg.ppn = args.get_parsed("ppn", cfg.ppn);
+        cfg.seed = args.get_parsed("seed", cfg.seed);
+        if let Some(it) = args.get_list("iters") {
+            cfg.iters = it
+                .iter()
+                .map(|s| {
+                    s.parse::<usize>()
+                        .ok()
+                        .filter(|&v| v > 0)
+                        .ok_or_else(|| anyhow::anyhow!("bad iteration count {s}"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(r) = args.get("region") {
+            cfg.region =
+                RegionKind::parse(r).ok_or_else(|| anyhow::anyhow!("unknown region {r}"))?;
+        }
+        if let Some(ms) = args.get_list("matrices") {
+            cfg.matrices = ms
+                .iter()
+                .map(|m| {
+                    MatrixPreset::parse(m)
+                        .map(|p| if div > 1 { p.scaled(div) } else { p })
+                        .ok_or_else(|| anyhow::anyhow!("unknown matrix {m}"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(mm) = args.get_list("methods") {
+            cfg.methods = mm
+                .iter()
+                .map(|m| {
+                    HaloMethod::parse(m).ok_or_else(|| anyhow::anyhow!("unknown halo method {m}"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        cfg.progress = true;
+        let points = run_neighbor_sweep(&cfg);
+        let title = format!(
+            "Neighbor figure: persistent neighbor alltoallv using {}",
+            flavor.name()
+        );
+        println!("{}", render_neighbor_figure(&title, &points));
+        if let Some(dir) = &out_dir {
+            let path = dir.join(format!("fig_neighbor_{}.csv", flavor.name()));
+            write_neighbor_csv(&path, &points)?;
             println!("wrote {}", path.display());
         }
     }
@@ -201,17 +283,26 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let solver = args.get_or("solver", "cg").to_string();
     let algo = SddeAlgorithm::parse(args.get_or("algo", "loc-nonblocking"))
         .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+    // Steady-state halo engine: persistent locality-aware by default; the
+    // legacy per-message p2p path stays available as `--halo p2p`.
+    let halo_method: Option<NeighborMethod> = match args.get_or("halo", "loc") {
+        "p2p" | "legacy" => None,
+        s => Some(
+            NeighborMethod::parse(s).ok_or_else(|| anyhow::anyhow!("unknown halo method {s}"))?,
+        ),
+    };
 
     let preset = MatrixPreset::poisson2d(nx, ny);
     let topo = Topology::quartz(nodes, ppn);
     let nranks = topo.nranks();
     let part = Partition::new(preset.n, nranks);
     eprintln!(
-        "solving poisson2d {nx}x{ny} (n={}) on {} ranks with {} (pattern via {})",
+        "solving poisson2d {nx}x{ny} (n={}) on {} ranks with {} (pattern via {}, halo {})",
         preset.n,
         nranks,
         solver,
-        algo.name()
+        algo.name(),
+        halo_method.map(|m| m.name()).unwrap_or("p2p"),
     );
     let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
     let solver2 = solver.clone();
@@ -223,7 +314,10 @@ fn cmd_solve(args: &Args) -> Result<()> {
             let info = MpixInfo::with_algorithm(algo);
             let pat = SpmvPattern::build(&preset, part, c.rank(), 0);
             let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
-            let a = DistMatrix::build(&preset, part, c.rank(), 0, pkg);
+            let mut a = DistMatrix::build(&preset, part, c.rank(), 0, pkg);
+            if let Some(method) = halo_method {
+                a.init_halo(&mx, method).await;
+            }
             let b = vec![1.0; a.local_n()];
             let kernel = CsrLocal(&a.local);
             let (_, hist) = match solver.as_str() {

@@ -25,9 +25,11 @@
 pub mod algos;
 mod comm;
 mod crs;
+pub mod neighbor;
 
 pub use comm::{IntraAlgo, MpixComm, MpixInfo};
 pub use crs::{CrsArgs, CrsResult, CrsvArgs, CrsvResult};
+pub use neighbor::{NeighborAlltoallv, NeighborComm, NeighborExchange, NeighborMethod};
 
 use anyhow::{bail, Result};
 
@@ -185,4 +187,66 @@ fn resolve(
     } else {
         SddeAlgorithm::Personalized
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::World;
+    use crate::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+
+    fn mx_for(nodes: usize, ppn: usize) -> MpixComm {
+        let w = World::new(
+            Topology::quartz(nodes, ppn),
+            CostModel::preset(MpiFlavor::Mvapich2),
+        );
+        MpixComm::new(w.comm(0), RegionKind::Node)
+    }
+
+    fn dispatch(mx: &MpixComm, send_nnz: usize) -> SddeAlgorithm {
+        resolve(&MpixInfo::default(), mx, send_nnz, true).unwrap()
+    }
+
+    #[test]
+    fn dispatch_small_world_picks_personalized() {
+        // 8 ranks, sparse sends: the allreduce is cheap — Personalized.
+        assert_eq!(dispatch(&mx_for(2, 4), 3), SddeAlgorithm::Personalized);
+    }
+
+    #[test]
+    fn dispatch_large_world_picks_nonblocking() {
+        // 256 ranks, sparse sends: the allreduce dominates — NBX.
+        assert_eq!(dispatch(&mx_for(32, 8), 4), SddeAlgorithm::NonBlocking);
+    }
+
+    #[test]
+    fn dispatch_dense_sends_at_scale_pick_locality() {
+        // 64 ranks (8/region) with > 2x-region destinations: aggregation
+        // pays — LocalityNonBlocking.
+        let mx = mx_for(8, 8);
+        assert_eq!(dispatch(&mx, 17), SddeAlgorithm::LocalityNonBlocking);
+        // ... but exactly at the 2x-region boundary it does not.
+        assert_eq!(dispatch(&mx, 16), SddeAlgorithm::Personalized);
+    }
+
+    #[test]
+    fn dispatch_dense_sends_below_scale_stay_standard() {
+        // Dense sends on a tiny world (8 ranks < the 64-rank floor): the
+        // aggregation detour is pure overhead.
+        assert_eq!(dispatch(&mx_for(2, 4), 20), SddeAlgorithm::Personalized);
+    }
+
+    #[test]
+    fn rma_on_variable_size_is_an_error() {
+        // Paper §IV-C: the one-sided algorithms exist only for the
+        // constant-size SDDE, even when requested explicitly.
+        let mx = mx_for(2, 4);
+        for algo in [SddeAlgorithm::Rma, SddeAlgorithm::LocalityRma] {
+            let info = MpixInfo::with_algorithm(algo);
+            let err = resolve(&info, &mx, 2, false).unwrap_err();
+            assert!(err.to_string().contains("MPIX_Alltoall_crs"), "{err}");
+            // The constant-size path accepts the same request.
+            assert_eq!(resolve(&info, &mx, 2, true).unwrap(), algo);
+        }
+    }
 }

@@ -1,0 +1,209 @@
+//! `NeighborComm` — the distributed-graph topology communicator
+//! (`MPI_Dist_graph_create_adjacent` analog).
+//!
+//! A [`NeighborComm`] freezes the *steady-state* communication graph of one
+//! rank: which ranks it sends to every iteration (and how many words each),
+//! and which ranks it receives from (and how many words each). It is built
+//! directly from what an SDDE discovered — a [`CommPkg`], a
+//! [`CrsvResult`], or a [`CrsResult`] — so the pattern the SDDE *formed* is
+//! handed straight to the collectives that *use* it.
+
+use crate::mpi::Comm;
+use crate::mpix::{CrsArgs, CrsResult, CrsvArgs, CrsvResult, MpixComm};
+use crate::simnet::RegionKind;
+use crate::sparse::CommPkg;
+
+/// Per-rank view of a fixed sparse communication graph: sorted
+/// `(neighbor, words-per-exchange)` lists for both directions, plus the
+/// region granularity the locality-aware exchange aggregates over.
+/// (No `Debug` derive: the embedded [`Comm`] handle has none.)
+#[derive(Clone)]
+pub struct NeighborComm {
+    comm: Comm,
+    region_kind: RegionKind,
+    /// (source rank, words received from it per exchange), ascending.
+    sources: Vec<(usize, usize)>,
+    /// (destination rank, words sent to it per exchange), ascending.
+    dests: Vec<(usize, usize)>,
+}
+
+impl NeighborComm {
+    /// The `MPI_Dist_graph_create_adjacent` analog: both adjacency lists
+    /// are supplied explicitly. Lists are sorted; duplicate neighbors,
+    /// self edges, out-of-range ranks and zero-length channels are
+    /// programming errors (omit the neighbor instead of a zero count).
+    pub fn create_adjacent(
+        comm: Comm,
+        region: RegionKind,
+        mut sources: Vec<(usize, usize)>,
+        mut dests: Vec<(usize, usize)>,
+    ) -> NeighborComm {
+        let me = comm.rank();
+        let n = comm.nranks();
+        sources.sort_unstable();
+        dests.sort_unstable();
+        for list in [&sources, &dests] {
+            for w in list.windows(2) {
+                assert!(w[0].0 < w[1].0, "duplicate neighbor {}", w[1].0);
+            }
+            for &(r, cnt) in list.iter() {
+                assert!(r < n, "neighbor {r} out of range (nranks {n})");
+                assert_ne!(r, me, "rank {me} listed itself as a neighbor");
+                assert!(cnt > 0, "zero-length channel to {r} (omit the neighbor)");
+            }
+        }
+        NeighborComm {
+            comm,
+            region_kind: region,
+            sources,
+            dests,
+        }
+    }
+
+    /// Build from an SDDE-formed [`CommPkg`]: every later exchange sends
+    /// `send_to[i].1.len()` values to each `send_to[i].0` and receives
+    /// `recv_from[i].1.len()` values from each `recv_from[i].0` — the SpMV
+    /// halo-exchange graph.
+    pub fn from_commpkg(mx: &MpixComm, pkg: &CommPkg) -> NeighborComm {
+        NeighborComm::create_adjacent(
+            mx.comm.clone(),
+            mx.region_kind(),
+            pkg.recv_from
+                .iter()
+                .map(|(owner, cols)| (*owner, cols.len()))
+                .collect(),
+            pkg.send_to
+                .iter()
+                .map(|(nbr, rows)| (*nbr, rows.len()))
+                .collect(),
+        )
+    }
+
+    /// Build from a raw variable-size SDDE call (`MPIX_Alltoallv_crs`)
+    /// used Hypre-style: the SDDE sent *index requests* to the owners
+    /// (`args`), and learned who requested indices from this rank (`res`).
+    /// The steady-state data flow is therefore the *reverse* of the SDDE:
+    /// values go to every `res.src[i]` (`res.recvcounts[i]` words — the
+    /// indices it requested) and arrive from every `args.dest[i]`
+    /// (`args.sendcounts[i]` words — the indices we requested).
+    pub fn from_crsv(mx: &MpixComm, args: &CrsvArgs, res: &CrsvResult) -> NeighborComm {
+        NeighborComm::create_adjacent(
+            mx.comm.clone(),
+            mx.region_kind(),
+            args.dest
+                .iter()
+                .zip(&args.sendcounts)
+                .map(|(&d, &c)| (d, c))
+                .collect(),
+            res.src
+                .iter()
+                .zip(&res.recvcounts)
+                .map(|(&s, &c)| (s, c))
+                .collect(),
+        )
+    }
+
+    /// Build from a constant-size SDDE used CELLAR-style
+    /// (`MPIX_Alltoall_crs` with `sendcount == 1`, one future message
+    /// *size* per destination): this rank will send `args.sendvals[i]`
+    /// words to each `args.dest[i]` and receive `res.recvvals[i]` words
+    /// from each `res.src[i]`. Zero-size channels are dropped.
+    pub fn from_crs_sizes(mx: &MpixComm, args: &CrsArgs, res: &CrsResult) -> NeighborComm {
+        assert_eq!(args.sendcount, 1, "from_crs_sizes expects one size per destination");
+        NeighborComm::create_adjacent(
+            mx.comm.clone(),
+            mx.region_kind(),
+            res.src
+                .iter()
+                .zip(&res.recvvals)
+                .map(|(&s, &c)| (s, c as usize))
+                .filter(|&(_, c)| c > 0)
+                .collect(),
+            args.dest
+                .iter()
+                .zip(&args.sendvals)
+                .map(|(&d, &c)| (d, c as usize))
+                .filter(|&(_, c)| c > 0)
+                .collect(),
+        )
+    }
+
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    pub fn region_kind(&self) -> RegionKind {
+        self.region_kind
+    }
+
+    /// Receive adjacency: (source rank, words per exchange), ascending.
+    pub fn sources(&self) -> &[(usize, usize)] {
+        &self.sources
+    }
+
+    /// Send adjacency: (destination rank, words per exchange), ascending.
+    pub fn dests(&self) -> &[(usize, usize)] {
+        &self.dests
+    }
+
+    /// Total words sent per exchange.
+    pub fn send_words(&self) -> usize {
+        self.dests.iter().map(|&(_, c)| c).sum()
+    }
+
+    /// Total words received per exchange.
+    pub fn recv_words(&self) -> usize {
+        self.sources.iter().map(|&(_, c)| c).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::World;
+    use crate::simnet::{CostModel, MpiFlavor, Topology};
+
+    fn comm_of(nodes: usize, ppn: usize, rank: usize) -> Comm {
+        let w = World::new(
+            Topology::quartz(nodes, ppn),
+            CostModel::preset(MpiFlavor::Mvapich2),
+        );
+        w.comm(rank)
+    }
+
+    #[test]
+    fn create_adjacent_sorts_and_sizes() {
+        let nc = NeighborComm::create_adjacent(
+            comm_of(2, 2, 0),
+            RegionKind::Node,
+            vec![(3, 2), (1, 5)],
+            vec![(2, 4)],
+        );
+        assert_eq!(nc.sources(), &[(1, 5), (3, 2)]);
+        assert_eq!(nc.dests(), &[(2, 4)]);
+        assert_eq!(nc.recv_words(), 7);
+        assert_eq!(nc.send_words(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "listed itself")]
+    fn create_adjacent_rejects_self() {
+        NeighborComm::create_adjacent(
+            comm_of(1, 2, 0),
+            RegionKind::Node,
+            vec![(0, 1)],
+            vec![],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-length")]
+    fn create_adjacent_rejects_zero_count() {
+        NeighborComm::create_adjacent(
+            comm_of(1, 2, 0),
+            RegionKind::Node,
+            vec![],
+            vec![(1, 0)],
+        );
+    }
+}

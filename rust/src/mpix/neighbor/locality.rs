@@ -1,0 +1,263 @@
+//! Locality-aware routing plan for the persistent neighbor alltoallv —
+//! `algos::locality` applied to the *steady-state* exchange.
+//!
+//! The pattern-formation locality algorithms ship self-describing records
+//! (`[dest, origin, count, vals…]`) because the pattern is unknown. A
+//! persistent channel has no such excuse: the pattern is frozen at `init`,
+//! so the plan below is negotiated **once** — via two small SDDEs, the
+//! library dogfooding its own API — and every subsequent exchange ships
+//! *headerless* value buffers:
+//!
+//! * same-region destinations are sent directly (intra-region links are
+//!   cheap and contention-free);
+//! * all segments bound for region `r` are concatenated (ascending final
+//!   destination) into one buffer sent to the **corresponding rank** of
+//!   `r` — one inter-region message per (rank, region) pair per iteration;
+//! * the corresponding rank splits incoming buffers by final destination
+//!   and forwards one combined intra-region message per local consumer.
+//!
+//! Every offset/length on the receive side is known a priori, so the
+//! per-iteration exchange needs no probes, no allreduce, no barrier and no
+//! per-iteration tags.
+
+use std::collections::BTreeMap;
+
+use super::comm::NeighborComm;
+use crate::mpix::{alltoallv_crs, CrsvArgs, MpixComm, MpixInfo, SddeAlgorithm};
+
+/// One aggregated inter-region send: the sendbuf segments (indices into
+/// `NeighborComm::dests`, ascending) concatenated and shipped to the
+/// corresponding rank of the destination region.
+#[derive(Clone, Debug)]
+pub(crate) struct AggSend {
+    pub corr: usize,
+    pub seg_idx: Vec<usize>,
+    pub words: usize,
+}
+
+/// One expected incoming aggregated buffer (this rank acting as the
+/// corresponding rank of its region for `src`).
+#[derive(Clone, Debug)]
+pub(crate) struct InterIn {
+    pub src: usize,
+    pub words: usize,
+}
+
+/// A slice of an incoming aggregated buffer: `count` words at `offset`
+/// within buffer `in_idx`, originated by rank `origin`.
+#[derive(Clone, Debug)]
+pub(crate) struct Pull {
+    pub in_idx: usize,
+    pub offset: usize,
+    pub origin: usize,
+    pub count: usize,
+}
+
+/// One combined intra-region forward: pulls (ascending origin) from the
+/// incoming aggregated buffers, concatenated and sent to local rank `dst`.
+#[derive(Clone, Debug)]
+pub(crate) struct FwdOut {
+    pub dst: usize,
+    pub pulls: Vec<Pull>,
+    pub words: usize,
+}
+
+/// One expected intra-region forward from corresponding rank `src`:
+/// `(origin, count)` segments in wire order.
+#[derive(Clone, Debug)]
+pub(crate) struct FwdIn {
+    pub src: usize,
+    pub segs: Vec<(usize, usize)>,
+    pub words: usize,
+}
+
+/// The complete frozen routing plan of one rank. The standard (pure p2p)
+/// method is the degenerate plan where everything is direct.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct Plan {
+    /// Indices into `dests` sent directly (same region, or all of them for
+    /// the standard method).
+    pub direct_send_idx: Vec<usize>,
+    /// Indices into `sources` received directly.
+    pub direct_src_idx: Vec<usize>,
+    pub agg_sends: Vec<AggSend>,
+    pub inter_in: Vec<InterIn>,
+    /// Segments of incoming aggregated buffers consumed by this rank itself.
+    pub self_pulls: Vec<Pull>,
+    pub fwd_out: Vec<FwdOut>,
+    pub fwd_in: Vec<FwdIn>,
+}
+
+impl Plan {
+    /// Standard method: every channel is a direct p2p message.
+    pub fn standard(nc: &NeighborComm) -> Plan {
+        Plan {
+            direct_send_idx: (0..nc.dests().len()).collect(),
+            direct_src_idx: (0..nc.sources().len()).collect(),
+            ..Plan::default()
+        }
+    }
+}
+
+/// Negotiate the locality-aware plan. **Collective** over the world: the
+/// two setup SDDEs below contain allreduces. Cost is paid once per `init`
+/// and amortized over every subsequent exchange. `mx` is the caller's
+/// extension communicator (same region granularity, asserted by `init`),
+/// reused so its cached region tables are not rebuilt here.
+pub(crate) async fn build_locality_plan(mx: &MpixComm, nc: &NeighborComm) -> Plan {
+    let c = nc.comm();
+    let kind = nc.region_kind();
+    let topo = c.topo().clone();
+    let me = c.rank();
+    let my_region = topo.region_of(me, kind);
+    let dests = nc.dests();
+    let sources = nc.sources();
+
+    // -- send side: split direct vs per-region aggregated. ----------------
+    let mut direct_send_idx = Vec::new();
+    let mut by_region: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, &(d, _)) in dests.iter().enumerate() {
+        if topo.region_of(d, kind) == my_region {
+            direct_send_idx.push(i);
+        } else {
+            by_region.entry(topo.region_of(d, kind)).or_default().push(i);
+        }
+    }
+    let agg_sends: Vec<AggSend> = by_region
+        .into_iter()
+        .map(|(r, seg_idx)| AggSend {
+            corr: topo.corresponding_rank(me, r, kind),
+            words: seg_idx.iter().map(|&i| dests[i].1).sum(),
+            seg_idx,
+        })
+        .collect();
+
+    // -- setup SDDE 1: describe each aggregated buffer's layout to its
+    //    corresponding rank as (final_dest, count) pairs, ascending dest
+    //    (the wire order of the headerless per-iteration buffer). ---------
+    let info = MpixInfo::with_algorithm(SddeAlgorithm::Personalized);
+    let args1 = CrsvArgs {
+        dest: agg_sends.iter().map(|a| a.corr).collect(),
+        sendcounts: agg_sends.iter().map(|a| a.seg_idx.len() * 2).collect(),
+        sendvals: agg_sends
+            .iter()
+            .flat_map(|a| {
+                a.seg_idx
+                    .iter()
+                    .flat_map(|&i| [dests[i].0 as u64, dests[i].1 as u64])
+            })
+            .collect(),
+    };
+    let res1 = alltoallv_crs(mx, &info, &args1)
+        .await
+        .expect("neighbor setup SDDE (inter-region plans)");
+
+    // -- intermediary role: record incoming layouts, derive forwards. -----
+    // res1 is canonical (ascending src), so per-destination pulls come out
+    // ascending by origin — the wire order final consumers will assume.
+    let mut inter_in = Vec::new();
+    let mut self_pulls = Vec::new();
+    let mut fwd_map: BTreeMap<usize, Vec<Pull>> = BTreeMap::new();
+    for i in 0..res1.recv_nnz() {
+        let src = res1.src[i];
+        let in_idx = inter_in.len();
+        let mut offset = 0usize;
+        for ch in res1.vals(i).chunks(2) {
+            let (d, count) = (ch[0] as usize, ch[1] as usize);
+            let pull = Pull {
+                in_idx,
+                offset,
+                origin: src,
+                count,
+            };
+            if d == me {
+                self_pulls.push(pull);
+            } else {
+                debug_assert_eq!(topo.region_of(d, kind), my_region, "misrouted segment");
+                fwd_map.entry(d).or_default().push(pull);
+            }
+            offset += count;
+        }
+        inter_in.push(InterIn { src, words: offset });
+    }
+    let fwd_out: Vec<FwdOut> = fwd_map
+        .into_iter()
+        .map(|(dst, pulls)| FwdOut {
+            dst,
+            words: pulls.iter().map(|p| p.count).sum(),
+            pulls,
+        })
+        .collect();
+
+    // -- setup SDDE 2: describe each forward's layout to its consumer as
+    //    (origin, count) pairs in wire order. ----------------------------
+    let args2 = CrsvArgs {
+        dest: fwd_out.iter().map(|f| f.dst).collect(),
+        sendcounts: fwd_out.iter().map(|f| f.pulls.len() * 2).collect(),
+        sendvals: fwd_out
+            .iter()
+            .flat_map(|f| {
+                f.pulls
+                    .iter()
+                    .flat_map(|p| [p.origin as u64, p.count as u64])
+            })
+            .collect(),
+    };
+    let res2 = alltoallv_crs(mx, &info, &args2)
+        .await
+        .expect("neighbor setup SDDE (intra-region plans)");
+    let fwd_in: Vec<FwdIn> = (0..res2.recv_nnz())
+        .map(|i| {
+            let segs: Vec<(usize, usize)> = res2
+                .vals(i)
+                .chunks(2)
+                .map(|ch| (ch[0] as usize, ch[1] as usize))
+                .collect();
+            FwdIn {
+                src: res2.src[i],
+                words: segs.iter().map(|&(_, c)| c).sum(),
+                segs,
+            }
+        })
+        .collect();
+
+    // -- receive side: same-region sources arrive directly. ---------------
+    let direct_src_idx: Vec<usize> = sources
+        .iter()
+        .enumerate()
+        .filter(|&(_, &(s, _))| topo.region_of(s, kind) == my_region)
+        .map(|(i, _)| i)
+        .collect();
+
+    let plan = Plan {
+        direct_send_idx,
+        direct_src_idx,
+        agg_sends,
+        inter_in,
+        self_pulls,
+        fwd_out,
+        fwd_in,
+    };
+
+    // Every source must be covered by exactly one route with the exact
+    // per-exchange word count.
+    #[cfg(debug_assertions)]
+    {
+        let mut route: BTreeMap<usize, usize> = BTreeMap::new();
+        for &i in &plan.direct_src_idx {
+            *route.entry(sources[i].0).or_default() += sources[i].1;
+        }
+        for p in &plan.self_pulls {
+            *route.entry(p.origin).or_default() += p.count;
+        }
+        for f in &plan.fwd_in {
+            for &(origin, count) in &f.segs {
+                *route.entry(origin).or_default() += count;
+            }
+        }
+        let expect: BTreeMap<usize, usize> = sources.iter().copied().collect();
+        debug_assert_eq!(route, expect, "rank {me}: plan does not cover sources");
+    }
+
+    plan
+}

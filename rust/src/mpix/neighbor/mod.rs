@@ -1,0 +1,29 @@
+//! Persistent locality-aware **neighborhood collectives** — the layer that
+//! *uses* SDDE-formed patterns (DESIGN.md, layer `mpix::neighbor`).
+//!
+//! The SDDE APIs ([`crate::mpix::alltoallv_crs`] & friends) exist to *form*
+//! a sparse communication pattern; the payoff comes when that pattern is
+//! reused every iteration afterwards. This module is the MPI Advance-style
+//! consumer side:
+//!
+//! * [`NeighborComm`] — a distributed-graph topology communicator (the
+//!   `MPI_Dist_graph_create_adjacent` analog), built directly from a
+//!   [`crate::sparse::CommPkg`], a [`crate::mpix::CrsvResult`] or a
+//!   [`crate::mpix::CrsResult`].
+//! * [`NeighborAlltoallv`] — a persistent neighbor alltoallv (`init` once,
+//!   `start`/`wait` many): pre-sized buffers, fixed tags, and two exchange
+//!   strategies — [`NeighborMethod::Standard`] p2p and
+//!   [`NeighborMethod::Locality`], which aggregates per region pair like
+//!   the formation-side Algorithms 4 & 5 but with a *headerless* wire
+//!   format negotiated once at `init`.
+//!
+//! [`crate::solver::DistMatrix::init_halo`] plugs this into the
+//! distributed SpMV, replacing the per-iteration tag-allocating p2p halo
+//! exchange for Jacobi/CG.
+
+mod comm;
+mod locality;
+mod persistent;
+
+pub use comm::NeighborComm;
+pub use persistent::{NeighborAlltoallv, NeighborExchange, NeighborMethod};

@@ -1,12 +1,30 @@
 //! Row-distributed sparse matrix with SDDE-formed halo exchange.
+//!
+//! Two halo-exchange engines share the [`CommPkg`] pattern:
+//!
+//! * the **persistent** path ([`DistMatrix::init_halo`]): a
+//!   [`NeighborAlltoallv`] over a [`NeighborComm`] built from the package —
+//!   fixed tags, pre-sized buffers, optional locality-aware aggregation.
+//!   This is what Jacobi/CG should run on in the steady state.
+//! * the **legacy p2p** path ([`DistMatrix::halo_exchange_p2p`]): one
+//!   tagged isend/recv per neighbor per exchange, kept as the reference
+//!   implementation for agreement tests.
 
 use std::collections::BTreeMap;
 
 use crate::mpi::{waitall, Comm, Payload, Tag};
+use crate::mpix::{MpixComm, NeighborAlltoallv, NeighborComm, NeighborMethod};
 use crate::sparse::{CommPkg, CsrMatrix, MatrixPreset, Partition};
 
-/// Tag family for halo-exchange traffic (user tag space).
-const TAG_HALO: Tag = 0x3000;
+/// Tag family for the legacy p2p halo exchange (user tag space, disjoint
+/// from the SDDE family `0x1000..0x3000` and the persistent-neighbor
+/// family `0x4000..0x8000`).
+const TAG_HALO: Tag = 0x0010_0000;
+/// Distinct halo tags before the sequence recycles. The old window of
+/// 0x400 wrapped after 1024 exchanges, which could cross-talk between
+/// overlapping exchanges; ~15.7M leaves no realistic overlap window (and
+/// the persistent path needs no per-iteration tags at all).
+const TAG_HALO_WINDOW: Tag = 0x00F0_0000;
 
 /// Pluggable local SpMV: `x_ext` is `[x_local ++ ghosts]` (ghost order =
 /// `DistMatrix::ghost_cols`); returns `y_local`.
@@ -35,6 +53,16 @@ pub struct DistMatrix {
     pub ghost_cols: Vec<usize>,
     /// SDDE-formed halo-exchange pattern.
     pub pkg: CommPkg,
+    /// Persistent neighbor exchange over `pkg` ([`DistMatrix::init_halo`]);
+    /// when absent, [`DistMatrix::halo_exchange`] falls back to the legacy
+    /// p2p path.
+    halo: Option<NeighborAlltoallv>,
+    /// Local index of each sent value, flat in `pkg.send_to` order — the
+    /// halo pack is a pure gather.
+    halo_gather: Vec<usize>,
+    /// `x_ext` slot of each received value, flat in `pkg.recv_from` order —
+    /// the ghost scatter is a pure indexed copy (no per-word search).
+    halo_scatter: Vec<usize>,
 }
 
 impl DistMatrix {
@@ -83,13 +111,58 @@ impl DistMatrix {
             })
             .collect();
         let local = CsrMatrix::from_rows(local_n, local_n + ghost_cols.len(), rows);
+        let halo_gather: Vec<usize> = pkg
+            .send_to
+            .iter()
+            .flat_map(|(_, rws)| rws.iter().map(|&r| r - start))
+            .collect();
+        let halo_scatter: Vec<usize> = pkg
+            .recv_from
+            .iter()
+            .flat_map(|(_, cols)| cols.iter().map(|c| ghost_idx[c]))
+            .collect();
         DistMatrix {
             part,
             rank,
             local,
             ghost_cols,
             pkg,
+            halo: None,
+            halo_gather,
+            halo_scatter,
         }
+    }
+
+    /// Switch the halo exchange to a persistent neighborhood collective
+    /// over this matrix's [`CommPkg`]. Collective: every rank must call it
+    /// with the same `method` (the locality plan negotiation runs SDDEs).
+    pub async fn init_halo(&mut self, mx: &MpixComm, method: NeighborMethod) {
+        let nc = NeighborComm::from_commpkg(mx, &self.pkg);
+        self.init_halo_over(mx, &nc, method).await;
+    }
+
+    /// As [`DistMatrix::init_halo`], but over an already-built
+    /// [`NeighborComm`] — e.g. the one
+    /// [`crate::sparse::form_neighborhood`] returned next to the package.
+    pub async fn init_halo_over(
+        &mut self,
+        mx: &MpixComm,
+        nc: &NeighborComm,
+        method: NeighborMethod,
+    ) {
+        assert_eq!(mx.comm.rank(), self.rank, "init_halo on the wrong rank");
+        debug_assert_eq!(
+            nc.sources().len(),
+            self.pkg.recv_from.len(),
+            "NeighborComm does not match this matrix's CommPkg"
+        );
+        debug_assert_eq!(nc.dests().len(), self.pkg.send_to.len());
+        self.halo = Some(NeighborAlltoallv::init(mx, nc, method).await);
+    }
+
+    /// The active persistent exchange, if [`DistMatrix::init_halo`] ran.
+    pub fn persistent_halo(&self) -> Option<&NeighborAlltoallv> {
+        self.halo.as_ref()
     }
 
     pub fn local_n(&self) -> usize {
@@ -101,29 +174,66 @@ impl DistMatrix {
     }
 
     /// Halo exchange: send owned entries of `x` per the package, receive
-    /// ghost values; returns the extended vector `[x ++ ghosts]`.
+    /// ghost values; returns the extended vector `[x ++ ghosts]`. Runs on
+    /// the persistent neighborhood collective when one was initialized
+    /// ([`DistMatrix::init_halo`]), else on the legacy p2p path.
     pub async fn halo_exchange(&self, comm: &Comm, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.local_n());
-        let tag = TAG_HALO + comm.next_seq(TAG_HALO) % 0x400;
-        let (start, _) = self.part.range(self.rank);
-
-        let mut reqs = Vec::with_capacity(self.pkg.send_to.len());
-        for (nbr, rows) in &self.pkg.send_to {
-            let vals: Vec<f64> = rows.iter().map(|&r| x[r - start]).collect();
-            reqs.push(comm.isend(*nbr, tag, Payload::doubles(&vals)).await);
+        match &self.halo {
+            Some(p) => self.halo_exchange_persistent(p, x).await,
+            None => self.halo_exchange_p2p(comm, x).await,
         }
+    }
 
+    /// `[x ++ zeroed ghosts]`, ready for ghost scatter.
+    fn x_ext_base(&self, x: &[f64]) -> Vec<f64> {
         let mut x_ext = Vec::with_capacity(self.local_n() + self.nghost());
         x_ext.extend_from_slice(x);
         x_ext.resize(self.local_n() + self.nghost(), 0.0);
+        x_ext
+    }
+
+    /// Persistent path: the pack is a pure gather and the ghost scatter a
+    /// pure indexed copy — all mapping was precomputed at build time.
+    async fn halo_exchange_persistent(&self, p: &NeighborAlltoallv, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.local_n());
+        let sendbuf: Vec<f64> = self.halo_gather.iter().map(|&i| x[i]).collect();
+        let recvbuf = p.exchange(&sendbuf).await;
+        debug_assert_eq!(recvbuf.len(), self.halo_scatter.len());
+        let mut x_ext = self.x_ext_base(x);
+        for (k, &slot) in self.halo_scatter.iter().enumerate() {
+            x_ext[slot] = recvbuf[k];
+        }
+        x_ext
+    }
+
+    /// Legacy p2p reference path: one tagged message per neighbor per
+    /// exchange (fresh tag per exchange, recycled after
+    /// [`TAG_HALO_WINDOW`] exchanges).
+    pub async fn halo_exchange_p2p(&self, comm: &Comm, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.local_n());
+        let tag = TAG_HALO + comm.next_seq(TAG_HALO) % TAG_HALO_WINDOW;
+
+        let mut reqs = Vec::with_capacity(self.pkg.send_to.len());
+        let mut soff = 0usize;
+        for (nbr, rows) in &self.pkg.send_to {
+            let vals: Vec<f64> = self.halo_gather[soff..soff + rows.len()]
+                .iter()
+                .map(|&i| x[i])
+                .collect();
+            soff += rows.len();
+            reqs.push(comm.isend(*nbr, tag, Payload::doubles(&vals)).await);
+        }
+
+        let mut x_ext = self.x_ext_base(x);
+        let mut roff = 0usize;
         for (owner, cols) in &self.pkg.recv_from {
             let m = comm.recv(*owner, tag).await;
             let vals = m.payload.as_doubles();
             assert_eq!(vals.len(), cols.len(), "halo size mismatch from {owner}");
-            for (c, v) in cols.iter().zip(vals) {
-                let gi = self.ghost_cols.binary_search(c).unwrap();
-                x_ext[self.local_n() + gi] = v;
+            for (k, v) in vals.into_iter().enumerate() {
+                x_ext[self.halo_scatter[roff + k]] = v;
             }
+            roff += cols.len();
         }
         waitall(&reqs).await;
         x_ext

@@ -10,7 +10,9 @@ use anyhow::Result;
 
 use super::gen::MatrixPreset;
 use super::partition::Partition;
-use crate::mpix::{alltoall_crs, alltoallv_crs, CrsArgs, CrsvArgs, MpixComm, MpixInfo};
+use crate::mpix::{
+    alltoall_crs, alltoallv_crs, CrsArgs, CrsvArgs, MpixComm, MpixInfo, NeighborComm,
+};
 
 /// Per-rank receive requirements: for each owner rank, the sorted global
 /// columns this rank needs from it. This is the *known* half of the
@@ -149,6 +151,20 @@ pub async fn form_commpkg(
         recv_from: pattern.needed.clone(),
         send_to,
     })
+}
+
+/// Form the communication package *and* hand back a ready-to-use
+/// [`NeighborComm`] over it — the one-call path from "local sparsity" to
+/// "steady-state neighborhood collective" (pattern formation via the SDDE,
+/// pattern use via `mpix::neighbor`).
+pub async fn form_neighborhood(
+    mx: &MpixComm,
+    info: &MpixInfo,
+    pattern: &SpmvPattern,
+) -> Result<(CommPkg, NeighborComm)> {
+    let pkg = form_commpkg(mx, info, pattern).await?;
+    let nc = NeighborComm::from_commpkg(mx, &pkg);
+    Ok((pkg, nc))
 }
 
 /// Form only the receive *sizes* via the constant-size SDDE

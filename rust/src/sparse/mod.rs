@@ -9,7 +9,7 @@ pub mod gen;
 pub mod mm;
 pub mod partition;
 
-pub use commpkg::{form_commpkg, form_commpkg_sizes, CommPkg, SpmvPattern};
+pub use commpkg::{form_commpkg, form_commpkg_sizes, form_neighborhood, CommPkg, SpmvPattern};
 pub use csr::{BlockEll, CsrMatrix};
 pub use gen::MatrixPreset;
 pub use partition::Partition;

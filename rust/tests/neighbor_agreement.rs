@@ -1,0 +1,314 @@
+//! Integration tests of the `mpix::neighbor` subsystem (paper invariant 2
+//! in DESIGN.md): the persistent neighbor-alltoallv SpMV must agree
+//! bit-for-bit with the legacy p2p halo path for every pattern-formation
+//! algorithm, survive thousands of back-to-back exchanges on fixed tags,
+//! and keep overlapping exchanges isolated.
+
+use std::rc::Rc;
+
+use sdde::bench::{run_halo_once, HaloMethod};
+use sdde::mpi::World;
+use sdde::mpix::{
+    alltoallv_crs, MpixComm, MpixInfo, NeighborAlltoallv, NeighborComm, NeighborMethod,
+    SddeAlgorithm,
+};
+use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+use sdde::solver::{jacobi, CsrLocal, DistMatrix};
+use sdde::sparse::{form_commpkg, form_neighborhood, MatrixPreset, Partition, SpmvPattern};
+
+fn world(nodes: usize, ppn: usize, flavor: MpiFlavor) -> World {
+    World::new(Topology::quartz(nodes, ppn), CostModel::preset(flavor))
+}
+
+/// Persistent SpMV (standard and locality-aware) agrees bit-for-bit with
+/// the legacy p2p halo path for every `SddeAlgorithm::VARIABLE` pattern,
+/// and matches the sequential oracle.
+#[test]
+fn persistent_spmv_agrees_bitwise_with_p2p_all_algorithms() {
+    let preset = MatrixPreset::poisson2d(16, 12);
+    let topo = Topology::quartz(2, 4);
+    let part = Partition::new(preset.n, topo.nranks());
+    let a_seq = preset.to_csr(3);
+    let x_glob: Vec<f64> = (0..preset.n).map(|i| (i % 13) as f64 - 6.0).collect();
+    let y_expect = a_seq.spmv(&x_glob);
+
+    for algo in SddeAlgorithm::VARIABLE {
+        let wrld = World::new(topo.clone(), CostModel::preset(MpiFlavor::Mvapich2));
+        let preset2 = Rc::new(preset.clone());
+        let xg = Rc::new(x_glob.clone());
+        let out = wrld.run(move |c| {
+            let preset = preset2.clone();
+            let xg = xg.clone();
+            async move {
+                let rank = c.rank();
+                let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                let info = MpixInfo::with_algorithm(algo);
+                let pat = SpmvPattern::build(&preset, part, rank, 3);
+                let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+                let (s, e) = part.range(rank);
+
+                let a_p2p = DistMatrix::build(&preset, part, rank, 3, pkg.clone());
+                let y_p2p = a_p2p.spmv(&c, &xg[s..e]).await;
+
+                let mut a_std = DistMatrix::build(&preset, part, rank, 3, pkg.clone());
+                a_std.init_halo(&mx, NeighborMethod::Standard).await;
+                let y_std = a_std.spmv(&c, &xg[s..e]).await;
+
+                let mut a_loc = DistMatrix::build(&preset, part, rank, 3, pkg);
+                a_loc.init_halo(&mx, NeighborMethod::Locality).await;
+                let y_loc = a_loc.spmv(&c, &xg[s..e]).await;
+
+                (y_p2p, y_std, y_loc)
+            }
+        });
+        let mut row = 0usize;
+        for (y_p2p, y_std, y_loc) in &out.results {
+            for i in 0..y_p2p.len() {
+                assert_eq!(
+                    y_p2p[i].to_bits(),
+                    y_std[i].to_bits(),
+                    "algo {algo:?}: standard diverged at local row {i}"
+                );
+                assert_eq!(
+                    y_p2p[i].to_bits(),
+                    y_loc[i].to_bits(),
+                    "algo {algo:?}: locality diverged at local row {i}"
+                );
+                assert!(
+                    (y_p2p[i] - y_expect[row]).abs() < 1e-12,
+                    "algo {algo:?} row {row}: {} vs {}",
+                    y_p2p[i],
+                    y_expect[row]
+                );
+                row += 1;
+            }
+        }
+        assert_eq!(row, y_expect.len());
+    }
+}
+
+/// ≥ 2048 back-to-back exchanges on every halo engine with
+/// iteration-dependent data: fixed persistent tags (and the widened legacy
+/// tag window) must never cross-talk between iterations.
+#[test]
+fn repeated_exchanges_survive_2048_iterations_without_tag_collisions() {
+    const ITERS: usize = 2100; // > 2048, and > the old 1024-tag window
+    let preset = MatrixPreset::poisson2d(8, 8);
+    let topo = Topology::quartz(2, 2);
+    let part = Partition::new(preset.n, topo.nranks());
+    for method in [None, Some(NeighborMethod::Standard), Some(NeighborMethod::Locality)] {
+        let wrld = World::new(topo.clone(), CostModel::preset(MpiFlavor::OpenMpi));
+        let preset2 = Rc::new(preset.clone());
+        let out = wrld.run(move |c| {
+            let preset = preset2.clone();
+            async move {
+                let rank = c.rank();
+                let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                let info = MpixInfo::with_algorithm(SddeAlgorithm::NonBlocking);
+                let pat = SpmvPattern::build(&preset, part, rank, 0);
+                let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+                let mut a = DistMatrix::build(&preset, part, rank, 0, pkg);
+                if let Some(m) = method {
+                    a.init_halo(&mx, m).await;
+                }
+                let (s, e) = part.range(rank);
+                for it in 0..ITERS {
+                    // Iteration-tagged values: any message leaking across
+                    // iterations lands a wrong value in some ghost slot.
+                    let x: Vec<f64> = (s..e).map(|g| (it * 31 + g) as f64).collect();
+                    let x_ext = a.halo_exchange(&c, &x).await;
+                    for (k, &gcol) in a.ghost_cols.iter().enumerate() {
+                        assert_eq!(
+                            x_ext[a.local_n() + k],
+                            (it * 31 + gcol) as f64,
+                            "method {method:?} iter {it}: ghost {gcol} stale"
+                        );
+                    }
+                }
+                ITERS
+            }
+        });
+        assert!(out.results.iter().all(|&r| r == ITERS));
+    }
+}
+
+/// Overlapping exchanges (start A, start B, wait A, wait B) on one
+/// persistent request stay isolated — no per-iteration tags needed.
+#[test]
+fn overlapping_persistent_exchanges_do_not_crosstalk() {
+    for method in [NeighborMethod::Standard, NeighborMethod::Locality] {
+        let out = world(2, 2, MpiFlavor::Mvapich2).run(move |c| async move {
+            let n = c.nranks();
+            let me = c.rank();
+            let next = (me + 1) % n;
+            let prev = (me + n - 1) % n;
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let nc = NeighborComm::create_adjacent(
+                c.clone(),
+                mx.region_kind(),
+                vec![(prev, 2)],
+                vec![(next, 2)],
+            );
+            let pa = NeighborAlltoallv::init(&mx, &nc, method).await;
+            let xa = [me as f64, 100.0 + me as f64];
+            let xb = [1000.0 + me as f64, 2000.0 + me as f64];
+            let ea = pa.start(&xa).await;
+            let eb = pa.start(&xb).await;
+            let ra = pa.wait(ea).await;
+            let rb = pa.wait(eb).await;
+            assert_eq!(ra, vec![prev as f64, 100.0 + prev as f64], "{method:?} A");
+            assert_eq!(
+                rb,
+                vec![1000.0 + prev as f64, 2000.0 + prev as f64],
+                "{method:?} B"
+            );
+            true
+        });
+        assert!(out.results.iter().all(|&ok| ok));
+    }
+}
+
+/// `form_neighborhood` hands back a NeighborComm whose adjacency is the
+/// package itself, and the raw-SDDE constructor agrees with it.
+#[test]
+fn neighbor_comm_constructors_agree_with_commpkg() {
+    let preset = MatrixPreset::fault_639_like().scaled(2000);
+    let topo = Topology::quartz(2, 3);
+    let part = Partition::new(preset.n, topo.nranks());
+    let preset2 = Rc::new(preset);
+    let out = world(2, 3, MpiFlavor::Mvapich2).run(move |c| {
+        let preset = preset2.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let info = MpixInfo::with_algorithm(SddeAlgorithm::Personalized);
+            let pat = SpmvPattern::build(&preset, part, c.rank(), 11);
+            let (pkg, nc) = form_neighborhood(&mx, &info, &pat).await.unwrap();
+
+            // from_commpkg: sources/dests mirror the package.
+            let src_ok = nc
+                .sources()
+                .iter()
+                .zip(&pkg.recv_from)
+                .all(|(&(s, cnt), (owner, cols))| s == *owner && cnt == cols.len());
+            let dst_ok = nc
+                .dests()
+                .iter()
+                .zip(&pkg.send_to)
+                .all(|(&(d, cnt), (nbr, rows))| d == *nbr && cnt == rows.len());
+
+            // from_crsv over the raw SDDE call builds the same graph.
+            let args = pat.crsv_args();
+            let res = alltoallv_crs(&mx, &info, &args).await.unwrap();
+            let nc2 = NeighborComm::from_crsv(&mx, &args, &res);
+            let same = nc2.sources() == nc.sources() && nc2.dests() == nc.dests();
+
+            src_ok && dst_ok && same && nc.sources().len() == pkg.recv_from.len()
+        }
+    });
+    assert!(out.results.iter().all(|&ok| ok));
+}
+
+/// Jacobi over the persistent locality-aware halo reproduces the p2p
+/// residual history bit-for-bit (identical arithmetic, different wires).
+#[test]
+fn jacobi_history_identical_across_halo_engines() {
+    let preset = MatrixPreset::poisson2d(12, 10);
+    let topo = Topology::quartz(2, 4);
+    let part = Partition::new(preset.n, topo.nranks());
+    let preset2 = Rc::new(preset);
+    let out = world(2, 4, MpiFlavor::Mvapich2).run(move |c| {
+        let preset = preset2.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let info = MpixInfo::with_algorithm(SddeAlgorithm::LocalityNonBlocking);
+            let pat = SpmvPattern::build(&preset, part, c.rank(), 5);
+            let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+
+            let a_p2p = DistMatrix::build(&preset, part, c.rank(), 5, pkg.clone());
+            let b = vec![1.0; a_p2p.local_n()];
+            let (_, h_p2p) = jacobi(&c, &a_p2p, &b, &CsrLocal(&a_p2p.local), 25, 1.0).await;
+
+            let mut a_loc = DistMatrix::build(&preset, part, c.rank(), 5, pkg);
+            a_loc.init_halo(&mx, NeighborMethod::Locality).await;
+            let (_, h_loc) = jacobi(&c, &a_loc, &b, &CsrLocal(&a_loc.local), 25, 1.0).await;
+
+            (h_p2p, h_loc)
+        }
+    });
+    for (h_p2p, h_loc) in &out.results {
+        assert_eq!(h_p2p.len(), h_loc.len());
+        for (a, b) in h_p2p.iter().zip(h_loc) {
+            assert_eq!(a.to_bits(), b.to_bits(), "residual history diverged");
+        }
+        assert!(
+            h_p2p.last().unwrap() < &(h_p2p[0] * 1e-3),
+            "jacobi failed to converge: {h_p2p:?}"
+        );
+    }
+}
+
+/// Socket-granularity regions work end to end in the steady state too.
+#[test]
+fn persistent_locality_socket_regions_agree() {
+    let preset = MatrixPreset::poisson2d(10, 8);
+    let topo = Topology::quartz(2, 6);
+    let part = Partition::new(preset.n, topo.nranks());
+    let preset2 = Rc::new(preset.clone());
+    let a_seq = preset.to_csr(1);
+    let x_glob: Vec<f64> = (0..preset.n).map(|i| (i % 7) as f64).collect();
+    let y_expect = a_seq.spmv(&x_glob);
+    let xg = Rc::new(x_glob);
+    let out = world(2, 6, MpiFlavor::OpenMpi).run(move |c| {
+        let preset = preset2.clone();
+        let xg = xg.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Socket);
+            let info = MpixInfo {
+                algorithm: SddeAlgorithm::LocalityPersonalized,
+                region: RegionKind::Socket,
+                ..MpixInfo::default()
+            };
+            let pat = SpmvPattern::build(&preset, part, c.rank(), 1);
+            let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+            let mut a = DistMatrix::build(&preset, part, c.rank(), 1, pkg);
+            a.init_halo(&mx, NeighborMethod::Locality).await;
+            let (s, e) = part.range(c.rank());
+            a.spmv(&c, &xg[s..e]).await
+        }
+    });
+    let got: Vec<f64> = out.results.into_iter().flatten().collect();
+    for (i, (g, e)) in got.iter().zip(&y_expect).enumerate() {
+        assert!((g - e).abs() < 1e-12, "row {i}: {g} vs {e}");
+    }
+}
+
+/// Steady-state red dots: the locality-aware persistent engine sends
+/// strictly fewer inter-node messages per iteration than either direct
+/// engine (which agree with each other).
+#[test]
+fn steady_state_locality_reduces_internode_messages() {
+    let preset = Rc::new(MatrixPreset::cage14_like().scaled(200));
+    let topo = Topology::quartz(4, 4);
+    let run = |method| {
+        run_halo_once(
+            topo.clone(),
+            MpiFlavor::Mvapich2,
+            SddeAlgorithm::NonBlocking,
+            RegionKind::Node,
+            method,
+            4,
+            preset.clone(),
+            9,
+        )
+    };
+    let (setup_p2p, _, p2p_sent) = run(HaloMethod::P2p);
+    let (_, _, std_sent) = run(HaloMethod::Persistent);
+    let (setup_loc, _, loc_sent) = run(HaloMethod::LocalityPersistent);
+    assert_eq!(setup_p2p, 0, "legacy path must have no setup phase");
+    assert!(setup_loc > 0, "locality plan negotiation is not free");
+    assert_eq!(p2p_sent, std_sent, "direct engines send identical counts");
+    assert!(
+        loc_sent < std_sent,
+        "aggregated {loc_sent} not below direct {std_sent}"
+    );
+}
