@@ -8,9 +8,19 @@
 //! benefits from aggregation while cage14 is transformed by it.
 //!
 //! Run: `cargo run --release --example pattern_explorer [-- --div 16]`
+//!
+//! With `--trace out.json`, additionally run one fully-traced SDDE on the
+//! first matrix and smallest topology and export a Chrome-trace JSON of it
+//! (the dynamic counterpart of the static pattern statistics).
 
-use sdde::simnet::{RegionKind, Topology};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use sdde::bench::figures::{run_once_traced, Variant};
+use sdde::mpix::{IntraAlgo, SddeAlgorithm};
+use sdde::simnet::{MpiFlavor, RegionKind, Topology};
 use sdde::sparse::{MatrixPreset, Partition, SpmvPattern};
+use sdde::trace::write_chrome_trace;
 use sdde::util::Args;
 
 fn main() {
@@ -21,6 +31,7 @@ fn main() {
         .get_list("nodes")
         .map(|v| v.iter().map(|s| s.parse().unwrap()).collect())
         .unwrap_or_else(|| vec![2, 4, 8, 16]);
+    let trace_out: Option<PathBuf> = args.get("trace").map(PathBuf::from);
 
     println!("matrix analogs scaled by 1/{div}, {ppn} ranks/node\n");
     for preset in MatrixPreset::paper_set() {
@@ -76,4 +87,37 @@ fn main() {
         println!();
     }
     println!("(aggregated counts are bounded by nodes-1 — the mechanism behind the paper's 20x)");
+
+    // Optional: one traced SDDE on the first matrix / smallest topology,
+    // exported as Chrome-trace JSON for chrome://tracing or Perfetto.
+    if let Some(path) = trace_out {
+        let preset = MatrixPreset::paper_set().remove(0);
+        let preset = if div > 1 { preset.scaled(div) } else { preset };
+        let nodes = node_counts.first().copied().unwrap_or(2);
+        let topo = Topology::quartz(nodes, ppn);
+        let part = Partition::new(preset.n, topo.nranks());
+        let pats: Rc<Vec<SpmvPattern>> = Rc::new(
+            (0..topo.nranks())
+                .map(|r| SpmvPattern::build(&preset, part, r, 2023))
+                .collect(),
+        );
+        let (t, trace) = run_once_traced(
+            topo,
+            MpiFlavor::Mvapich2,
+            SddeAlgorithm::LocalityNonBlocking,
+            RegionKind::Node,
+            IntraAlgo::Personalized,
+            Variant::Variable,
+            pats,
+        );
+        write_chrome_trace(&path, &trace.events).expect("writing trace");
+        println!(
+            "\ntraced {} on {nodes} nodes x {ppn} ppn (loc-nonblocking, {} ns): \
+             wrote {} ({} events)",
+            preset.name,
+            t,
+            path.display(),
+            trace.events.len()
+        );
+    }
 }

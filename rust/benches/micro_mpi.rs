@@ -110,7 +110,7 @@ fn main() {
         }
     });
     let real = t0.elapsed();
-    let (events, polls) = out.exec_stats;
+    let sdde::simnet::SimStats { events_run: events, polls } = out.exec_stats;
     let msgs = (n * rounds) as f64;
     println!(
         "  {} ranks x {} rounds: {} msgs, {events} events, {polls} polls in {:.3}s",

@@ -3,7 +3,8 @@
 //! For each (matrix, node count, algorithm): build the per-rank SpMV
 //! patterns once from the row-deterministic generator, run one simulated
 //! SDDE, and record the maximum per-rank virtual time of the exchange
-//! (all ranks enter together after a barrier) plus traffic counters.
+//! (all ranks enter together after a barrier) plus trace-derived traffic
+//! metrics (the [`crate::trace`] rollup in counters-only mode).
 
 use std::rc::Rc;
 
@@ -13,6 +14,7 @@ use crate::mpix::{
 };
 use crate::simnet::{CostModel, MpiFlavor, RegionKind, Time, Topology};
 use crate::sparse::{MatrixPreset, Partition, SpmvPattern};
+use crate::trace::{Trace, TraceConfig, TraceSummary};
 
 /// Which SDDE API a figure exercises.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,7 +168,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Vec<Point> {
                 if cfg.variant == Variant::Variable && algo == SddeAlgorithm::Rma {
                     continue;
                 }
-                let (time_ns, counters) = run_once(
+                let (time_ns, summary) = run_once(
                     topo.clone(),
                     cfg.flavor,
                     algo,
@@ -180,7 +182,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Vec<Point> {
                         "[sweep]   {:>17}: {:>12}  max-internode={}",
                         algo.name(),
                         crate::util::fmt::ns(time_ns),
-                        counters.max_internode_per_rank()
+                        summary.max_internode_per_rank()
                     );
                 }
                 points.push(Point {
@@ -189,8 +191,8 @@ pub fn run_sweep(cfg: &SweepConfig) -> Vec<Point> {
                     nodes,
                     ranks: nranks,
                     time_ns,
-                    max_internode: counters.max_internode_per_rank(),
-                    total_msgs: counters.total_user_msgs(),
+                    max_internode: summary.max_internode_per_rank(),
+                    total_msgs: summary.total_user_msgs(),
                     mean_send_nnz,
                 });
             }
@@ -199,8 +201,9 @@ pub fn run_sweep(cfg: &SweepConfig) -> Vec<Point> {
     points
 }
 
-/// Run one SDDE on a fresh world; returns (max per-rank elapsed, counters).
-pub fn run_once(
+/// Run one SDDE on a fresh world with the given trace mode.
+#[allow(clippy::too_many_arguments)]
+fn run_world(
     topo: Topology,
     flavor: MpiFlavor,
     algo: SddeAlgorithm,
@@ -208,9 +211,10 @@ pub fn run_once(
     intra: IntraAlgo,
     variant: Variant,
     patterns: Rc<Vec<SpmvPattern>>,
-) -> (Time, crate::mpi::Counters) {
-    let world = World::new(topo, CostModel::preset(flavor));
-    let out = world.run(move |c| {
+    trace: TraceConfig,
+) -> crate::mpi::RunOutput<Time> {
+    let world = World::with_trace(topo, CostModel::preset(flavor), trace);
+    world.run(move |c| {
         let patterns = patterns.clone();
         async move {
             let mx = MpixComm::new(c.clone(), region);
@@ -238,9 +242,62 @@ pub fn run_once(
             }
             c.now() - t0
         }
-    });
+    })
+}
+
+/// Run one SDDE on a fresh world; returns (max per-rank elapsed, trace
+/// rollup). The rollup mirrors the legacy `Counters` on the shared metrics
+/// (checked by a debug assertion and the conservation tests).
+pub fn run_once(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    intra: IntraAlgo,
+    variant: Variant,
+    patterns: Rc<Vec<SpmvPattern>>,
+) -> (Time, TraceSummary) {
+    let out = run_world(
+        topo,
+        flavor,
+        algo,
+        region,
+        intra,
+        variant,
+        patterns,
+        TraceConfig::counters_only(),
+    );
+    let summary = out.trace.summary;
+    debug_assert_eq!(summary.user_msgs(), out.counters.user_msgs);
+    debug_assert_eq!(summary.user_bytes(), out.counters.user_bytes);
+    debug_assert_eq!(summary.internode_sent, out.counters.internode_sent);
     let elapsed = out.results.into_iter().max().unwrap_or(0);
-    (elapsed, out.counters)
+    (elapsed, summary)
+}
+
+/// Like [`run_once`] but with full event recording: returns the complete
+/// [`Trace`] for export / critical-path analysis (the `sdde trace` path).
+pub fn run_once_traced(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    intra: IntraAlgo,
+    variant: Variant,
+    patterns: Rc<Vec<SpmvPattern>>,
+) -> (Time, Trace) {
+    let out = run_world(
+        topo,
+        flavor,
+        algo,
+        region,
+        intra,
+        variant,
+        patterns,
+        TraceConfig::full(),
+    );
+    let elapsed = out.results.into_iter().max().unwrap_or(0);
+    (elapsed, out.trace)
 }
 
 #[cfg(test)]

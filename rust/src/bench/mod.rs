@@ -8,7 +8,9 @@ pub mod figures;
 pub mod neighbor;
 pub mod report;
 
-pub use figures::{run_sweep, FigureId, Point, SweepConfig, Variant};
+pub use figures::{
+    run_once, run_once_traced, run_sweep, FigureId, Point, SweepConfig, Variant,
+};
 pub use neighbor::{
     run_halo_once, run_neighbor_sweep, HaloMethod, NeighborPoint, NeighborSweepConfig,
 };

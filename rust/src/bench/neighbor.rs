@@ -16,6 +16,7 @@ use crate::mpix::{MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
 use crate::simnet::{CostModel, MpiFlavor, RegionKind, Time, Topology};
 use crate::solver::DistMatrix;
 use crate::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
+use crate::trace::TraceConfig;
 
 /// Halo-exchange engine under measurement.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -125,7 +126,11 @@ pub fn run_halo_once(
     seed: u64,
 ) -> (Time, Time, u64) {
     let part = Partition::new(preset.n, topo.nranks());
-    let world = World::new(topo, CostModel::preset(flavor));
+    let world = World::with_trace(
+        topo,
+        CostModel::preset(flavor),
+        TraceConfig::counters_only(),
+    );
     let out = world.run(move |c| {
         let preset = preset.clone();
         async move {
@@ -154,7 +159,7 @@ pub fn run_halo_once(
 
             // Steady state: `iters` halo exchanges of a fixed vector.
             c.barrier().await;
-            let sent0 = c.counters().internode_sent[rank];
+            let sent0 = c.traced_internode_sent(rank);
             let t1 = c.now();
             let (s, e) = part.range(rank);
             let x: Vec<f64> = (s..e).map(|i| (i % 23) as f64 - 11.0).collect();
@@ -165,7 +170,7 @@ pub fn run_halo_once(
             }
             let loop_t = c.now() - t1;
             c.barrier().await;
-            let sent1 = c.counters().internode_sent[rank];
+            let sent1 = c.traced_internode_sent(rank);
             std::hint::black_box(sink);
             (setup, loop_t, sent1 - sent0)
         }

@@ -27,6 +27,11 @@
 //!   SDDE-formed patterns correct end to end.
 //! * [`runtime`] — PJRT (XLA) artifact loading so the solver's local
 //!   compute runs the AOT-compiled JAX/Pallas kernels from rust.
+//! * [`trace`] — observability: per-`World` typed event recording on the
+//!   virtual clock (sends, matches, waits, collective rounds, RMA, CPU),
+//!   per-tier × per-tag-family rollups, Chrome-trace/CSV exporters and a
+//!   happens-before critical-path extractor. Off by default; the bench
+//!   layer derives its traffic metrics from it.
 //! * [`bench`] — the figure-regeneration harness (Figs. 5–8 of the paper).
 
 pub mod bench;
@@ -36,6 +41,7 @@ pub mod runtime;
 pub mod simnet;
 pub mod solver;
 pub mod sparse;
+pub mod trace;
 pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
@@ -46,4 +52,5 @@ pub mod prelude {
         MpixInfo, NeighborAlltoallv, NeighborComm, NeighborMethod, SddeAlgorithm,
     };
     pub use crate::simnet::{CostModel, MpiFlavor, RegionKind, Tier, Time, Topology};
+    pub use crate::trace::{Trace, TraceConfig, TraceSummary};
 }

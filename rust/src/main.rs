@@ -5,6 +5,8 @@
 //! * `neighbor` — steady-state persistent neighbor-alltoallv figure
 //!   (amortized setup + locality aggregation, across iteration counts).
 //! * `sdde`     — run a single SDDE instance and print details.
+//! * `trace`    — run one fully-traced SDDE: per-tier/per-family summary,
+//!   critical path, Chrome-trace JSON (+ optional CSV) export.
 //! * `solve`    — distributed CG/Jacobi solve over an SDDE-formed pattern.
 //! * `info`     — list matrix presets, algorithms and cost-model presets.
 //!
@@ -14,6 +16,7 @@
 //! sdde figures --fig all --out results/
 //! sdde neighbor --nodes 2,4 --iters 1,16,256 --mpi both
 //! sdde sdde --matrix cage14 --nodes 8 --algo loc-nonblocking --variant v
+//! sdde trace --matrix cage14 --div 16 --nodes 4 --ppn 8 --out trace.json
 //! sdde solve --nx 48 --ny 48 --nodes 2 --ppn 4 --solver cg --halo loc
 //! ```
 
@@ -30,6 +33,7 @@ use sdde::mpix::{IntraAlgo, MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
 use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
 use sdde::solver::{cg, jacobi, CsrLocal, DistMatrix};
 use sdde::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
+use sdde::trace::{critical_path, write_chrome_trace, write_trace_csv};
 use sdde::util::{fmt, Args};
 use std::rc::Rc;
 
@@ -40,6 +44,7 @@ fn main() {
         "figures" => cmd_figures(&args),
         "neighbor" => cmd_neighbor(&args),
         "sdde" => cmd_sdde(&args),
+        "trace" => cmd_trace(&args),
         "solve" => cmd_solve(&args),
         "info" => cmd_info(),
         _ => {
@@ -56,7 +61,7 @@ fn main() {
 fn print_help() {
     println!(
         "sdde — A More Scalable Sparse Dynamic Data Exchange (reproduction)\n\n\
-         USAGE: sdde <figures|sdde|solve|info> [flags]\n\n\
+         USAGE: sdde <figures|neighbor|sdde|trace|solve|info> [flags]\n\n\
          figures --fig <5|6|7|8|all> [--quick] [--div N] [--out DIR]\n\
                  [--nodes 2,4,..] [--ppn N] [--matrices a,b] [--algos x,y]\n\
                  [--region node|socket] [--seed N]\n\
@@ -66,6 +71,9 @@ fn print_help() {
                  [--out DIR] [--seed N]\n\
          sdde    --matrix <preset> --nodes N [--ppn N] [--algo NAME]\n\
                  [--variant crs|v] [--mpi openmpi|mvapich2] [--div N]\n\
+         trace   [--matrix <preset>] [--div N] [--nodes N] [--ppn N]\n\
+                 [--algo NAME] [--variant crs|v] [--mpi openmpi|mvapich2]\n\
+                 [--seed N] [--out FILE.json] [--csv FILE.csv]\n\
          solve   [--nx N --ny N] [--nodes N --ppn N] [--solver cg|jacobi]\n\
                  [--algo NAME] [--iters N] [--halo p2p|standard|loc]\n\
          info"
@@ -252,7 +260,7 @@ fn cmd_sdde(args: &Args) -> Result<()> {
         send_nnz.iter().sum::<usize>() as f64 / nranks as f64,
         send_nnz.iter().max().unwrap()
     );
-    let (t, counters) = sdde::bench::figures::run_once(
+    let (t, summary) = sdde::bench::figures::run_once(
         topo,
         flavor,
         algo,
@@ -264,13 +272,91 @@ fn cmd_sdde(args: &Args) -> Result<()> {
     println!("SDDE time (max over ranks): {}", fmt::ns(t));
     println!(
         "max inter-node msgs/rank: {}   total user msgs: {}",
-        counters.max_internode_per_rank(),
-        counters.total_user_msgs()
+        summary.max_internode_per_rank(),
+        summary.total_user_msgs()
     );
     println!(
         "per-tier msgs [self, intra-socket, inter-socket, inter-node]: {:?}",
-        counters.user_msgs
+        summary.user_msgs()
     );
+    Ok(())
+}
+
+/// One fully-traced SDDE run: per-tier/per-family summary table, critical
+/// path, Chrome-trace JSON export (plus optional CSV).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let matrix = args.get_or("matrix", "cage14");
+    let div = args.get_parsed("div", 16usize);
+    let preset = MatrixPreset::parse(matrix)
+        .map(|p| if div > 1 { p.scaled(div) } else { p })
+        .ok_or_else(|| anyhow::anyhow!("unknown matrix preset {matrix}"))?;
+    let nodes = args.get_parsed("nodes", 4usize);
+    let ppn = args.get_parsed("ppn", 8usize);
+    let algo = SddeAlgorithm::parse(args.get_or("algo", "loc-nonblocking"))
+        .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+    let flavor = MpiFlavor::parse(args.get_or("mpi", "mvapich2"))
+        .ok_or_else(|| anyhow::anyhow!("unknown mpi flavor"))?;
+    let variant = match args.get_or("variant", "v") {
+        "v" | "alltoallv" => sdde::bench::Variant::Variable,
+        "crs" | "alltoall" => sdde::bench::Variant::ConstSize,
+        v => bail!("unknown variant {v}"),
+    };
+    let seed = args.get_parsed("seed", 2023u64);
+    let out_path = PathBuf::from(args.get_or("out", "trace.json"));
+
+    let topo = Topology::quartz(nodes, ppn);
+    let nranks = topo.nranks();
+    let part = Partition::new(preset.n, nranks);
+    eprintln!(
+        "tracing: matrix={} n={} ranks={} ({} nodes x {} ppn), algo={}, mpi={}",
+        preset.name,
+        preset.n,
+        nranks,
+        nodes,
+        ppn,
+        algo.name(),
+        flavor.name()
+    );
+    let patterns: Rc<Vec<SpmvPattern>> = Rc::new(
+        (0..nranks)
+            .map(|r| SpmvPattern::build(&preset, part, r, seed))
+            .collect(),
+    );
+    let (t, trace) = sdde::bench::run_once_traced(
+        topo,
+        flavor,
+        algo,
+        RegionKind::Node,
+        IntraAlgo::Personalized,
+        variant,
+        patterns,
+    );
+    if trace.events.is_empty() {
+        bail!("trace recorded no events (tracing disabled?)");
+    }
+    let title = format!(
+        "{} / {} / {} nodes x {} ppn ({})",
+        preset.name,
+        algo.name(),
+        nodes,
+        ppn,
+        flavor.name()
+    );
+    println!("{}", trace.summary.render(&title));
+    println!();
+    println!("{}", critical_path(&trace.events).render());
+    println!("SDDE time (max over ranks): {}", fmt::ns(t));
+    write_chrome_trace(&out_path, &trace.events)?;
+    println!(
+        "wrote {} ({} events; open in chrome://tracing or Perfetto)",
+        out_path.display(),
+        trace.events.len()
+    );
+    if let Some(csv) = args.get("csv") {
+        let csv_path = PathBuf::from(csv);
+        write_trace_csv(&csv_path, &trace.events)?;
+        println!("wrote {}", csv_path.display());
+    }
     Ok(())
 }
 

@@ -89,11 +89,13 @@ impl Comm {
             while dist < m {
                 let partner = me ^ dist;
                 let tag = coll_tag(TAG_ALLREDUCE, seq, round);
+                let t0 = self.now();
                 let sreq = self.isend(partner, tag, Payload::longs(&vec)).await;
                 let msg = self.recv(partner, tag).await;
                 op.apply(&mut vec, &msg.payload.words);
                 self.charge_cpu(elem_cost).await;
                 sreq.await;
+                self.trace_coll_round(partner, tag, 8 * vec.len(), t0);
                 dist <<= 1;
                 round += 1;
             }
@@ -124,9 +126,11 @@ impl Comm {
             let to = (me + dist) % n;
             let from = (me + n - dist % n) % n;
             let tag = coll_tag(TAG_BARRIER, seq, round);
+            let t0 = self.now();
             let sreq = self.isend(to, tag, Payload::empty()).await;
             self.recv(from, tag).await;
             sreq.await;
+            self.trace_coll_round(to, tag, 0, t0);
             dist <<= 1;
             round += 1;
         }
@@ -156,9 +160,11 @@ impl Comm {
                 let to = (me + dist) % n;
                 let from = (me + n - dist % n) % n;
                 let tag = coll_tag(TAG_IBARRIER, seq, round);
+                let t0 = comm.now();
                 let sreq = comm.isend(to, tag, Payload::empty()).await;
                 comm.recv(from, tag).await;
                 sreq.await;
+                comm.trace_coll_round(to, tag, 0, t0);
                 dist <<= 1;
                 round += 1;
             }

@@ -11,6 +11,7 @@ use std::rc::Rc;
 
 use super::world::Comm;
 use crate::simnet::Tier;
+use crate::trace::{Event, EventKind};
 
 /// Target-side storage for one window at one rank.
 pub(crate) struct WinState {
@@ -82,7 +83,21 @@ impl Window {
 
         // NIC serialization + wire through the shared fabric path (same
         // contention as p2p), but no matching at the target.
+        let t0 = c.now();
         let (_inject_end, arrival) = c.state.transfer_times(c.rank(), dst, tier, bytes, bytes);
+        if c.state.tracer.enabled() {
+            c.state.tracer.record(Event {
+                kind: EventKind::RmaPut,
+                rank: c.rank(),
+                peer: dst,
+                tag: 0,
+                bytes,
+                tier,
+                t_start: t0,
+                t_end: arrival,
+                msg_id: 0,
+            });
+        }
         self.last_arrival
             .set(self.last_arrival.get().max(arrival));
         let (state, id) = (c.state.clone(), self.id);

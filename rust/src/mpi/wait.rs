@@ -17,6 +17,8 @@ use std::rc::Rc;
 use std::task::{Context, Poll, Waker};
 
 use super::world::{Comm, Request};
+use crate::simnet::{Tier, Time};
+use crate::trace::{Event, EventKind};
 
 /// One-shot boolean condition with waker registration (O(1) per wake —
 /// no rescanning of request arrays).
@@ -84,6 +86,8 @@ pub struct WaitAny<'a> {
     comm: &'a Comm,
     epoch0: u64,
     signals: &'a [&'a Signal],
+    /// Virtual time at construction — start of the traced wait span.
+    t0: Time,
 }
 
 impl<'a> WaitAny<'a> {
@@ -92,6 +96,7 @@ impl<'a> WaitAny<'a> {
             comm,
             epoch0: comm.arrival_epoch(),
             signals,
+            t0: comm.now(),
         }
     }
 
@@ -103,13 +108,37 @@ impl<'a> WaitAny<'a> {
     }
 }
 
+impl WaitAny<'_> {
+    /// Trace the resolved wait span `[t0, now]` (no-op when disabled or
+    /// when the wait resolved without advancing virtual time).
+    fn trace_wait(&self) {
+        let st = &self.comm.state;
+        let now = st.sim.now();
+        if now > self.t0 && st.tracer.enabled() {
+            st.tracer.record(Event {
+                kind: EventKind::Wait,
+                rank: self.comm.rank(),
+                peer: self.comm.rank(),
+                tag: 0,
+                bytes: 0,
+                tier: Tier::SelfMsg,
+                t_start: self.t0,
+                t_end: now,
+                msg_id: 0,
+            });
+        }
+    }
+}
+
 impl Future for WaitAny<'_> {
     type Output = ();
     fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
         if self.comm.arrival_epoch() != self.epoch0 {
+            self.trace_wait();
             return Poll::Ready(());
         }
         if self.signals.iter().any(|s| s.is_set()) {
+            self.trace_wait();
             return Poll::Ready(());
         }
         self.comm.register_arrival_waker(cx.waker());

@@ -10,7 +10,8 @@ use std::rc::Rc;
 use std::task::{Context, Poll, Waker};
 
 use super::{Tag, ANY_SOURCE, ANY_TAG, TAG_INTERNAL_BASE};
-use crate::simnet::{CostModel, Sim, SimHandle, Tier, Time, Topology};
+use crate::simnet::{CostModel, Sim, SimHandle, SimStats, Tier, Time, Topology};
+use crate::trace::{Event, EventKind, Trace, TraceConfig, TraceSummary, Tracer};
 
 // ---------------------------------------------------------------------------
 // Payload / message types
@@ -228,6 +229,8 @@ struct InMsg {
     rendezvous: bool,
     /// Synchronous send waiting for a match ack (the sender's request).
     sync_req: Option<Request>,
+    /// Trace id linking this message back to its send event (0 untraced).
+    msg_id: u64,
 }
 
 struct RecvSpec {
@@ -281,6 +284,8 @@ pub(crate) struct WorldState {
     pub(crate) node_tx_free: Vec<Cell<Time>>,
     /// Shared per-node NIC: receive-side busy-until.
     pub(crate) node_rx_free: Vec<Cell<Time>>,
+    /// Event recorder (disabled by default; see [`World::with_trace`]).
+    pub(crate) tracer: Tracer,
 }
 
 impl WorldState {
@@ -343,12 +348,23 @@ pub struct RunOutput<R> {
     pub end_time: Time,
     /// Traffic counters accumulated over the run.
     pub counters: Counters,
-    /// (events, polls) executor statistics.
-    pub exec_stats: (u64, u64),
+    /// Executor statistics (events run, futures polled).
+    pub exec_stats: SimStats,
+    /// Everything the tracer recorded (empty unless the world was built
+    /// with [`World::with_trace`]).
+    pub trace: Trace,
 }
 
 impl World {
     pub fn new(topo: Topology, cost: CostModel) -> World {
+        World::with_trace(topo, cost, TraceConfig::off())
+    }
+
+    /// Like [`World::new`], but with tracing enabled per `trace`
+    /// ([`TraceConfig::counters_only`] for rollups,
+    /// [`TraceConfig::full`] for exportable event traces). Tracing is
+    /// host-side only — it never changes virtual times.
+    pub fn with_trace(topo: Topology, cost: CostModel, trace: TraceConfig) -> World {
         let sim = Sim::new();
         let n = topo.nranks();
         let topo2 = topo.nodes;
@@ -363,6 +379,7 @@ impl World {
             }),
             node_tx_free: (0..topo2).map(|_| Cell::new(0)).collect(),
             node_rx_free: (0..topo2).map(|_| Cell::new(0)).collect(),
+            tracer: Tracer::new(trace, n),
         });
         World { sim, state }
     }
@@ -403,6 +420,7 @@ impl World {
         let end_time = self.sim.run();
         let counters = self.state.counters.borrow().clone();
         let exec_stats = self.sim.stats();
+        let trace = self.state.tracer.take();
         let results = Rc::try_unwrap(results)
             .ok()
             .expect("rank results still borrowed")
@@ -415,6 +433,7 @@ impl World {
             end_time,
             counters,
             exec_stats,
+            trace,
         }
     }
 }
@@ -469,6 +488,19 @@ impl Comm {
             r.cpu_free = start + cost;
             r.cpu_free
         };
+        if cost > 0 && self.state.tracer.enabled() {
+            self.state.tracer.record(Event {
+                kind: EventKind::CpuCharge,
+                rank: self.rank,
+                peer: self.rank,
+                tag: 0,
+                bytes: 0,
+                tier: Tier::SelfMsg,
+                t_start: until - cost,
+                t_end: until,
+                msg_id: 0,
+            });
+        }
         self.state.sim.sleep_until(until).await;
     }
 
@@ -518,9 +550,29 @@ impl Comm {
         // NIC serialization (per-rank pipe + shared per-node NIC) and wire.
         // Rendezvous injects only the RTS here; the data bytes are charged
         // when the receiver matches.
+        let t_inject = st.sim.now();
         let xfer_bytes = if rendezvous { 16 } else { bytes };
         let (inject_end, arrival) =
             st.transfer_times(self.rank, dst, tier, xfer_bytes, xfer_bytes);
+
+        let msg_id = st.tracer.next_msg_id();
+        if st.tracer.enabled() {
+            st.tracer.record(Event {
+                kind: if rendezvous {
+                    EventKind::RendezvousSend
+                } else {
+                    EventKind::EagerSend
+                },
+                rank: self.rank,
+                peer: dst,
+                tag,
+                bytes,
+                tier,
+                t_start: t_inject,
+                t_end: arrival,
+                msg_id,
+            });
+        }
 
         let req = Request::new();
         // Eager non-sync sends complete at local injection completion.
@@ -538,7 +590,7 @@ impl Comm {
             None
         };
         st.sim.schedule(arrival, move || {
-            deliver(&state, src, dst, tag, payload, rendezvous, sync_req);
+            deliver(&state, src, dst, tag, payload, rendezvous, sync_req, msg_id);
         });
         req
     }
@@ -599,6 +651,7 @@ impl Comm {
         let now = st.sim.now();
         let tier = st.topo.tier(m.src, self.rank);
         let req = Request::new();
+        let (bytes, msg_id) = (m.payload.bytes, m.msg_id);
         let msg = Msg {
             src: m.src,
             tag: m.tag,
@@ -610,6 +663,19 @@ impl Comm {
             let data = st.cost.inject_time(tier, msg.payload.bytes)
                 + st.cost.wire_time(tier, msg.payload.bytes);
             let done_at = now + cts + data;
+            if st.tracer.enabled() {
+                st.tracer.record(Event {
+                    kind: EventKind::UnexpectedHit,
+                    rank: self.rank,
+                    peer: msg.src,
+                    tag: msg.tag,
+                    bytes,
+                    tier,
+                    t_start: now,
+                    t_end: done_at,
+                    msg_id,
+                });
+            }
             let req2 = req.clone();
             let sync_req = m.sync_req.clone();
             st.sim.schedule(done_at, move || {
@@ -619,6 +685,19 @@ impl Comm {
                 req2.complete(Some(msg));
             });
         } else {
+            if st.tracer.enabled() {
+                st.tracer.record(Event {
+                    kind: EventKind::UnexpectedHit,
+                    rank: self.rank,
+                    peer: msg.src,
+                    tag: msg.tag,
+                    bytes,
+                    tier,
+                    t_start: now,
+                    t_end: now,
+                    msg_id,
+                });
+            }
             if let Some(s) = &m.sync_req {
                 // Ack travels back one latency.
                 let s = s.clone();
@@ -719,10 +798,43 @@ impl Comm {
     pub(crate) fn bump_counter(&self, f: impl FnOnce(&mut Counters)) {
         f(&mut self.state.counters.borrow_mut());
     }
+
+    /// Snapshot of the trace rollup counters so far (empty when tracing is
+    /// disabled; callers usually read the final one from [`RunOutput`]).
+    pub fn trace_summary(&self) -> TraceSummary {
+        self.state.tracer.summary_snapshot()
+    }
+
+    /// Trace-derived count of *user* inter-node messages injected by `rank`
+    /// so far. Mirrors `Counters::internode_sent` bit for bit when tracing
+    /// is enabled; always 0 when disabled.
+    pub fn traced_internode_sent(&self, rank: usize) -> u64 {
+        self.state.tracer.internode_sent(rank)
+    }
+
+    /// Trace helper for the collective layer: record one algorithm round
+    /// (partner exchange) spanning `[t_start, now]`. No-op when disabled.
+    pub(crate) fn trace_coll_round(&self, peer: usize, tag: Tag, bytes: usize, t_start: Time) {
+        if self.state.tracer.enabled() {
+            let tier = self.state.topo.tier(self.rank, peer);
+            self.state.tracer.record(Event {
+                kind: EventKind::CollRound,
+                rank: self.rank,
+                peer,
+                tag,
+                bytes,
+                tier,
+                t_start,
+                t_end: self.state.sim.now(),
+                msg_id: 0,
+            });
+        }
+    }
 }
 
 /// Arrival delivery: match against posted receives or append to the
 /// unexpected queue; wake probe waiters.
+#[allow(clippy::too_many_arguments)]
 fn deliver(
     state: &Rc<WorldState>,
     src: usize,
@@ -731,6 +843,7 @@ fn deliver(
     payload: Payload,
     rendezvous: bool,
     sync_req: Option<Request>,
+    msg_id: u64,
 ) {
     let mut r = state.ranks[dst].borrow_mut();
     r.arrival_epoch += 1;
@@ -749,6 +862,7 @@ fn deliver(
         let mcost = state.cost.match_cost(scanned);
         r.cpu_free = r.cpu_free.max(now) + mcost;
         let tier = state.topo.tier(src, dst);
+        let bytes = payload.bytes;
         let msg = Msg { src, tag, payload };
         if rendezvous {
             let cts = state.cost.latency[tier as usize];
@@ -756,6 +870,7 @@ fn deliver(
                 + state.cost.wire_time(tier, msg.payload.bytes);
             let done_at = now + mcost + cts + data;
             drop(r);
+            record_recv_match(state, dst, &msg, bytes, tier, now, done_at, msg_id);
             let req = spec.req;
             state.sim.schedule(done_at, move || {
                 if let Some(s) = &sync_req {
@@ -773,6 +888,7 @@ fn deliver(
                     });
             }
             drop(r);
+            record_recv_match(state, dst, &msg, bytes, tier, now, now + mcost, msg_id);
             spec.req.complete(Some(msg));
         }
     } else {
@@ -782,11 +898,39 @@ fn deliver(
             payload,
             rendezvous,
             sync_req,
+            msg_id,
         });
         drop(r);
     }
     for w in wakers {
         w.wake();
+    }
+}
+
+/// Trace helper: one posted-receive match event (no-op when disabled).
+#[allow(clippy::too_many_arguments)]
+fn record_recv_match(
+    state: &Rc<WorldState>,
+    dst: usize,
+    msg: &Msg,
+    bytes: usize,
+    tier: Tier,
+    t_start: Time,
+    t_end: Time,
+    msg_id: u64,
+) {
+    if state.tracer.enabled() {
+        state.tracer.record(Event {
+            kind: EventKind::RecvMatch,
+            rank: dst,
+            peer: msg.src,
+            tag: msg.tag,
+            bytes,
+            tier,
+            t_start,
+            t_end,
+            msg_id,
+        });
     }
 }
 

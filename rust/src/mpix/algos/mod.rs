@@ -18,7 +18,7 @@ use crate::mpix::{CrsArgs, CrsResult, CrsvArgs, CrsvResult};
 /// User-tag family reserved for SDDE traffic (below `TAG_INTERNAL_BASE`, so
 /// SDDE messages count as *user* messages in the figure counters — they are
 /// the paper's red-dot metric).
-const TAG_SDDE: Tag = 0x1000;
+pub(crate) const TAG_SDDE: Tag = 0x1000;
 
 /// Per-call tag pair; every collective SDDE invocation gets fresh tags so
 /// back-to-back exchanges cannot cross-talk.

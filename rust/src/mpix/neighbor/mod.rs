@@ -27,3 +27,4 @@ mod persistent;
 
 pub use comm::NeighborComm;
 pub use persistent::{NeighborAlltoallv, NeighborExchange, NeighborMethod};
+pub(crate) use persistent::TAG_NEIGHBOR;

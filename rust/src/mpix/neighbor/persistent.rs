@@ -12,8 +12,14 @@
 //! message from a given source always pairs with iteration `k`'s receive.
 //! Overlapping exchanges (`start` A, `start` B, `wait` A, `wait` B) are
 //! supported; with the locality-aware method they must be waited in start
-//! order, since forwarding work happens in `wait` (the standard method has
-//! no such constraint — its matching is purely posted-order).
+//! order, since forwarding work happens in `wait`: waiting exchange B
+//! first would emit B's intra-region forwards, which then match the
+//! forward receives that exchange A posted — silent data corruption. The
+//! request object tracks start/wait sequence numbers and **panics** on an
+//! out-of-order locality-aware wait instead (the standard method has no
+//! such constraint — its matching is purely posted-order).
+
+use std::cell::Cell;
 
 use crate::mpi::{waitall, Payload, Request, Tag};
 use crate::mpix::MpixComm;
@@ -24,7 +30,7 @@ use super::locality::{build_locality_plan, Plan};
 /// User-tag family for persistent neighbor exchanges — disjoint from the
 /// SDDE family (`0x1000..0x3000`) and the legacy halo family
 /// (`0x0010_0000..0x0100_0000`). Two tags (data, forward) per `init`.
-const TAG_NEIGHBOR: Tag = 0x4000;
+pub(crate) const TAG_NEIGHBOR: Tag = 0x4000;
 
 /// Steady-state exchange strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -66,6 +72,8 @@ pub struct NeighborExchange {
     inter_recv: Vec<Request>,
     fwd_recv: Vec<Request>,
     recvbuf: Vec<f64>,
+    /// Start-order sequence number (checked by locality-aware `wait`).
+    seq: u64,
 }
 
 /// The persistent request object. `sendbuf`/`recvbuf` are flat `f64`
@@ -82,6 +90,9 @@ pub struct NeighborAlltoallv {
     rdispls: Vec<usize>,
     send_words: usize,
     recv_words: usize,
+    /// Exchanges started / waited so far (wait-order hazard detection).
+    started: Cell<u64>,
+    waited: Cell<u64>,
 }
 
 impl NeighborAlltoallv {
@@ -128,6 +139,8 @@ impl NeighborAlltoallv {
             rdispls,
             send_words,
             recv_words,
+            started: Cell::new(0),
+            waited: Cell::new(0),
         }
     }
 
@@ -211,12 +224,15 @@ impl NeighborAlltoallv {
             send_reqs.push(c.isend(a.corr, self.tag_data, Payload::doubles(&buf)).await);
         }
 
+        let seq = self.started.get();
+        self.started.set(seq + 1);
         NeighborExchange {
             send_reqs,
             direct_recv,
             inter_recv,
             fwd_recv,
             recvbuf: vec![0.0; self.recv_words],
+            seq,
         }
     }
 
@@ -224,6 +240,22 @@ impl NeighborAlltoallv {
     /// receive buffer (layout per [`Self::rdispls`]).
     pub async fn wait(&self, mut ex: NeighborExchange) -> Vec<f64> {
         let c = self.nc.comm();
+
+        // Locality-aware forwarding happens *inside* wait: waiting a newer
+        // exchange first would push its tag_fwd messages into an older
+        // exchange's posted forward receives (silent corruption) — refuse.
+        if self.method == NeighborMethod::Locality {
+            assert_eq!(
+                ex.seq,
+                self.waited.get(),
+                "locality-aware NeighborAlltoallv waited out of start order \
+                 (exchange #{} waited while #{} is the oldest outstanding); \
+                 wait in start order or use NeighborMethod::Standard",
+                ex.seq,
+                self.waited.get(),
+            );
+        }
+        self.waited.set(ex.seq + 1);
 
         // 1. Corresponding-rank role: drain the aggregated inter-region
         //    buffers, keep own segments, forward the rest intra-region.

@@ -22,6 +22,16 @@ use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
 /// Virtual time in nanoseconds since simulation start.
 pub type Time = u64;
 
+/// Executor statistics reported by [`Sim::stats`] — the §Perf metric of
+/// the discrete-event engine itself (host-side work, not virtual time).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimStats {
+    /// Timer events popped and run (message deliveries, sleeps, wakes).
+    pub events_run: u64,
+    /// Futures polled (ready-queue drains; counts re-polls after wakes).
+    pub polls: u64,
+}
+
 type BoxFut = Pin<Box<dyn Future<Output = ()> + 'static>>;
 type EventCb = Box<dyn FnOnce() + 'static>;
 
@@ -236,9 +246,12 @@ impl Sim {
         self.inner.now.get()
     }
 
-    /// (events run, futures polled) — used by the §Perf harness.
-    pub fn stats(&self) -> (u64, u64) {
-        (self.inner.events_run.get(), self.inner.polls.get())
+    /// Executor statistics — used by the §Perf harness.
+    pub fn stats(&self) -> SimStats {
+        SimStats {
+            events_run: self.inner.events_run.get(),
+            polls: self.inner.polls.get(),
+        }
     }
 }
 

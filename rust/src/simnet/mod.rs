@@ -15,5 +15,5 @@ pub mod exec;
 pub mod topology;
 
 pub use cost::{CostModel, MpiFlavor};
-pub use exec::{Sim, SimHandle, Time};
+pub use exec::{Sim, SimHandle, SimStats, Time};
 pub use topology::{RegionKind, Tier, Topology};

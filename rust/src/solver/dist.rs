@@ -19,12 +19,12 @@ use crate::sparse::{CommPkg, CsrMatrix, MatrixPreset, Partition};
 /// Tag family for the legacy p2p halo exchange (user tag space, disjoint
 /// from the SDDE family `0x1000..0x3000` and the persistent-neighbor
 /// family `0x4000..0x8000`).
-const TAG_HALO: Tag = 0x0010_0000;
+pub(crate) const TAG_HALO: Tag = 0x0010_0000;
 /// Distinct halo tags before the sequence recycles. The old window of
 /// 0x400 wrapped after 1024 exchanges, which could cross-talk between
 /// overlapping exchanges; ~15.7M leaves no realistic overlap window (and
 /// the persistent path needs no per-iteration tags at all).
-const TAG_HALO_WINDOW: Tag = 0x00F0_0000;
+pub(crate) const TAG_HALO_WINDOW: Tag = 0x00F0_0000;
 
 /// Pluggable local SpMV: `x_ext` is `[x_local ++ ghosts]` (ghost order =
 /// `DistMatrix::ghost_cols`); returns `y_local`.

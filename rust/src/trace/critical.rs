@@ -1,0 +1,306 @@
+//! Happens-before critical-path extraction over a recorded trace.
+//!
+//! The virtual-time DAG has two edge kinds: *program order* (events on one
+//! rank, ordered by time) and *message order* (a send happens-before the
+//! recv that consumed it; the pair shares a `msg_id`). The critical path
+//! is found by walking backward from the globally latest-ending event,
+//! at each step moving to the latest-ending predecessor — the matching
+//! send (for recv events) or the latest earlier event on the same rank —
+//! the same longest-chain construction OTF2/Scalasca-style tools apply to
+//! real MPI traces. The report attributes the chain's time to event kinds
+//! and tag families, answering "which algorithm / which protocol leg is
+//! the bottleneck".
+
+use std::collections::HashMap;
+
+use crate::simnet::Time;
+use crate::util::fmt;
+
+use super::event::{tier_name, Event, EventKind, TagFamily};
+
+/// The extracted chain plus its attribution.
+#[derive(Clone, Debug, Default)]
+pub struct CriticalPath {
+    /// Chain events in chronological order (last = latest-ending event).
+    pub steps: Vec<Event>,
+    /// `t_end` of the final event (the traced makespan).
+    pub makespan_ns: Time,
+    /// Sum of step durations (< makespan when the chain has idle gaps).
+    pub covered_ns: Time,
+    /// (kind, total ns on the chain), descending.
+    pub by_kind: Vec<(EventKind, Time)>,
+    /// (family, total ns on the chain) over tagged message events,
+    /// descending — each algorithm layer's share of the bottleneck.
+    pub by_family: Vec<(TagFamily, Time)>,
+}
+
+/// Extract the critical path of `events` (any order; empty in → empty out).
+pub fn critical_path(events: &[Event]) -> CriticalPath {
+    if events.is_empty() {
+        return CriticalPath::default();
+    }
+
+    // msg_id → index of the send event that created the message.
+    let mut send_of: HashMap<u64, usize> = HashMap::new();
+    // rank → event indices sorted by t_end (local-predecessor lookup).
+    let mut per_rank: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, e) in events.iter().enumerate() {
+        if e.msg_id != 0
+            && matches!(e.kind, EventKind::EagerSend | EventKind::RendezvousSend)
+        {
+            send_of.insert(e.msg_id, i);
+        }
+        per_rank.entry(e.rank).or_default().push(i);
+    }
+    for v in per_rank.values_mut() {
+        v.sort_by_key(|&i| (events[i].t_end, i));
+    }
+
+    // Latest-ending event starts the backward walk.
+    let mut cur = (0..events.len())
+        .max_by_key(|&i| (events[i].t_end, i))
+        .unwrap();
+    let mut visited = vec![false; events.len()];
+    visited[cur] = true;
+    let mut chain = vec![cur];
+    loop {
+        let e = &events[cur];
+        // Message predecessor: the send this recv consumed.
+        let remote = match e.kind {
+            EventKind::RecvMatch | EventKind::UnexpectedHit => {
+                send_of.get(&e.msg_id).copied().filter(|&i| i != cur)
+            }
+            _ => None,
+        };
+        // Program-order predecessor: latest same-rank event ending at or
+        // before this one starts (binary search over the t_end-sorted
+        // list; skip already-visited entries to guarantee termination).
+        let local = per_rank.get(&e.rank).and_then(|v| {
+            let mut hi = v.partition_point(|&i| events[i].t_end <= e.t_start);
+            while hi > 0 {
+                hi -= 1;
+                if !visited[v[hi]] {
+                    return Some(v[hi]);
+                }
+            }
+            None
+        });
+        let next = match (remote, local) {
+            (Some(r), Some(l)) if !visited[r] => {
+                if events[r].t_end >= events[l].t_end {
+                    r
+                } else {
+                    l
+                }
+            }
+            (Some(r), None) if !visited[r] => r,
+            (_, Some(l)) => l,
+            _ => break,
+        };
+        visited[next] = true;
+        chain.push(next);
+        cur = next;
+    }
+    chain.reverse();
+
+    let steps: Vec<Event> = chain.iter().map(|&i| events[i]).collect();
+    let makespan_ns = steps.last().map(|e| e.t_end).unwrap_or(0);
+    let covered_ns = steps.iter().map(|e| e.duration()).sum();
+    let mut by_kind_map: HashMap<EventKind, Time> = HashMap::new();
+    let mut by_family_map: HashMap<TagFamily, Time> = HashMap::new();
+    for e in &steps {
+        *by_kind_map.entry(e.kind).or_default() += e.duration();
+        if e.kind.is_send()
+            || matches!(e.kind, EventKind::RecvMatch | EventKind::UnexpectedHit)
+        {
+            *by_family_map.entry(e.family()).or_default() += e.duration();
+        }
+    }
+    let mut by_kind: Vec<_> = by_kind_map.into_iter().collect();
+    by_kind.sort_by_key(|&(k, t)| (std::cmp::Reverse(t), k.name()));
+    let mut by_family: Vec<_> = by_family_map.into_iter().collect();
+    by_family.sort_by_key(|&(f, t)| (std::cmp::Reverse(t), f.name()));
+
+    CriticalPath {
+        steps,
+        makespan_ns,
+        covered_ns,
+        by_kind,
+        by_family,
+    }
+}
+
+impl CriticalPath {
+    /// Human-readable report: shares by kind and family, then the tail of
+    /// the chain itself.
+    pub fn render(&self) -> String {
+        if self.steps.is_empty() {
+            return "-- critical path: (empty trace) --\n".to_string();
+        }
+        let mut out = format!(
+            "-- critical path: {} over {} steps ({} on-chain, {} gaps) --\n",
+            fmt::ns(self.makespan_ns),
+            self.steps.len(),
+            fmt::ns(self.covered_ns),
+            fmt::ns(self.makespan_ns.saturating_sub(self.covered_ns)),
+        );
+        let pct = |t: Time| {
+            if self.makespan_ns == 0 {
+                0.0
+            } else {
+                100.0 * t as f64 / self.makespan_ns as f64
+            }
+        };
+        out.push_str("share by kind:   ");
+        for (i, (k, t)) in self.by_kind.iter().enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            let _ = std::fmt::Write::write_fmt(
+                &mut out,
+                format_args!("{} {:.1}%", k.name(), pct(*t)),
+            );
+        }
+        out.push('\n');
+        if !self.by_family.is_empty() {
+            out.push_str("share by family: ");
+            for (i, (f, t)) in self.by_family.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let _ = std::fmt::Write::write_fmt(
+                    &mut out,
+                    format_args!("{} {:.1}%", f.name(), pct(*t)),
+                );
+            }
+            out.push('\n');
+        }
+        let tail = self.steps.len().saturating_sub(12);
+        if tail > 0 {
+            let _ = std::fmt::Write::write_fmt(
+                &mut out,
+                format_args!("chain tail (last 12 of {} steps):\n", self.steps.len()),
+            );
+        } else {
+            out.push_str("chain:\n");
+        }
+        for e in &self.steps[tail..] {
+            let _ = std::fmt::Write::write_fmt(
+                &mut out,
+                format_args!(
+                    "  [{:>12} .. {:>12}] {:<14} rank {} -> {} tag {:#x} {} ({})\n",
+                    e.t_start,
+                    e.t_end,
+                    e.kind.name(),
+                    e.rank,
+                    e.peer,
+                    e.tag,
+                    fmt::bytes(e.bytes as u64),
+                    tier_name(e.tier),
+                ),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::Tier;
+
+    fn ev(
+        kind: EventKind,
+        rank: usize,
+        peer: usize,
+        t_start: Time,
+        t_end: Time,
+        msg_id: u64,
+    ) -> Event {
+        Event {
+            kind,
+            rank,
+            peer,
+            tag: 0x1000,
+            bytes: 8,
+            tier: Tier::InterNode,
+            t_start,
+            t_end,
+            msg_id,
+        }
+    }
+
+    #[test]
+    fn empty_trace_gives_empty_path() {
+        let cp = critical_path(&[]);
+        assert!(cp.steps.is_empty());
+        assert_eq!(cp.makespan_ns, 0);
+        assert!(cp.render().contains("empty trace"));
+    }
+
+    #[test]
+    fn follows_send_recv_chain_across_ranks() {
+        // rank 0: cpu [0,100], send [100,300] (msg 1)
+        // rank 1: recv-match [300,320] (msg 1), cpu [320,500],
+        //         send [500,700] (msg 2)
+        // rank 2: recv-match [700,730] (msg 2)
+        let events = [
+            ev(EventKind::CpuCharge, 0, 0, 0, 100, 0),
+            ev(EventKind::EagerSend, 0, 1, 100, 300, 1),
+            ev(EventKind::RecvMatch, 1, 0, 300, 320, 1),
+            ev(EventKind::CpuCharge, 1, 1, 320, 500, 0),
+            ev(EventKind::EagerSend, 1, 2, 500, 700, 2),
+            ev(EventKind::RecvMatch, 2, 1, 700, 730, 2),
+        ];
+        let cp = critical_path(&events);
+        assert_eq!(cp.makespan_ns, 730);
+        // The chain crosses both messages and all three ranks.
+        assert_eq!(cp.steps.len(), 6);
+        assert_eq!(cp.steps[0].kind, EventKind::CpuCharge);
+        assert_eq!(cp.steps[0].rank, 0);
+        assert_eq!(cp.steps[5].rank, 2);
+        assert_eq!(cp.covered_ns, 100 + 200 + 20 + 180 + 200 + 30);
+        // Fully covered: no gaps in this chain.
+        assert_eq!(cp.covered_ns, cp.makespan_ns);
+    }
+
+    #[test]
+    fn prefers_later_ending_predecessor() {
+        // Two sends could explain the final recv's start; the walk must
+        // pick the message edge (ends at 400) over the local event
+        // (ends at 50).
+        let events = [
+            ev(EventKind::CpuCharge, 1, 1, 0, 50, 0),
+            ev(EventKind::EagerSend, 0, 1, 100, 400, 9),
+            ev(EventKind::RecvMatch, 1, 0, 400, 450, 9),
+        ];
+        let cp = critical_path(&events);
+        assert_eq!(cp.steps.len(), 2);
+        assert_eq!(cp.steps[0].kind, EventKind::EagerSend);
+    }
+
+    #[test]
+    fn terminates_on_adversarial_overlaps() {
+        // Identical times everywhere — the visited guard must still
+        // terminate and never revisit an event.
+        let events: Vec<Event> = (0..32)
+            .map(|i| ev(EventKind::CpuCharge, i % 4, i % 4, 100, 100, 0))
+            .collect();
+        let cp = critical_path(&events);
+        assert!(cp.steps.len() <= events.len());
+    }
+
+    #[test]
+    fn attribution_sums_to_covered() {
+        let events = [
+            ev(EventKind::EagerSend, 0, 1, 0, 300, 1),
+            ev(EventKind::RecvMatch, 1, 0, 300, 350, 1),
+        ];
+        let cp = critical_path(&events);
+        let kind_total: Time = cp.by_kind.iter().map(|&(_, t)| t).sum();
+        assert_eq!(kind_total, cp.covered_ns);
+        let fam_total: Time = cp.by_family.iter().map(|&(_, t)| t).sum();
+        assert_eq!(fam_total, 350);
+        assert!(cp.render().contains("share by kind"));
+    }
+}

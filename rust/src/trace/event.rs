@@ -1,0 +1,209 @@
+//! Typed trace events on the virtual clock.
+//!
+//! One [`Event`] is recorded per instrumented operation in the `mpi` layer:
+//! message injections (eager and rendezvous), receive-side matches,
+//! unexpected-queue hits, waits, collective rounds, RMA puts and CPU
+//! charges. Events carry enough envelope (`rank`, `peer`, `tag`, `bytes`,
+//! [`Tier`]) to roll up the paper's per-tier traffic metrics, and enough
+//! causality (`msg_id` links a send to the recv that consumed it) for the
+//! happens-before critical-path extractor in [`crate::trace::critical`].
+
+use crate::mpi::{Tag, TAG_INTERNAL_BASE};
+use crate::simnet::{Tier, Time};
+
+/// What an [`Event`] records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EventKind {
+    /// Eager-protocol send: `t_start` = injection start, `t_end` = arrival
+    /// of the payload at the destination.
+    EagerSend,
+    /// Rendezvous-protocol send: the RTS leg only (`t_end` = RTS arrival);
+    /// the data pull is charged inside the matching recv's span.
+    RendezvousSend,
+    /// A posted receive matched an arriving message (`t_start` = arrival,
+    /// `t_end` = data available, including match cost and — for
+    /// rendezvous — the CTS + data transfer).
+    RecvMatch,
+    /// A receive found its message already waiting in the unexpected
+    /// queue (rendezvous: `t_end` covers the CTS + data pull).
+    UnexpectedHit,
+    /// A rank idle-waited in [`crate::mpi::WaitAny`] (NBX progress loops).
+    Wait,
+    /// One round of a p2p-built collective (allreduce / barrier /
+    /// ibarrier) completed on this rank.
+    CollRound,
+    /// One-sided `MPI_Put` (origin-side; `t_end` = delivery at the target).
+    RmaPut,
+    /// [`crate::mpi::Comm::charge_cpu`] busy interval.
+    CpuCharge,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; 8] = [
+        EventKind::EagerSend,
+        EventKind::RendezvousSend,
+        EventKind::RecvMatch,
+        EventKind::UnexpectedHit,
+        EventKind::Wait,
+        EventKind::CollRound,
+        EventKind::RmaPut,
+        EventKind::CpuCharge,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::EagerSend => "eager-send",
+            EventKind::RendezvousSend => "rdv-send",
+            EventKind::RecvMatch => "recv-match",
+            EventKind::UnexpectedHit => "unexpected-hit",
+            EventKind::Wait => "wait",
+            EventKind::CollRound => "coll-round",
+            EventKind::RmaPut => "rma-put",
+            EventKind::CpuCharge => "cpu",
+        }
+    }
+
+    /// Kinds that inject traffic (the rollup counts these as messages,
+    /// mirroring [`crate::mpi::Counters`]' injection-time accounting).
+    pub fn is_send(&self) -> bool {
+        matches!(
+            self,
+            EventKind::EagerSend | EventKind::RendezvousSend | EventKind::RmaPut
+        )
+    }
+}
+
+/// Which layer a user tag belongs to — the tag-space contract from
+/// DESIGN.md, classified from the same constants the layers allocate from
+/// (single source of truth; see `mpix::algos`, `mpix::neighbor`,
+/// `solver::dist`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TagFamily {
+    /// SDDE formation traffic (`MPIX_Alltoall(v)_crs`).
+    Sdde = 0,
+    /// Persistent neighbor alltoallv (data + forward channels).
+    Neighbor = 1,
+    /// Legacy per-exchange p2p halo.
+    Halo = 2,
+    /// User tags outside the named families (tests, examples, RMA puts).
+    OtherUser = 3,
+    /// Internal tags (collectives, barriers) at or above
+    /// [`TAG_INTERNAL_BASE`].
+    Internal = 4,
+}
+
+impl TagFamily {
+    pub const COUNT: usize = 5;
+    pub const ALL: [TagFamily; TagFamily::COUNT] = [
+        TagFamily::Sdde,
+        TagFamily::Neighbor,
+        TagFamily::Halo,
+        TagFamily::OtherUser,
+        TagFamily::Internal,
+    ];
+
+    /// Classify a tag per the DESIGN.md tag-space table.
+    pub fn of(tag: Tag) -> TagFamily {
+        use crate::mpix::algos::TAG_SDDE;
+        use crate::mpix::neighbor::TAG_NEIGHBOR;
+        use crate::solver::dist::{TAG_HALO, TAG_HALO_WINDOW};
+        if tag >= TAG_INTERNAL_BASE {
+            TagFamily::Internal
+        } else if (TAG_SDDE..TAG_SDDE + 0x2000).contains(&tag) {
+            TagFamily::Sdde
+        } else if (TAG_NEIGHBOR..TAG_NEIGHBOR + 0x4000).contains(&tag) {
+            TagFamily::Neighbor
+        } else if (TAG_HALO..TAG_HALO + TAG_HALO_WINDOW).contains(&tag) {
+            TagFamily::Halo
+        } else {
+            TagFamily::OtherUser
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TagFamily::Sdde => "sdde",
+            TagFamily::Neighbor => "neighbor",
+            TagFamily::Halo => "halo",
+            TagFamily::OtherUser => "other-user",
+            TagFamily::Internal => "internal",
+        }
+    }
+
+    pub fn is_user(&self) -> bool {
+        *self != TagFamily::Internal
+    }
+}
+
+/// Short label for a [`Tier`] (the topology layer has no name method; the
+/// trace exporters and tables need one).
+pub fn tier_name(tier: Tier) -> &'static str {
+    match tier {
+        Tier::SelfMsg => "self",
+        Tier::IntraSocket => "intra-socket",
+        Tier::InterSocket => "inter-socket",
+        Tier::InterNode => "inter-node",
+    }
+}
+
+/// One recorded operation. Times are virtual nanoseconds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Rank the event is charged to (the sender for sends/puts, the
+    /// receiver for matches, the waiter for waits).
+    pub rank: usize,
+    /// The other side (== `rank` for waits and CPU charges).
+    pub peer: usize,
+    /// Message tag (0 for tagless kinds: waits, CPU charges, RMA puts).
+    pub tag: Tag,
+    /// Wire bytes (0 for waits / CPU charges / barrier rounds).
+    pub bytes: usize,
+    pub tier: Tier,
+    pub t_start: Time,
+    pub t_end: Time,
+    /// Nonzero for sends and the recv events they complete into; a send
+    /// and its consuming recv share the same id (happens-before edge).
+    pub msg_id: u64,
+}
+
+impl Event {
+    pub fn duration(&self) -> Time {
+        self.t_end.saturating_sub(self.t_start)
+    }
+
+    pub fn family(&self) -> TagFamily {
+        TagFamily::of(self.tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_classification_matches_design_table() {
+        assert_eq!(TagFamily::of(0x1000), TagFamily::Sdde);
+        assert_eq!(TagFamily::of(0x2FFD), TagFamily::Sdde);
+        assert_eq!(TagFamily::of(0x4000), TagFamily::Neighbor);
+        assert_eq!(TagFamily::of(0x7FFF), TagFamily::Neighbor);
+        assert_eq!(TagFamily::of(0x0010_0000), TagFamily::Halo);
+        assert_eq!(TagFamily::of(0x00FF_FFFF), TagFamily::Halo);
+        assert_eq!(TagFamily::of(0xF000_0000), TagFamily::Internal);
+        assert_eq!(TagFamily::of(0xF510_0000), TagFamily::Internal);
+        // Gaps between the named windows are plain user tags.
+        assert_eq!(TagFamily::of(0), TagFamily::OtherUser);
+        assert_eq!(TagFamily::of(0x3000), TagFamily::OtherUser);
+        assert_eq!(TagFamily::of(0x8000), TagFamily::OtherUser);
+        assert_eq!(TagFamily::of(0x0100_0000), TagFamily::OtherUser);
+    }
+
+    #[test]
+    fn kind_send_classification() {
+        assert!(EventKind::EagerSend.is_send());
+        assert!(EventKind::RendezvousSend.is_send());
+        assert!(EventKind::RmaPut.is_send());
+        assert!(!EventKind::RecvMatch.is_send());
+        assert!(!EventKind::Wait.is_send());
+    }
+}

@@ -1,0 +1,217 @@
+//! Trace exporters: Chrome-trace JSON (one row per rank, loadable in
+//! `chrome://tracing` / Perfetto) and a flat CSV.
+//!
+//! The JSON is written by hand — the crate deliberately has no serde —
+//! against the Trace Event Format: an object with a `traceEvents` array of
+//! `"ph":"X"` complete events (`ts`/`dur` in microseconds, fractional for
+//! ns precision) plus `"ph":"M"` metadata naming each rank's row. All
+//! emitted strings are fixed identifiers (kind/family/tier names), so no
+//! JSON string escaping is needed.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::event::{tier_name, Event, TagFamily};
+
+/// Render events as a Chrome-trace JSON string. `pid` 0 is the simulated
+/// world; `tid` is the rank, so each rank gets its own track.
+pub fn chrome_trace_json(events: &[Event]) -> String {
+    let nranks = events.iter().map(|e| e.rank.max(e.peer) + 1).max().unwrap_or(0);
+    let mut s = String::with_capacity(events.len() * 160 + 256);
+    s.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    let mut sep = |s: &mut String| {
+        if first {
+            first = false;
+        } else {
+            s.push(',');
+        }
+    };
+    for r in 0..nranks {
+        sep(&mut s);
+        let _ = write!(
+            s,
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{r},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"rank {r}\"}}}}"
+        );
+    }
+    for e in events {
+        sep(&mut s);
+        // ts/dur are µs floats in the trace format; keep ns precision.
+        let ts = e.t_start as f64 / 1000.0;
+        let dur = e.duration() as f64 / 1000.0;
+        let _ = write!(
+            s,
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{ts:.3},\
+             \"dur\":{dur:.3},\"pid\":0,\"tid\":{},\"args\":{{\"peer\":{},\
+             \"tag\":{},\"bytes\":{},\"tier\":\"{}\",\"msg\":{}}}}}",
+            e.kind.name(),
+            TagFamily::of(e.tag).name(),
+            e.rank,
+            e.peer,
+            e.tag,
+            e.bytes,
+            tier_name(e.tier),
+            e.msg_id,
+        );
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Write [`chrome_trace_json`] output to `path` (parent directories are
+/// created).
+pub fn write_chrome_trace(path: &Path, events: &[Event]) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, chrome_trace_json(events))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Render events as CSV (one row per event, times in ns).
+pub fn trace_csv(events: &[Event]) -> String {
+    let mut s = String::with_capacity(events.len() * 64 + 80);
+    s.push_str("kind,family,rank,peer,tag,tier,bytes,t_start_ns,t_end_ns,msg_id\n");
+    for e in events {
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{},{},{},{},{}",
+            e.kind.name(),
+            TagFamily::of(e.tag).name(),
+            e.rank,
+            e.peer,
+            e.tag,
+            tier_name(e.tier),
+            e.bytes,
+            e.t_start,
+            e.t_end,
+            e.msg_id,
+        );
+    }
+    s
+}
+
+/// Write [`trace_csv`] output to `path` (parent directories are created).
+pub fn write_trace_csv(path: &Path, events: &[Event]) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, trace_csv(events))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::EventKind;
+    use super::*;
+    use crate::simnet::Tier;
+
+    fn sample() -> Vec<Event> {
+        vec![
+            Event {
+                kind: EventKind::EagerSend,
+                rank: 0,
+                peer: 3,
+                tag: 0x1000,
+                bytes: 64,
+                tier: Tier::InterNode,
+                t_start: 1_000,
+                t_end: 3_500,
+                msg_id: 7,
+            },
+            Event {
+                kind: EventKind::RecvMatch,
+                rank: 3,
+                peer: 0,
+                tag: 0x1000,
+                bytes: 64,
+                tier: Tier::InterNode,
+                t_start: 3_500,
+                t_end: 3_700,
+                msg_id: 7,
+            },
+        ]
+    }
+
+    /// Minimal structural JSON check: balanced braces/brackets outside
+    /// strings, no trailing commas before closers.
+    fn assert_valid_json_shape(s: &str) {
+        let mut depth = 0i64;
+        let mut in_str = false;
+        let mut prev = ' ';
+        for ch in s.chars() {
+            if in_str {
+                if ch == '"' && prev != '\\' {
+                    in_str = false;
+                }
+            } else {
+                match ch {
+                    '"' => in_str = true,
+                    '{' | '[' => depth += 1,
+                    '}' | ']' => {
+                        assert_ne!(prev, ',', "trailing comma before closer");
+                        depth -= 1;
+                        assert!(depth >= 0, "unbalanced closers");
+                    }
+                    _ => {}
+                }
+            }
+            if !ch.is_whitespace() {
+                prev = ch;
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced JSON");
+        assert!(!in_str, "unterminated string");
+    }
+
+    #[test]
+    fn chrome_json_structure() {
+        let j = chrome_trace_json(&sample());
+        assert_valid_json_shape(&j);
+        assert!(j.starts_with("{\"displayTimeUnit\""));
+        assert!(j.ends_with("]}"));
+        assert!(j.contains("\"traceEvents\":["));
+        assert!(j.contains("\"name\":\"rank 0\""));
+        assert!(j.contains("\"name\":\"rank 3\""));
+        assert!(j.contains("\"name\":\"eager-send\""));
+        assert!(j.contains("\"ts\":1.000"));
+        assert!(j.contains("\"dur\":2.500"));
+        assert!(j.contains("\"tier\":\"inter-node\""));
+    }
+
+    #[test]
+    fn chrome_json_empty_trace() {
+        let j = chrome_trace_json(&[]);
+        assert_valid_json_shape(&j);
+        assert!(j.contains("\"traceEvents\":[]"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let c = trace_csv(&sample());
+        let lines: Vec<&str> = c.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("kind,family,rank"));
+        assert_eq!(
+            lines[1],
+            "eager-send,sdde,0,3,4096,inter-node,64,1000,3500,7"
+        );
+    }
+
+    #[test]
+    fn write_roundtrip() {
+        let dir = std::env::temp_dir().join("sdde_trace_export_test");
+        let jpath = dir.join("t.json");
+        let cpath = dir.join("t.csv");
+        write_chrome_trace(&jpath, &sample()).unwrap();
+        write_trace_csv(&cpath, &sample()).unwrap();
+        assert!(std::fs::read_to_string(&jpath).unwrap().contains("traceEvents"));
+        assert!(std::fs::read_to_string(&cpath).unwrap().contains("recv-match"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

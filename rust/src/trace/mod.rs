@@ -1,0 +1,256 @@
+//! Message-level tracing, per-tier counters, and critical-path profiling
+//! for the simulated MPI stack.
+//!
+//! The paper's headline results rest on claims about *where* messages go —
+//! fewer, larger inter-node messages in exchange for cheap intra-socket
+//! ones. This layer makes that visible from one instrumented source of
+//! truth instead of per-bench ad-hoc counting:
+//!
+//! * [`event`] — typed [`Event`]s on the virtual clock (eager/rendezvous
+//!   send, recv match, unexpected-queue hit, wait, collective round, RMA
+//!   put, CPU charge) with `(rank, peer, tag, bytes, tier, t_start,
+//!   t_end)`, plus the [`TagFamily`] classification of DESIGN.md's
+//!   tag-space table.
+//! * [`summary`] — per-tier × per-family rollup ([`TraceSummary`]) that
+//!   mirrors [`crate::mpi::Counters`] bit-for-bit on the shared metrics.
+//! * [`export`] — Chrome-trace JSON (one row per rank; open in
+//!   `chrome://tracing` or Perfetto) and CSV.
+//! * [`critical`] — happens-before critical-path extraction: the longest
+//!   send→recv→compute chain and each kind's / tag family's share of it.
+//!
+//! Tracing is **off by default** and zero-cost when disabled: every
+//! instrumentation site is guarded by one inline `enabled()` bool check,
+//! no event is constructed, and [`World::run`](crate::mpi::World::run)
+//! returns an empty [`Trace`]. Enable it per `World` with
+//! [`crate::mpi::World::with_trace`]:
+//!
+//! * [`TraceConfig::counters_only`] — maintain the rollup, drop the
+//!   events (what `bench::figures` uses for trace-derived metrics).
+//! * [`TraceConfig::full`] — record every event (exporters + critical
+//!   path; what `sdde trace` uses).
+//!
+//! Recording is host-side only: it never charges virtual time, so traced
+//! and untraced runs produce identical virtual end times.
+
+use std::cell::{Cell, RefCell};
+
+pub mod critical;
+pub mod event;
+pub mod export;
+pub mod summary;
+
+pub use critical::{critical_path, CriticalPath};
+pub use event::{tier_name, Event, EventKind, TagFamily};
+pub use export::{chrome_trace_json, trace_csv, write_chrome_trace, write_trace_csv};
+pub use summary::TraceSummary;
+
+/// What a [`Tracer`] records. Default: nothing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Maintain the [`TraceSummary`] rollup.
+    pub counters: bool,
+    /// Keep every [`Event`] (required by the exporters and the
+    /// critical-path extractor; implies meaningful `msg_id`s).
+    pub events: bool,
+}
+
+impl TraceConfig {
+    /// Record nothing (the default for [`crate::mpi::World::new`]).
+    pub fn off() -> TraceConfig {
+        TraceConfig::default()
+    }
+
+    /// Rollup counters only — cheap enough for every bench run.
+    pub fn counters_only() -> TraceConfig {
+        TraceConfig {
+            counters: true,
+            events: false,
+        }
+    }
+
+    /// Full event recording.
+    pub fn full() -> TraceConfig {
+        TraceConfig {
+            counters: true,
+            events: true,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.counters || self.events
+    }
+}
+
+/// Everything recorded over one [`crate::mpi::World::run`].
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub config: TraceConfig,
+    /// All events, in recording order (empty unless `config.events`).
+    pub events: Vec<Event>,
+    /// The live rollup (empty/zero unless `config.counters`).
+    pub summary: TraceSummary,
+}
+
+impl Trace {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.summary.is_empty()
+    }
+}
+
+/// Per-`World` event recorder. Owned by the world state; instrumentation
+/// sites in the `mpi` layer call [`Tracer::record`] behind an
+/// [`Tracer::enabled`] guard. Single-threaded like the executor —
+/// interior mutability via `RefCell`/`Cell` only.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: TraceConfig,
+    events: RefCell<Vec<Event>>,
+    summary: RefCell<TraceSummary>,
+    next_id: Cell<u64>,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig, nranks: usize) -> Tracer {
+        Tracer {
+            cfg,
+            events: RefCell::new(Vec::new()),
+            summary: RefCell::new(if cfg.counters {
+                TraceSummary::new(nranks)
+            } else {
+                TraceSummary::default()
+            }),
+            next_id: Cell::new(0),
+        }
+    }
+
+    /// A tracer that records nothing.
+    pub fn disabled() -> Tracer {
+        Tracer::new(TraceConfig::off(), 0)
+    }
+
+    /// The one guard every instrumentation site checks before building an
+    /// event — a single bool load when tracing is off.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.cfg.counters || self.cfg.events
+    }
+
+    pub fn config(&self) -> TraceConfig {
+        self.cfg
+    }
+
+    /// Fresh message id for a send (0 when disabled, so the disabled path
+    /// allocates nothing and ids stay meaningless).
+    #[inline]
+    pub fn next_msg_id(&self) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        let id = self.next_id.get() + 1;
+        self.next_id.set(id);
+        id
+    }
+
+    /// Record one event (caller must have checked [`Tracer::enabled`]).
+    pub fn record(&self, ev: Event) {
+        if self.cfg.counters {
+            self.summary.borrow_mut().record(&ev);
+        }
+        if self.cfg.events {
+            self.events.borrow_mut().push(ev);
+        }
+    }
+
+    /// Snapshot the rollup without consuming the tracer.
+    pub fn summary_snapshot(&self) -> TraceSummary {
+        self.summary.borrow().clone()
+    }
+
+    /// Traced user inter-node sends by `rank` so far (0 when disabled or
+    /// out of range) — the live red-dot accessor `bench::neighbor` uses.
+    pub fn internode_sent(&self, rank: usize) -> u64 {
+        self.summary
+            .borrow()
+            .internode_sent
+            .get(rank)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Drain everything recorded into a [`Trace`] (end of a run).
+    pub fn take(&self) -> Trace {
+        Trace {
+            config: self.cfg,
+            events: self.events.take(),
+            summary: self.summary.take(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::Tier;
+
+    fn ev(id: u64) -> Event {
+        Event {
+            kind: EventKind::EagerSend,
+            rank: 0,
+            peer: 1,
+            tag: 0x1000,
+            bytes: 8,
+            tier: Tier::InterNode,
+            t_start: 0,
+            t_end: 10,
+            msg_id: id,
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        assert_eq!(t.next_msg_id(), 0);
+        assert_eq!(t.next_msg_id(), 0);
+        let trace = t.take();
+        assert!(trace.is_empty());
+        assert!(trace.events.is_empty());
+    }
+
+    #[test]
+    fn counters_only_keeps_rollup_not_events() {
+        let t = Tracer::new(TraceConfig::counters_only(), 4);
+        assert!(t.enabled());
+        let id = t.next_msg_id();
+        assert_eq!(id, 1);
+        t.record(ev(id));
+        assert_eq!(t.internode_sent(0), 1);
+        let trace = t.take();
+        assert!(trace.events.is_empty());
+        assert_eq!(trace.summary.total_user_msgs(), 1);
+        assert!(!trace.is_empty());
+    }
+
+    #[test]
+    fn full_mode_keeps_events_and_rollup_in_agreement() {
+        let t = Tracer::new(TraceConfig::full(), 4);
+        for _ in 0..5 {
+            let id = t.next_msg_id();
+            t.record(ev(id));
+        }
+        let trace = t.take();
+        assert_eq!(trace.events.len(), 5);
+        assert_eq!(
+            trace.summary,
+            TraceSummary::from_events(&trace.events, 4)
+        );
+    }
+
+    #[test]
+    fn msg_ids_are_unique_and_nonzero() {
+        let t = Tracer::new(TraceConfig::full(), 2);
+        let a = t.next_msg_id();
+        let b = t.next_msg_id();
+        assert!(a != 0 && b != 0 && a != b);
+    }
+}

@@ -1,0 +1,276 @@
+//! Per-tier × per-tag-family rollup of a trace.
+//!
+//! The rollup mirrors [`crate::mpi::Counters`]' semantics exactly —
+//! messages counted at injection, user vs internal split at
+//! [`crate::mpi::TAG_INTERNAL_BASE`], per-source-rank inter-node counts —
+//! so the conservation tests can assert bit-for-bit agreement between the
+//! two independent accounting paths. Unlike `Counters`, the rollup keys
+//! messages by [`TagFamily`], so each algorithm layer's traffic is visible
+//! separately (the per-tier table `sdde trace` prints).
+
+use crate::simnet::Tier;
+use crate::util::fmt;
+
+use super::event::{tier_name, Event, EventKind, TagFamily};
+
+/// Rolled-up trace counters. Maintained incrementally by the
+/// [`crate::trace::Tracer`] (counters mode) or recomputed from an event
+/// list with [`TraceSummary::from_events`] (the two must agree).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// `[family][tier]` → messages (sends + RMA puts, at injection).
+    pub msgs: [[u64; 4]; TagFamily::COUNT],
+    /// `[family][tier]` → wire bytes.
+    pub bytes: [[u64; 4]; TagFamily::COUNT],
+    /// Per-source-rank count of *user* inter-node sends (the paper's
+    /// red-dot numerator; mirrors `Counters::internode_sent`).
+    pub internode_sent: Vec<u64>,
+    pub eager_sends: u64,
+    pub rendezvous_sends: u64,
+    pub rma_puts: u64,
+    /// Arrivals matched by an already-posted receive.
+    pub posted_matches: u64,
+    /// Receives satisfied from the unexpected queue.
+    pub unexpected_hits: u64,
+    /// Collective rounds completed (summed over ranks).
+    pub coll_rounds: u64,
+    /// Total `charge_cpu` busy time across ranks (ns).
+    pub cpu_busy_ns: u64,
+    /// Total time ranks spent blocked in `WaitAny` (ns).
+    pub wait_ns: u64,
+}
+
+impl TraceSummary {
+    pub fn new(nranks: usize) -> TraceSummary {
+        TraceSummary {
+            internode_sent: vec![0; nranks],
+            ..TraceSummary::default()
+        }
+    }
+
+    /// Fold one event in (the single accounting rule both the live
+    /// tracer and `from_events` use).
+    pub fn record(&mut self, ev: &Event) {
+        match ev.kind {
+            EventKind::EagerSend | EventKind::RendezvousSend | EventKind::RmaPut => {
+                let fam = ev.family();
+                let (f, t) = (fam as usize, ev.tier as usize);
+                self.msgs[f][t] += 1;
+                self.bytes[f][t] += ev.bytes as u64;
+                if fam.is_user()
+                    && ev.tier == Tier::InterNode
+                    && ev.rank < self.internode_sent.len()
+                {
+                    self.internode_sent[ev.rank] += 1;
+                }
+                match ev.kind {
+                    EventKind::EagerSend => self.eager_sends += 1,
+                    EventKind::RendezvousSend => self.rendezvous_sends += 1,
+                    _ => self.rma_puts += 1,
+                }
+            }
+            EventKind::RecvMatch => self.posted_matches += 1,
+            EventKind::UnexpectedHit => self.unexpected_hits += 1,
+            EventKind::CollRound => self.coll_rounds += 1,
+            EventKind::CpuCharge => self.cpu_busy_ns += ev.duration(),
+            EventKind::Wait => self.wait_ns += ev.duration(),
+        }
+    }
+
+    /// Recompute a rollup from raw events (`nranks` sizes the per-rank
+    /// inter-node vector).
+    pub fn from_events(events: &[Event], nranks: usize) -> TraceSummary {
+        let mut s = TraceSummary::new(nranks);
+        for ev in events {
+            s.record(ev);
+        }
+        s
+    }
+
+    /// Per-tier user messages (all families below the internal base) —
+    /// comparable to `Counters::user_msgs`.
+    pub fn user_msgs(&self) -> [u64; 4] {
+        self.sum_families(&self.msgs, true)
+    }
+
+    /// Per-tier user wire bytes — comparable to `Counters::user_bytes`.
+    pub fn user_bytes(&self) -> [u64; 4] {
+        self.sum_families(&self.bytes, true)
+    }
+
+    /// Per-tier internal messages — comparable to `Counters::int_msgs`.
+    pub fn internal_msgs(&self) -> [u64; 4] {
+        self.msgs[TagFamily::Internal as usize]
+    }
+
+    /// Per-tier internal wire bytes — comparable to `Counters::int_bytes`.
+    pub fn internal_bytes(&self) -> [u64; 4] {
+        self.bytes[TagFamily::Internal as usize]
+    }
+
+    fn sum_families(&self, table: &[[u64; 4]; TagFamily::COUNT], user: bool) -> [u64; 4] {
+        let mut out = [0u64; 4];
+        for f in TagFamily::ALL {
+            if f.is_user() == user {
+                for (o, v) in out.iter_mut().zip(&table[f as usize]) {
+                    *o += v;
+                }
+            }
+        }
+        out
+    }
+
+    /// The paper's red-dot metric: max per-rank user inter-node sends.
+    pub fn max_internode_per_rank(&self) -> u64 {
+        self.internode_sent.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn total_user_msgs(&self) -> u64 {
+        self.user_msgs().iter().sum()
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs.iter().flatten().sum()
+    }
+
+    /// True when nothing was recorded (tracing off, or an empty run).
+    pub fn is_empty(&self) -> bool {
+        self.total_msgs() == 0
+            && self.posted_matches == 0
+            && self.unexpected_hits == 0
+            && self.coll_rounds == 0
+            && self.cpu_busy_ns == 0
+            && self.wait_ns == 0
+    }
+
+    /// Render the per-tier × per-family tables plus the scalar counters
+    /// as aligned plain text (the `sdde trace` report).
+    pub fn render(&self, title: &str) -> String {
+        let mut out = format!("-- trace summary: {title} --\n");
+        let mut rows = vec![vec![
+            "tier".to_string(),
+            "user msgs".to_string(),
+            "user bytes".to_string(),
+            "internal msgs".to_string(),
+            "internal bytes".to_string(),
+        ]];
+        let (um, ub) = (self.user_msgs(), self.user_bytes());
+        let (im, ib) = (self.internal_msgs(), self.internal_bytes());
+        for tier in [
+            Tier::SelfMsg,
+            Tier::IntraSocket,
+            Tier::InterSocket,
+            Tier::InterNode,
+        ] {
+            let t = tier as usize;
+            rows.push(vec![
+                tier_name(tier).to_string(),
+                um[t].to_string(),
+                fmt::bytes(ub[t]),
+                im[t].to_string(),
+                fmt::bytes(ib[t]),
+            ]);
+        }
+        out.push_str(&fmt::table(&rows));
+        let mut rows = vec![vec![
+            "tag family".to_string(),
+            "msgs".to_string(),
+            "bytes".to_string(),
+        ]];
+        for f in TagFamily::ALL {
+            let msgs: u64 = self.msgs[f as usize].iter().sum();
+            let bytes: u64 = self.bytes[f as usize].iter().sum();
+            if msgs > 0 {
+                rows.push(vec![f.name().to_string(), msgs.to_string(), fmt::bytes(bytes)]);
+            }
+        }
+        if rows.len() > 1 {
+            out.push('\n');
+            out.push_str(&fmt::table(&rows));
+        }
+        out.push_str(&format!(
+            "\nsends: {} eager + {} rendezvous + {} rma-put; matches: {} posted + {} unexpected\n\
+             coll rounds: {}; max inter-node msgs/rank: {}\n\
+             cpu busy: {} total; wait: {} total\n",
+            self.eager_sends,
+            self.rendezvous_sends,
+            self.rma_puts,
+            self.posted_matches,
+            self.unexpected_hits,
+            self.coll_rounds,
+            self.max_internode_per_rank(),
+            fmt::ns(self.cpu_busy_ns),
+            fmt::ns(self.wait_ns),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, rank: usize, tag: u32, bytes: usize, tier: Tier) -> Event {
+        Event {
+            kind,
+            rank,
+            peer: 0,
+            tag,
+            bytes,
+            tier,
+            t_start: 10,
+            t_end: 30,
+            msg_id: 1,
+        }
+    }
+
+    #[test]
+    fn rollup_counts_sends_by_family_and_tier() {
+        let events = [
+            ev(EventKind::EagerSend, 0, 0x1000, 64, Tier::InterNode),
+            ev(EventKind::EagerSend, 0, 0x1000, 32, Tier::IntraSocket),
+            ev(EventKind::RendezvousSend, 1, 0x4000, 9000, Tier::InterNode),
+            ev(EventKind::EagerSend, 1, 0xF000_0000, 8, Tier::InterNode),
+            ev(EventKind::RecvMatch, 2, 0x1000, 64, Tier::InterNode),
+            ev(EventKind::CpuCharge, 2, 0, 0, Tier::SelfMsg),
+        ];
+        let s = TraceSummary::from_events(&events, 4);
+        assert_eq!(s.msgs[TagFamily::Sdde as usize][Tier::InterNode as usize], 1);
+        assert_eq!(s.msgs[TagFamily::Sdde as usize][Tier::IntraSocket as usize], 1);
+        assert_eq!(
+            s.msgs[TagFamily::Neighbor as usize][Tier::InterNode as usize],
+            1
+        );
+        assert_eq!(
+            s.msgs[TagFamily::Internal as usize][Tier::InterNode as usize],
+            1
+        );
+        // Internal sends do not count toward the red-dot metric.
+        assert_eq!(s.internode_sent, vec![1, 1, 0, 0]);
+        assert_eq!(s.max_internode_per_rank(), 1);
+        assert_eq!(s.user_msgs(), [0, 1, 0, 2]);
+        assert_eq!(s.user_bytes(), [0, 32, 0, 64 + 9000]);
+        assert_eq!(s.internal_msgs(), [0, 0, 0, 1]);
+        assert_eq!(s.total_user_msgs(), 3);
+        assert_eq!(s.eager_sends, 3);
+        assert_eq!(s.rendezvous_sends, 1);
+        assert_eq!(s.posted_matches, 1);
+        assert_eq!(s.cpu_busy_ns, 20);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn empty_summary_is_empty() {
+        assert!(TraceSummary::new(8).is_empty());
+    }
+
+    #[test]
+    fn render_contains_tiers_and_families() {
+        let events = [ev(EventKind::EagerSend, 0, 0x1000, 64, Tier::InterNode)];
+        let s = TraceSummary::from_events(&events, 2);
+        let r = s.render("test");
+        assert!(r.contains("inter-node"));
+        assert!(r.contains("sdde"));
+        assert!(r.contains("max inter-node msgs/rank: 1"));
+    }
+}

@@ -168,6 +168,61 @@ fn overlapping_persistent_exchanges_do_not_crosstalk() {
     }
 }
 
+/// The locality-aware engine forwards intra-region data *inside* `wait`,
+/// so waiting exchanges out of start order would push exchange B's
+/// forwards into exchange A's posted forward receives. That hazard must be
+/// detected and refused, not silently corrupt data.
+#[test]
+#[should_panic(expected = "out of start order")]
+fn locality_out_of_order_wait_panics() {
+    world(2, 2, MpiFlavor::Mvapich2).run(move |c| async move {
+        let n = c.nranks();
+        let me = c.rank();
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
+        let mx = MpixComm::new(c.clone(), RegionKind::Node);
+        let nc = NeighborComm::create_adjacent(
+            c.clone(),
+            mx.region_kind(),
+            vec![(prev, 1)],
+            vec![(next, 1)],
+        );
+        let pa = NeighborAlltoallv::init(&mx, &nc, NeighborMethod::Locality).await;
+        let ea = pa.start(&[me as f64]).await;
+        let eb = pa.start(&[10.0 + me as f64]).await;
+        let _rb = pa.wait(eb).await; // newer exchange first: must panic
+        let _ra = pa.wait(ea).await;
+    });
+}
+
+/// The standard engine has no wait-order constraint (matching is purely
+/// posted-order): waiting B before A returns each exchange's own data.
+#[test]
+fn standard_out_of_order_wait_is_allowed() {
+    let out = world(2, 2, MpiFlavor::Mvapich2).run(move |c| async move {
+        let n = c.nranks();
+        let me = c.rank();
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
+        let mx = MpixComm::new(c.clone(), RegionKind::Node);
+        let nc = NeighborComm::create_adjacent(
+            c.clone(),
+            mx.region_kind(),
+            vec![(prev, 1)],
+            vec![(next, 1)],
+        );
+        let pa = NeighborAlltoallv::init(&mx, &nc, NeighborMethod::Standard).await;
+        let ea = pa.start(&[me as f64]).await;
+        let eb = pa.start(&[10.0 + me as f64]).await;
+        let rb = pa.wait(eb).await;
+        let ra = pa.wait(ea).await;
+        assert_eq!(ra, vec![prev as f64], "A data");
+        assert_eq!(rb, vec![10.0 + prev as f64], "B data");
+        true
+    });
+    assert!(out.results.iter().all(|&ok| ok));
+}
+
 /// `form_neighborhood` hands back a NeighborComm whose adjacency is the
 /// package itself, and the raw-SDDE constructor agrees with it.
 #[test]

@@ -1,0 +1,262 @@
+//! Conservation laws of the trace subsystem (DESIGN.md invariant 5):
+//!
+//! * every traced send is consumed by exactly one traced receive (matched
+//!   by `msg_id`);
+//! * the trace rollup agrees **bit-for-bit** with the independent legacy
+//!   `Counters` accounting on every shared metric;
+//! * the trace-derived red-dot metric reproduces the paper's locality
+//!   invariant (aggregated < direct) on the Figs. 5–8 quick configs and
+//!   the steady-state neighbor bench;
+//! * tracing is observational only: a disabled world records zero events,
+//!   and enabling tracing never changes virtual time.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use sdde::bench::figures::{run_once, run_once_traced, Variant};
+use sdde::bench::{run_halo_once, HaloMethod};
+use sdde::mpi::{Payload, ReduceOp, World};
+use sdde::mpix::{IntraAlgo, SddeAlgorithm};
+use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+use sdde::sparse::{MatrixPreset, Partition, SpmvPattern};
+use sdde::trace::{EventKind, TraceConfig, TraceSummary};
+
+fn patterns(preset: &MatrixPreset, topo: &Topology, seed: u64) -> Rc<Vec<SpmvPattern>> {
+    let part = Partition::new(preset.n, topo.nranks());
+    Rc::new(
+        (0..topo.nranks())
+            .map(|r| SpmvPattern::build(preset, part, r, seed))
+            .collect(),
+    )
+}
+
+/// Mixed workload touching every instrumented code path: eager and
+/// rendezvous p2p, unexpected-queue hits, collectives, RMA, CPU charges.
+fn mixed_workload(trace: TraceConfig) -> sdde::mpi::RunOutput<u64> {
+    let world = World::with_trace(
+        Topology::quartz(2, 2),
+        CostModel::preset(MpiFlavor::Mvapich2),
+        trace,
+    );
+    world.run(|c| async move {
+        let n = c.nranks();
+        let me = c.rank();
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
+        // Eager (small) and rendezvous (large) sends around the ring.
+        let r1 = c.isend(next, 1, Payload::ints(&[me as u64])).await;
+        let r2 = c.isend(next, 2, Payload::longs(&vec![me as u64; 4096])).await;
+        // Force an unexpected-queue hit: let the messages land first.
+        c.sim().sleep(5_000_000).await;
+        c.recv(prev, 1).await;
+        c.recv(prev, 2).await;
+        r1.await;
+        r2.await;
+        // Collectives and CPU.
+        let s = c.allreduce(vec![me as u64], ReduceOp::Sum).await;
+        c.charge_cpu(10_000).await;
+        c.barrier().await;
+        // RMA.
+        let win = c.win_allocate(n).await;
+        win.fence().await;
+        win.put((me + 1) % n, me, &[me as u64], 4).await;
+        win.fence().await;
+        s[0]
+    })
+}
+
+#[test]
+fn disabled_world_records_zero_events() {
+    let out = mixed_workload(TraceConfig::off());
+    assert!(out.trace.is_empty());
+    assert!(out.trace.events.is_empty());
+    assert!(out.trace.summary.is_empty());
+    assert_eq!(out.trace.summary.internode_sent.len(), 0);
+    // ...while the legacy counters still saw the traffic.
+    assert!(out.counters.total_user_msgs() > 0);
+}
+
+#[test]
+fn tracing_never_changes_virtual_time() {
+    let off = mixed_workload(TraceConfig::off());
+    let counters = mixed_workload(TraceConfig::counters_only());
+    let full = mixed_workload(TraceConfig::full());
+    assert_eq!(off.end_time, counters.end_time);
+    assert_eq!(off.end_time, full.end_time);
+    assert_eq!(off.results, full.results);
+    assert!(full.trace.events.len() > counters.trace.events.len());
+}
+
+#[test]
+fn summary_mirrors_legacy_counters_bit_for_bit() {
+    let out = mixed_workload(TraceConfig::full());
+    let s = &out.trace.summary;
+    let c = &out.counters;
+    assert_eq!(s.user_msgs(), c.user_msgs);
+    assert_eq!(s.user_bytes(), c.user_bytes);
+    assert_eq!(s.internal_msgs(), c.int_msgs);
+    assert_eq!(s.internal_bytes(), c.int_bytes);
+    assert_eq!(s.internode_sent, c.internode_sent);
+    assert_eq!(s.rma_puts, c.rma_puts);
+    // The live rollup and the from-events recomputation are one rule.
+    assert_eq!(
+        *s,
+        TraceSummary::from_events(&out.trace.events, out.counters.internode_sent.len())
+    );
+}
+
+#[test]
+fn every_send_matches_exactly_one_recv() {
+    let out = mixed_workload(TraceConfig::full());
+    let mut sends: HashMap<u64, u32> = HashMap::new();
+    let mut recvs: HashMap<u64, u32> = HashMap::new();
+    for e in &out.trace.events {
+        match e.kind {
+            EventKind::EagerSend | EventKind::RendezvousSend => {
+                assert_ne!(e.msg_id, 0, "traced send without msg_id: {e:?}");
+                *sends.entry(e.msg_id).or_default() += 1;
+            }
+            EventKind::RecvMatch | EventKind::UnexpectedHit => {
+                assert_ne!(e.msg_id, 0, "traced recv without msg_id: {e:?}");
+                *recvs.entry(e.msg_id).or_default() += 1;
+            }
+            _ => {}
+        }
+    }
+    assert!(!sends.is_empty());
+    for (id, n) in &sends {
+        assert_eq!(*n, 1, "msg {id} sent {n} times");
+        assert_eq!(
+            recvs.get(id),
+            Some(&1),
+            "msg {id} received {:?} times",
+            recvs.get(id).copied().unwrap_or(0)
+        );
+    }
+    assert_eq!(sends.len(), recvs.len(), "receives without a send");
+    // The deliberate unexpected-queue phase really exercised both paths.
+    assert!(out.trace.summary.unexpected_hits > 0);
+    assert!(out.trace.summary.posted_matches > 0);
+}
+
+/// Send↔recv conservation holds on a real SDDE too (both variants).
+#[test]
+fn sdde_trace_conserves_messages() {
+    let preset = MatrixPreset::cage14_like().scaled(400);
+    let topo = Topology::quartz(2, 4);
+    let pats = patterns(&preset, &topo, 7);
+    for variant in [Variant::ConstSize, Variant::Variable] {
+        let (_, trace) = run_once_traced(
+            topo.clone(),
+            MpiFlavor::Mvapich2,
+            SddeAlgorithm::LocalityNonBlocking,
+            RegionKind::Node,
+            IntraAlgo::Personalized,
+            variant,
+            pats.clone(),
+        );
+        assert!(!trace.events.is_empty());
+        let mut balance: HashMap<u64, i64> = HashMap::new();
+        for e in &trace.events {
+            match e.kind {
+                EventKind::EagerSend | EventKind::RendezvousSend => {
+                    *balance.entry(e.msg_id).or_default() += 1;
+                }
+                EventKind::RecvMatch | EventKind::UnexpectedHit => {
+                    *balance.entry(e.msg_id).or_default() -= 1;
+                }
+                _ => {}
+            }
+        }
+        for (id, b) in &balance {
+            assert_eq!(*b, 0, "{variant:?}: msg {id} send/recv imbalance {b}");
+        }
+    }
+}
+
+/// The paper's locality invariant (aggregated sends fewer inter-node
+/// messages than direct) is visible through the trace rollup on every
+/// figure's quick configuration — same numbers figures_smoke asserts on.
+#[test]
+fn locality_invariant_holds_in_trace_for_all_figures() {
+    use sdde::bench::FigureId;
+    let preset = MatrixPreset::cage14_like().scaled(200);
+    let topo = Topology::quartz(4, 8);
+    let pats = patterns(&preset, &topo, 2023);
+    for fig in [FigureId::Fig5, FigureId::Fig6, FigureId::Fig7, FigureId::Fig8] {
+        let run = |algo| {
+            let (_, summary) = run_once(
+                topo.clone(),
+                fig.flavor(),
+                algo,
+                RegionKind::Node,
+                IntraAlgo::Personalized,
+                fig.variant(),
+                pats.clone(),
+            );
+            summary.max_internode_per_rank()
+        };
+        let direct = run(SddeAlgorithm::NonBlocking);
+        let agg = run(SddeAlgorithm::LocalityNonBlocking);
+        assert!(
+            agg < direct,
+            "{fig:?}: aggregated {agg} not below direct {direct}"
+        );
+    }
+}
+
+/// Steady-state neighbor bench: the trace-derived per-rank inter-node
+/// counts reproduce the locality effect there too.
+#[test]
+fn locality_invariant_holds_in_trace_for_neighbor_bench() {
+    let preset = Rc::new(MatrixPreset::cage14_like().scaled(200));
+    let topo = Topology::quartz(4, 4);
+    let run = |method| {
+        let (_, _, sent) = run_halo_once(
+            topo.clone(),
+            MpiFlavor::Mvapich2,
+            SddeAlgorithm::NonBlocking,
+            RegionKind::Node,
+            method,
+            4,
+            preset.clone(),
+            9,
+        );
+        sent
+    };
+    let direct = run(HaloMethod::Persistent);
+    let agg = run(HaloMethod::LocalityPersistent);
+    assert!(agg > 0, "traced counts must be live, not zero");
+    assert!(agg < direct, "aggregated {agg} not below direct {direct}");
+}
+
+/// The live per-rank accessor agrees with the legacy counters at every
+/// observation point, not just at the end of the run.
+#[test]
+fn live_internode_accessor_matches_counters() {
+    let world = World::with_trace(
+        Topology::quartz(2, 2),
+        CostModel::preset(MpiFlavor::Mvapich2),
+        TraceConfig::counters_only(),
+    );
+    let out = world.run(|c| async move {
+        let n = c.nranks();
+        let me = c.rank();
+        for k in 0..3u64 {
+            c.send((me + 1) % n, 5, Payload::ints(&[k])).await;
+            c.recv((me + n - 1) % n, 5).await;
+            assert_eq!(
+                c.traced_internode_sent(me),
+                c.counters().internode_sent[me],
+                "divergence at step {k}"
+            );
+        }
+        c.barrier().await;
+        true
+    });
+    assert!(out.results.iter().all(|&ok| ok));
+    assert_eq!(
+        out.trace.summary.internode_sent,
+        out.counters.internode_sent
+    );
+}
