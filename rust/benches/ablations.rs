@@ -12,7 +12,7 @@
 use std::rc::Rc;
 
 use sdde::bench::figures::run_once;
-use sdde::bench::Variant;
+use sdde::bench::{resolve_jobs, run_cells, ProgressSink, Variant};
 use sdde::mpi::World;
 use sdde::mpix::{alltoallv_crs, IntraAlgo, MpixComm, MpixInfo, SddeAlgorithm};
 use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
@@ -136,39 +136,51 @@ fn main() {
 
     println!("\n== ablation 4: personalized vs NBX crossover vs message count ==");
     println!("  (uniform random pattern, 128 ranks; paper §I trade-off)");
+    // Independent cells (one per degree) — SDDE_JOBS=N runs them in
+    // parallel with output identical to a serial run.
     let topo4 = Topology::quartz(8, 16);
-    for deg in [2usize, 8, 32, 96] {
-        let n = topo4.nranks();
-        let part = Partition::new(n * 64, n);
-        let mut rng = Rng::new(5);
-        let pats4: Rc<Vec<SpmvPattern>> = Rc::new(
-            (0..n)
-                .map(|r| {
-                    let owners = rng.sample_distinct(n - 1, deg);
-                    let cols: Vec<usize> = owners
-                        .iter()
-                        .map(|&o| {
-                            let o = if o >= r { o + 1 } else { o };
-                            part.start(o)
-                        })
-                        .collect();
-                    SpmvPattern::from_columns(part, r, &cols)
-                })
-                .collect(),
-        );
-        let mut line = format!("  deg={deg:>3}: ");
-        for algo in [SddeAlgorithm::Personalized, SddeAlgorithm::NonBlocking] {
-            let (t, _) = run_once(
-                topo4.clone(),
-                MpiFlavor::Mvapich2,
-                algo,
-                RegionKind::Node,
-                IntraAlgo::Personalized,
-                Variant::Variable,
-                pats4.clone(),
+    let degs = [2usize, 8, 32, 96];
+    let (lines, _) = run_cells(
+        resolve_jobs(None),
+        degs.len(),
+        ProgressSink::Silent,
+        |i, _| {
+            let deg = degs[i];
+            let n = topo4.nranks();
+            let part = Partition::new(n * 64, n);
+            let mut rng = Rng::new(5);
+            let pats4: Rc<Vec<SpmvPattern>> = Rc::new(
+                (0..n)
+                    .map(|r| {
+                        let owners = rng.sample_distinct(n - 1, deg);
+                        let cols: Vec<usize> = owners
+                            .iter()
+                            .map(|&o| {
+                                let o = if o >= r { o + 1 } else { o };
+                                part.start(o)
+                            })
+                            .collect();
+                        SpmvPattern::from_columns(part, r, &cols)
+                    })
+                    .collect(),
             );
-            line.push_str(&format!("{}={:<12} ", algo.name(), fmt::ns(t)));
-        }
+            let mut line = format!("  deg={deg:>3}: ");
+            for algo in [SddeAlgorithm::Personalized, SddeAlgorithm::NonBlocking] {
+                let (t, _) = run_once(
+                    topo4.clone(),
+                    MpiFlavor::Mvapich2,
+                    algo,
+                    RegionKind::Node,
+                    IntraAlgo::Personalized,
+                    Variant::Variable,
+                    pats4.clone(),
+                );
+                line.push_str(&format!("{}={:<12} ", algo.name(), fmt::ns(t)));
+            }
+            line
+        },
+    );
+    for line in lines {
         println!("{line}");
     }
 }

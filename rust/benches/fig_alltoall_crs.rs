@@ -7,12 +7,13 @@
 //! full-size matrices — several minutes). `sdde figures --fig 5` is the
 //! CLI equivalent with CSV output.
 
-use sdde::bench::{render_figure, run_sweep, FigureId, SweepConfig};
+use sdde::bench::{render_figure, resolve_jobs, run_sweep_bench, FigureId, SweepConfig};
 
 fn main() {
     let full = std::env::var("SDDE_BENCH_FULL").is_ok();
+    let jobs = resolve_jobs(None); // SDDE_JOBS=N parallelizes the sweep
     for fig in [FigureId::Fig5, FigureId::Fig6] {
-        let cfg = if full {
+        let mut cfg = if full {
             SweepConfig::paper(fig)
         } else {
             let mut c = SweepConfig::quick(fig, 16);
@@ -20,13 +21,14 @@ fn main() {
             c.ppn = 16;
             c
         };
-        let t0 = std::time::Instant::now();
-        let points = run_sweep(&cfg);
+        cfg.jobs = jobs;
+        let (points, bench) = run_sweep_bench(&cfg);
         println!("{}", render_figure(&fig.title(), &points));
         println!(
-            "[bench] {} points in {:.1}s (real)\n",
+            "[bench] {} points in {:.1}s (real)\n{}\n",
             points.len(),
-            t0.elapsed().as_secs_f64()
+            bench.wall_ns as f64 / 1e9,
+            bench.render(&fig.title())
         );
     }
 }

@@ -2,12 +2,13 @@
 //! counts, Mvapich2 + OpenMPI presets). Scaled-down by default;
 //! `SDDE_BENCH_FULL=1` for paper scale. See fig_alltoall_crs.rs.
 
-use sdde::bench::{render_figure, run_sweep, FigureId, SweepConfig};
+use sdde::bench::{render_figure, resolve_jobs, run_sweep_bench, FigureId, SweepConfig};
 
 fn main() {
     let full = std::env::var("SDDE_BENCH_FULL").is_ok();
+    let jobs = resolve_jobs(None); // SDDE_JOBS=N parallelizes the sweep
     for fig in [FigureId::Fig7, FigureId::Fig8] {
-        let cfg = if full {
+        let mut cfg = if full {
             SweepConfig::paper(fig)
         } else {
             let mut c = SweepConfig::quick(fig, 16);
@@ -15,13 +16,14 @@ fn main() {
             c.ppn = 16;
             c
         };
-        let t0 = std::time::Instant::now();
-        let points = run_sweep(&cfg);
+        cfg.jobs = jobs;
+        let (points, bench) = run_sweep_bench(&cfg);
         println!("{}", render_figure(&fig.title(), &points));
         println!(
-            "[bench] {} points in {:.1}s (real)\n",
+            "[bench] {} points in {:.1}s (real)\n{}\n",
             points.len(),
-            t0.elapsed().as_secs_f64()
+            bench.wall_ns as f64 / 1e9,
+            bench.render(&fig.title())
         );
     }
 }

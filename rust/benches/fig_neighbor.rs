@@ -3,13 +3,16 @@
 //! and both MPI presets. Scaled-down by default; `SDDE_BENCH_FULL=1` for
 //! a larger sweep. `sdde neighbor` is the CLI equivalent with CSV output.
 
-use sdde::bench::{render_neighbor_figure, run_neighbor_sweep, NeighborSweepConfig};
+use sdde::bench::{
+    render_neighbor_figure, resolve_jobs, run_neighbor_sweep_bench, NeighborSweepConfig,
+};
 use sdde::simnet::MpiFlavor;
 
 fn main() {
     let full = std::env::var("SDDE_BENCH_FULL").is_ok();
+    let jobs = resolve_jobs(None); // SDDE_JOBS=N parallelizes the sweep
     for flavor in [MpiFlavor::Mvapich2, MpiFlavor::OpenMpi] {
-        let cfg = if full {
+        let mut cfg = if full {
             let mut c = NeighborSweepConfig::quick(flavor, 4);
             c.nodes = vec![2, 4, 8, 16];
             c.ppn = 16;
@@ -21,17 +24,18 @@ fn main() {
             c.iters = vec![1, 16, 128];
             c
         };
-        let t0 = std::time::Instant::now();
-        let points = run_neighbor_sweep(&cfg);
+        cfg.jobs = jobs;
+        let (points, bench) = run_neighbor_sweep_bench(&cfg);
         let title = format!(
             "Neighbor figure: persistent neighbor alltoallv using {}",
             flavor.name()
         );
         println!("{}", render_neighbor_figure(&title, &points));
         println!(
-            "[bench] {} points in {:.1}s (real)\n",
+            "[bench] {} points in {:.1}s (real)\n{}\n",
             points.len(),
-            t0.elapsed().as_secs_f64()
+            bench.wall_ns as f64 / 1e9,
+            bench.render(&title)
         );
     }
 }

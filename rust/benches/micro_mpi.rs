@@ -6,9 +6,58 @@
 
 use std::rc::Rc;
 
-use sdde::mpi::{Payload, ReduceOp, World, ANY_SOURCE};
+use sdde::mpi::{Payload, ReduceOp, World, ANY_SOURCE, ANY_TAG};
 use sdde::simnet::{CostModel, MpiFlavor, Tier, Topology};
 use sdde::util::fmt;
+
+/// Host-side cost of one probe against an unexpected queue holding
+/// `depth` + 1 messages (2 senders, probing under the given spec).
+/// Returns real nanoseconds per iprobe call. The *charged* virtual cost
+/// is unchanged by the host-side index — this measures the engine, not
+/// the model.
+fn probe_host_ns(depth: usize, spec: (usize, u32), iters: usize) -> f64 {
+    let world = World::new(
+        Topology::quartz(1, 3),
+        CostModel::preset(MpiFlavor::Mvapich2),
+    );
+    let target = depth as u32 + 1;
+    let out = world.run(move |c| async move {
+        match c.rank() {
+            0 => {
+                // Filler from rank 0 with distinct tags, target last.
+                for i in 0..depth {
+                    c.isend(2, i as u32, Payload::ints(&[i as u64])).await;
+                }
+                c.isend(2, target, Payload::ints(&[0])).await;
+                0.0
+            }
+            1 => {
+                // A second source so ANY_SOURCE specs have real work.
+                c.isend(2, target, Payload::ints(&[1])).await;
+                0.0
+            }
+            _ => {
+                c.sim().sleep(10_000_000).await; // let everything arrive
+                let (src, tag) = spec;
+                let t0 = std::time::Instant::now();
+                for _ in 0..iters {
+                    let info = c.iprobe(src, tag).await;
+                    std::hint::black_box(&info);
+                    assert!(info.is_some());
+                }
+                let per_op = t0.elapsed().as_nanos() as f64 / iters as f64;
+                // Drain so the run ends with conserved queues.
+                for i in 0..depth {
+                    c.recv(0, i as u32).await;
+                }
+                c.recv(0, target).await;
+                c.recv(1, target).await;
+                per_op
+            }
+        }
+    });
+    out.results[2]
+}
 
 fn pingpong(topo: Topology, bytes_words: usize, iters: usize) -> u64 {
     let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
@@ -93,6 +142,18 @@ fn main() {
         println!("  queue={n_queued:>4}: probe cost {}", fmt::ns(out.results[1]));
     }
 
+    println!("\n== unexpected-queue matching HOST cost (real ns/iprobe) ==");
+    println!("  (bucketed index: flat in depth; charged virtual cost unchanged)");
+    for depth in [0usize, 16, 256, 4096] {
+        let exact = probe_host_ns(depth, (0, depth as u32 + 1), 1000);
+        let any_tag = probe_host_ns(depth, (0, ANY_TAG), 1000);
+        let any_src = probe_host_ns(depth, (ANY_SOURCE, depth as u32 + 1), 1000);
+        println!(
+            "  depth={depth:>5}: exact {exact:>8.1} ns  any-tag {any_tag:>8.1} ns  \
+             any-source {any_src:>8.1} ns"
+        );
+    }
+
     println!("\n== DES engine throughput (real time) ==");
     let t0 = std::time::Instant::now();
     let topo = Topology::quartz(8, 16);
@@ -110,7 +171,7 @@ fn main() {
         }
     });
     let real = t0.elapsed();
-    let sdde::simnet::SimStats { events_run: events, polls } = out.exec_stats;
+    let (events, polls) = (out.exec_stats.events_run, out.exec_stats.polls);
     let msgs = (n * rounds) as f64;
     println!(
         "  {} ranks x {} rounds: {} msgs, {events} events, {polls} polls in {:.3}s",

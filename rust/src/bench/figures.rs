@@ -8,11 +8,12 @@
 
 use std::rc::Rc;
 
+use super::par::{run_cells, timed, CellBench, Progress, ProgressSink, SweepBench};
 use crate::mpi::World;
 use crate::mpix::{
     alltoall_crs, alltoallv_crs, IntraAlgo, MpixComm, MpixInfo, SddeAlgorithm,
 };
-use crate::simnet::{CostModel, MpiFlavor, RegionKind, Time, Topology};
+use crate::simnet::{CostModel, MpiFlavor, RegionKind, SimStats, Time, Topology};
 use crate::sparse::{MatrixPreset, Partition, SpmvPattern};
 use crate::trace::{Trace, TraceConfig, TraceSummary};
 
@@ -90,7 +91,10 @@ pub struct SweepConfig {
     pub region: RegionKind,
     pub intra: IntraAlgo,
     pub seed: u64,
-    pub progress: bool,
+    pub progress: ProgressSink,
+    /// Worker threads for the sweep (cells = matrix × node-count pairs).
+    /// Results and output are identical for any value; see [`super::par`].
+    pub jobs: usize,
 }
 
 impl SweepConfig {
@@ -110,7 +114,8 @@ impl SweepConfig {
             region: RegionKind::Node,
             intra: IntraAlgo::Personalized,
             seed: 2023,
-            progress: true,
+            progress: ProgressSink::Stderr,
+            jobs: 1,
         }
     }
 
@@ -121,13 +126,13 @@ impl SweepConfig {
         cfg.nodes = vec![2, 4, 8];
         cfg.ppn = 8;
         cfg.matrices = cfg.matrices.iter().map(|m| m.scaled(div)).collect();
-        cfg.progress = false;
+        cfg.progress = ProgressSink::Silent;
         cfg
     }
 }
 
 /// One measured point of a figure.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Point {
     pub matrix: String,
     pub algo: &'static str,
@@ -145,60 +150,105 @@ pub struct Point {
 
 /// Run a sweep and return every measured point.
 pub fn run_sweep(cfg: &SweepConfig) -> Vec<Point> {
+    run_sweep_bench(cfg).0
+}
+
+/// Run a sweep, returning the points plus the host-side cost summary
+/// (wall-clock, per-cell simulator time, executor throughput). The points
+/// — and any Stderr/Collected progress output — are identical for every
+/// `cfg.jobs` value; only the [`SweepBench`] changes.
+pub fn run_sweep_bench(cfg: &SweepConfig) -> (Vec<Point>, SweepBench) {
+    // One cell per (matrix, node count): the pattern build is shared by
+    // the cell's algorithms, and cells are fully independent simulations.
+    let keys: Vec<(usize, usize)> = cfg
+        .matrices
+        .iter()
+        .enumerate()
+        .flat_map(|(mi, _)| cfg.nodes.iter().map(move |&n| (mi, n)))
+        .collect();
+    let ((cell_out, _), wall_ns) = timed(|| {
+        run_cells(cfg.jobs, keys.len(), cfg.progress, |i, pr| {
+            let (mi, nodes) = keys[i];
+            run_figure_cell(cfg, &cfg.matrices[mi], nodes, pr)
+        })
+    });
     let mut points = Vec::new();
-    for preset in &cfg.matrices {
-        for &nodes in &cfg.nodes {
-            let topo = Topology::quartz(nodes, cfg.ppn);
-            let nranks = topo.nranks();
-            let part = Partition::new(preset.n, nranks);
-            if cfg.progress {
-                eprintln!(
-                    "[sweep] {} nodes={nodes} ranks={nranks}: building patterns...",
-                    preset.name
-                );
-            }
-            let patterns: Rc<Vec<SpmvPattern>> = Rc::new(
-                (0..nranks)
-                    .map(|r| SpmvPattern::build(preset, part, r, cfg.seed))
-                    .collect(),
-            );
-            let mean_send_nnz = patterns.iter().map(|p| p.recv_nnz() as f64).sum::<f64>()
-                / nranks as f64;
-            for &algo in &cfg.algos {
-                if cfg.variant == Variant::Variable && algo == SddeAlgorithm::Rma {
-                    continue;
-                }
-                let (time_ns, summary) = run_once(
-                    topo.clone(),
-                    cfg.flavor,
-                    algo,
-                    cfg.region,
-                    cfg.intra,
-                    cfg.variant,
-                    patterns.clone(),
-                );
-                if cfg.progress {
-                    eprintln!(
-                        "[sweep]   {:>17}: {:>12}  max-internode={}",
-                        algo.name(),
-                        crate::util::fmt::ns(time_ns),
-                        summary.max_internode_per_rank()
-                    );
-                }
-                points.push(Point {
-                    matrix: preset.name.clone(),
-                    algo: algo.name(),
-                    nodes,
-                    ranks: nranks,
-                    time_ns,
-                    max_internode: summary.max_internode_per_rank(),
-                    total_msgs: summary.total_user_msgs(),
-                    mean_send_nnz,
-                });
-            }
-        }
+    let mut cells = Vec::new();
+    for (pts, cell) in cell_out {
+        points.extend(pts);
+        cells.push(cell);
     }
-    points
+    let bench = SweepBench {
+        jobs: cfg.jobs.max(1),
+        wall_ns,
+        cells,
+    };
+    (points, bench)
+}
+
+/// One (matrix, node count) cell: build patterns once, run every
+/// applicable algorithm, report points plus the cell's host cost.
+fn run_figure_cell(
+    cfg: &SweepConfig,
+    preset: &MatrixPreset,
+    nodes: usize,
+    pr: &mut Progress,
+) -> (Vec<Point>, CellBench) {
+    let topo = Topology::quartz(nodes, cfg.ppn);
+    let nranks = topo.nranks();
+    let part = Partition::new(preset.n, nranks);
+    pr.line(format!(
+        "[sweep] {} nodes={nodes} ranks={nranks}: building patterns...",
+        preset.name
+    ));
+    let patterns: Rc<Vec<SpmvPattern>> = Rc::new(
+        (0..nranks)
+            .map(|r| SpmvPattern::build(preset, part, r, cfg.seed))
+            .collect(),
+    );
+    let mean_send_nnz =
+        patterns.iter().map(|p| p.recv_nnz() as f64).sum::<f64>() / nranks as f64;
+    let mut points = Vec::new();
+    let mut cell = CellBench {
+        label: format!("{} nodes={nodes}", preset.name),
+        host_ns: 0,
+        events_run: 0,
+        polls: 0,
+    };
+    for &algo in &cfg.algos {
+        if cfg.variant == Variant::Variable && algo == SddeAlgorithm::Rma {
+            continue;
+        }
+        let (time_ns, summary, stats) = run_once_stats(
+            topo.clone(),
+            cfg.flavor,
+            algo,
+            cfg.region,
+            cfg.intra,
+            cfg.variant,
+            patterns.clone(),
+        );
+        cell.host_ns += stats.host_ns;
+        cell.events_run += stats.events_run;
+        cell.polls += stats.polls;
+        pr.line(format!(
+            "[sweep]   {:>17}: {:>12}  max-internode={}",
+            algo.name(),
+            crate::util::fmt::ns(time_ns),
+            summary.max_internode_per_rank()
+        ));
+        points.push(Point {
+            matrix: preset.name.clone(),
+            algo: algo.name(),
+            nodes,
+            ranks: nranks,
+            time_ns,
+            max_internode: summary.max_internode_per_rank(),
+            total_msgs: summary.total_user_msgs(),
+            mean_send_nnz,
+        });
+    }
+    (points, cell)
 }
 
 /// Run one SDDE on a fresh world with the given trace mode.
@@ -257,6 +307,23 @@ pub fn run_once(
     variant: Variant,
     patterns: Rc<Vec<SpmvPattern>>,
 ) -> (Time, TraceSummary) {
+    let (t, summary, _) =
+        run_once_stats(topo, flavor, algo, region, intra, variant, patterns);
+    (t, summary)
+}
+
+/// [`run_once`] plus the executor's host-side stats (wall ns, events,
+/// polls) — the sweep engine aggregates these into its [`SweepBench`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_once_stats(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    intra: IntraAlgo,
+    variant: Variant,
+    patterns: Rc<Vec<SpmvPattern>>,
+) -> (Time, TraceSummary, SimStats) {
     let out = run_world(
         topo,
         flavor,
@@ -272,7 +339,7 @@ pub fn run_once(
     debug_assert_eq!(summary.user_bytes(), out.counters.user_bytes);
     debug_assert_eq!(summary.internode_sent, out.counters.internode_sent);
     let elapsed = out.results.into_iter().max().unwrap_or(0);
-    (elapsed, summary)
+    (elapsed, summary, out.exec_stats)
 }
 
 /// Like [`run_once`] but with full event recording: returns the complete
@@ -337,6 +404,22 @@ mod tests {
             agg < std,
             "aggregated {agg} not below standard {std}"
         );
+    }
+
+    #[test]
+    fn sweep_bench_reports_host_cost() {
+        let mut cfg = SweepConfig::quick(FigureId::Fig5, 400);
+        cfg.nodes = vec![2];
+        cfg.matrices.truncate(1);
+        let (pts, bench) = run_sweep_bench(&cfg);
+        assert!(!pts.is_empty());
+        assert_eq!(bench.jobs, 1);
+        assert_eq!(bench.cells.len(), 1);
+        assert!(bench.cells_host_ns() > 0);
+        assert!(bench.events_run() > 0);
+        // Serial: simulator host time is a subset of the sweep wall time.
+        assert!(bench.wall_ns >= bench.cells_host_ns());
+        assert!(bench.speedup_vs_serial() <= 1.0 + 1e-9);
     }
 
     #[test]

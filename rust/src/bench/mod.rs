@@ -2,16 +2,26 @@
 //! × MPI flavors and reports the virtual SDDE time plus the paper's
 //! red-dot metric (max inter-node messages per rank). One [`figures`]
 //! sweep per paper figure (5–8); [`neighbor`] sweeps the steady-state
-//! persistent neighborhood collectives; [`report`] renders tables/CSV.
+//! persistent neighborhood collectives; [`report`] renders tables/CSV;
+//! [`par`] runs independent sweep cells on worker threads with
+//! bit-identical results and ordered progress output.
 
 pub mod figures;
 pub mod neighbor;
+pub mod par;
 pub mod report;
 
 pub use figures::{
-    run_once, run_once_traced, run_sweep, FigureId, Point, SweepConfig, Variant,
+    run_once, run_once_stats, run_once_traced, run_sweep, run_sweep_bench, FigureId, Point,
+    SweepConfig, Variant,
 };
 pub use neighbor::{
-    run_halo_once, run_neighbor_sweep, HaloMethod, NeighborPoint, NeighborSweepConfig,
+    run_halo_once, run_halo_once_stats, run_neighbor_sweep, run_neighbor_sweep_bench,
+    HaloMethod, NeighborPoint, NeighborSweepConfig,
 };
-pub use report::{render_figure, render_neighbor_figure, write_csv, write_neighbor_csv};
+pub use par::{
+    resolve_jobs, run_cells, CellBench, Progress, ProgressSink, SweepBench,
+};
+pub use report::{
+    render_figure, render_neighbor_figure, write_bench_json, write_csv, write_neighbor_csv,
+};

@@ -11,9 +11,10 @@
 
 use std::rc::Rc;
 
+use super::par::{run_cells, timed, CellBench, ProgressSink, SweepBench};
 use crate::mpi::World;
 use crate::mpix::{MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
-use crate::simnet::{CostModel, MpiFlavor, RegionKind, Time, Topology};
+use crate::simnet::{CostModel, MpiFlavor, RegionKind, SimStats, Time, Topology};
 use crate::solver::DistMatrix;
 use crate::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
 use crate::trace::TraceConfig;
@@ -68,7 +69,9 @@ pub struct NeighborSweepConfig {
     /// only the steady-state engine differs).
     pub algo: SddeAlgorithm,
     pub seed: u64,
-    pub progress: bool,
+    pub progress: ProgressSink,
+    /// Worker threads; one cell per (matrix, nodes, method, iters) tuple.
+    pub jobs: usize,
 }
 
 impl NeighborSweepConfig {
@@ -88,13 +91,14 @@ impl NeighborSweepConfig {
             region: RegionKind::Node,
             algo: SddeAlgorithm::LocalityNonBlocking,
             seed: 2023,
-            progress: false,
+            progress: ProgressSink::Silent,
+            jobs: 1,
         }
     }
 }
 
 /// One measured point of the neighbor figure.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct NeighborPoint {
     pub matrix: String,
     pub method: &'static str,
@@ -125,6 +129,23 @@ pub fn run_halo_once(
     preset: Rc<MatrixPreset>,
     seed: u64,
 ) -> (Time, Time, u64) {
+    let (setup, loop_t, sent, _) =
+        run_halo_once_stats(topo, flavor, algo, region, method, iters, preset, seed);
+    (setup, loop_t, sent)
+}
+
+/// [`run_halo_once`] plus the executor's host-side stats.
+#[allow(clippy::too_many_arguments)]
+pub fn run_halo_once_stats(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    method: HaloMethod,
+    iters: usize,
+    preset: Rc<MatrixPreset>,
+    seed: u64,
+) -> (Time, Time, u64, SimStats) {
     let part = Partition::new(preset.n, topo.nranks());
     let world = World::with_trace(
         topo,
@@ -178,56 +199,88 @@ pub fn run_halo_once(
     let setup = out.results.iter().map(|r| r.0).max().unwrap_or(0);
     let loop_t = out.results.iter().map(|r| r.1).max().unwrap_or(0);
     let sent = out.results.iter().map(|r| r.2).max().unwrap_or(0);
-    (setup, loop_t, sent)
+    (setup, loop_t, sent, out.exec_stats)
 }
 
 /// Run the full sweep and return every measured point.
 pub fn run_neighbor_sweep(cfg: &NeighborSweepConfig) -> Vec<NeighborPoint> {
-    let mut points = Vec::new();
-    for preset in &cfg.matrices {
-        let preset = Rc::new(preset.clone());
-        for &nodes in &cfg.nodes {
+    run_neighbor_sweep_bench(cfg).0
+}
+
+/// Run the full sweep, returning points plus the host-side cost summary.
+/// One cell per (matrix, nodes, method, iters); output and points are
+/// identical for every `cfg.jobs` value.
+pub fn run_neighbor_sweep_bench(
+    cfg: &NeighborSweepConfig,
+) -> (Vec<NeighborPoint>, SweepBench) {
+    let keys: Vec<(usize, usize, HaloMethod, usize)> = cfg
+        .matrices
+        .iter()
+        .enumerate()
+        .flat_map(|(mi, _)| {
+            cfg.nodes.iter().flat_map(move |&nodes| {
+                cfg.methods.iter().flat_map(move |&method| {
+                    cfg.iters.iter().map(move |&iters| (mi, nodes, method, iters))
+                })
+            })
+        })
+        .collect();
+    let ((cell_out, _), wall_ns) = timed(|| {
+        run_cells(cfg.jobs, keys.len(), cfg.progress, |i, pr| {
+            let (mi, nodes, method, iters) = keys[i];
+            let preset = Rc::new(cfg.matrices[mi].clone());
             let topo = Topology::quartz(nodes, cfg.ppn);
             let ranks = topo.nranks();
-            for &method in &cfg.methods {
-                for &iters in &cfg.iters {
-                    let (setup_ns, loop_ns, sent) = run_halo_once(
-                        topo.clone(),
-                        cfg.flavor,
-                        cfg.algo,
-                        cfg.region,
-                        method,
-                        iters,
-                        preset.clone(),
-                        cfg.seed,
-                    );
-                    if cfg.progress {
-                        eprintln!(
-                            "[neighbor] {} nodes={nodes} {:>14} iters={iters:>5}: \
-                             {}/iter (setup {})",
-                            preset.name,
-                            method.name(),
-                            crate::util::fmt::ns((loop_ns as f64 / iters as f64) as u64),
-                            crate::util::fmt::ns(setup_ns),
-                        );
-                    }
-                    points.push(NeighborPoint {
-                        matrix: preset.name.clone(),
-                        method: method.name(),
-                        flavor: cfg.flavor.name(),
-                        nodes,
-                        ranks,
-                        iters,
-                        setup_ns,
-                        loop_ns,
-                        per_iter_ns: loop_ns as f64 / iters as f64,
-                        internode_per_iter: sent as f64 / iters as f64,
-                    });
-                }
-            }
-        }
-    }
-    points
+            let (setup_ns, loop_ns, sent, stats) = run_halo_once_stats(
+                topo,
+                cfg.flavor,
+                cfg.algo,
+                cfg.region,
+                method,
+                iters,
+                preset.clone(),
+                cfg.seed,
+            );
+            pr.line(format!(
+                "[neighbor] {} nodes={nodes} {:>14} iters={iters:>5}: \
+                 {}/iter (setup {})",
+                preset.name,
+                method.name(),
+                crate::util::fmt::ns((loop_ns as f64 / iters as f64) as u64),
+                crate::util::fmt::ns(setup_ns),
+            ));
+            let point = NeighborPoint {
+                matrix: preset.name.clone(),
+                method: method.name(),
+                flavor: cfg.flavor.name(),
+                nodes,
+                ranks,
+                iters,
+                setup_ns,
+                loop_ns,
+                per_iter_ns: loop_ns as f64 / iters as f64,
+                internode_per_iter: sent as f64 / iters as f64,
+            };
+            let cell = CellBench {
+                label: format!(
+                    "{} nodes={nodes} {} iters={iters}",
+                    preset.name,
+                    method.name()
+                ),
+                host_ns: stats.host_ns,
+                events_run: stats.events_run,
+                polls: stats.polls,
+            };
+            (point, cell)
+        })
+    });
+    let (points, cells): (Vec<_>, Vec<_>) = cell_out.into_iter().unzip();
+    let bench = SweepBench {
+        jobs: cfg.jobs.max(1),
+        wall_ns,
+        cells,
+    };
+    (points, bench)
 }
 
 #[cfg(test)]

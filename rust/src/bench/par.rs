@@ -1,0 +1,344 @@
+//! Parallel sweep engine: runs independent simulation cells on a scoped
+//! thread pool with results and progress output collected *in cell index
+//! order*, so a parallel sweep is byte-identical to a serial one.
+//!
+//! A "cell" is one independent unit of a sweep — e.g. one (matrix, node
+//! count) pair of a figure sweep. Each cell builds its own [`crate::mpi::World`]
+//! inside its worker thread; the simulator itself stays single-threaded
+//! and `!Send`, only the *configs* cross threads. Virtual times are a pure
+//! function of the cell inputs, so the jobs count can never change a
+//! result — only wall-clock time (determinism invariant: jobs=N output ==
+//! jobs=1 output, bit for bit; enforced by `tests/par_determinism.rs`).
+//!
+//! Progress lines are buffered per cell and flushed in index order as the
+//! completed prefix grows, so interleaved workers never interleave output.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Where a sweep's per-cell progress lines go.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgressSink {
+    /// Stream to stderr (in cell order, even when cells run in parallel).
+    Stderr,
+    /// Drop all progress output.
+    Silent,
+    /// Collect into the `Vec<String>` returned by [`run_cells`]
+    /// (in cell order) — used by tests and embedding callers.
+    Collected,
+}
+
+/// Per-cell progress handle. Workers write through this instead of
+/// `eprintln!` so the engine can buffer and order the output.
+pub struct Progress {
+    mode: ProgressMode,
+}
+
+enum ProgressMode {
+    /// Serial + Stderr: stream directly, nothing to reorder.
+    Direct,
+    /// Nothing is kept.
+    Drop,
+    /// Buffer for ordered flushing (parallel, or serial Collected).
+    Buffer(Vec<String>),
+}
+
+impl Progress {
+    /// Emit one progress line (a full line, no trailing newline).
+    pub fn line(&mut self, s: String) {
+        match &mut self.mode {
+            ProgressMode::Direct => eprintln!("{s}"),
+            ProgressMode::Drop => {}
+            ProgressMode::Buffer(v) => v.push(s),
+        }
+    }
+
+    fn into_lines(self) -> Vec<String> {
+        match self.mode {
+            ProgressMode::Buffer(v) => v,
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Resolve the worker count: explicit CLI value wins, then the
+/// `SDDE_JOBS` environment variable, then serial (1).
+pub fn resolve_jobs(cli: Option<usize>) -> usize {
+    cli.or_else(|| {
+        std::env::var("SDDE_JOBS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+    })
+    .unwrap_or(1)
+    .max(1)
+}
+
+/// Ordered-flush state shared by the workers: `pending[i]` holds cell i's
+/// buffered lines once it finishes; whoever completes a cell drains the
+/// contiguous done-prefix starting at `next`.
+struct FlushState {
+    next: usize,
+    pending: Vec<Option<Vec<String>>>,
+    collected: Vec<String>,
+}
+
+impl FlushState {
+    fn flush_ready(&mut self, sink: ProgressSink) {
+        while self.next < self.pending.len() {
+            let Some(lines) = self.pending[self.next].take() else {
+                break;
+            };
+            for l in lines {
+                match sink {
+                    ProgressSink::Stderr => eprintln!("{l}"),
+                    ProgressSink::Silent => {}
+                    ProgressSink::Collected => self.collected.push(l),
+                }
+            }
+            self.next += 1;
+        }
+    }
+}
+
+/// Run `n` independent cells with up to `jobs` worker threads and return
+/// `(results in cell order, collected progress lines in cell order)`.
+///
+/// `jobs <= 1` runs everything on the calling thread with zero overhead
+/// (and streams Stderr progress unbuffered) — the serial reference path.
+/// Parallel workers pull cell indices from a shared work queue (dynamic
+/// load balancing: cells can differ in cost by orders of magnitude across
+/// node counts), park each result in its own slot, and flush progress in
+/// index order, so both return values are independent of `jobs`.
+pub fn run_cells<T, F>(jobs: usize, n: usize, sink: ProgressSink, f: F) -> (Vec<T>, Vec<String>)
+where
+    T: Send,
+    F: Fn(usize, &mut Progress) -> T + Sync,
+{
+    if jobs <= 1 || n <= 1 {
+        let mut results = Vec::with_capacity(n);
+        let mut collected = Vec::new();
+        for i in 0..n {
+            let mut p = Progress {
+                mode: match sink {
+                    ProgressSink::Stderr => ProgressMode::Direct,
+                    ProgressSink::Silent => ProgressMode::Drop,
+                    ProgressSink::Collected => ProgressMode::Buffer(Vec::new()),
+                },
+            };
+            results.push(f(i, &mut p));
+            collected.extend(p.into_lines());
+        }
+        return (results, collected);
+    }
+
+    let next_cell = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let flush = Mutex::new(FlushState {
+        next: 0,
+        pending: (0..n).map(|_| None).collect(),
+        collected: Vec::new(),
+    });
+
+    std::thread::scope(|scope| {
+        for _ in 0..jobs.min(n) {
+            scope.spawn(|| loop {
+                let i = next_cell.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let mut p = Progress {
+                    mode: match sink {
+                        ProgressSink::Silent => ProgressMode::Drop,
+                        _ => ProgressMode::Buffer(Vec::new()),
+                    },
+                };
+                let r = f(i, &mut p);
+                *slots[i].lock().unwrap() = Some(r);
+                let mut fl = flush.lock().unwrap();
+                fl.pending[i] = Some(p.into_lines());
+                fl.flush_ready(sink);
+            });
+        }
+    });
+
+    let results = slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("parallel sweep cell produced no result")
+        })
+        .collect();
+    (results, flush.into_inner().unwrap().collected)
+}
+
+/// Host-side cost of one sweep cell (wall-clock of the simulator runs it
+/// contains — *not* virtual time, which is unaffected by any of this).
+#[derive(Clone, Debug)]
+pub struct CellBench {
+    pub label: String,
+    /// Host nanoseconds spent inside `Sim::run` for this cell.
+    pub host_ns: u64,
+    pub events_run: u64,
+    pub polls: u64,
+}
+
+/// Host-side summary of a whole sweep: wall-clock with `jobs` workers vs
+/// the serial-equivalent cost (the sum of per-cell host time).
+#[derive(Clone, Debug)]
+pub struct SweepBench {
+    pub jobs: usize,
+    /// Wall-clock of the whole sweep, including pattern building.
+    pub wall_ns: u64,
+    pub cells: Vec<CellBench>,
+}
+
+impl SweepBench {
+    /// Sum of per-cell simulator host time — what a serial run would spend
+    /// inside `Sim::run` (pattern building excluded on both sides).
+    pub fn cells_host_ns(&self) -> u64 {
+        self.cells.iter().map(|c| c.host_ns).sum()
+    }
+
+    pub fn events_run(&self) -> u64 {
+        self.cells.iter().map(|c| c.events_run).sum()
+    }
+
+    pub fn polls(&self) -> u64 {
+        self.cells.iter().map(|c| c.polls).sum()
+    }
+
+    /// Aggregate executor throughput: simulated events per wall second.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.events_run() as f64 / (self.wall_ns as f64 / 1e9)
+    }
+
+    /// Estimated speedup over a serial run: summed per-cell simulator host
+    /// time over observed wall time. (A lower bound when pattern building
+    /// is significant, since that also parallelizes but isn't counted in
+    /// `cells_host_ns`.)
+    pub fn speedup_vs_serial(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.cells_host_ns() as f64 / self.wall_ns as f64
+    }
+
+    /// One-paragraph human summary for stderr.
+    pub fn render(&self, name: &str) -> String {
+        format!(
+            "[bench] {name}: jobs={} wall={:.3}s cells-host={:.3}s \
+             events={} ({:.2}M events/s) speedup-vs-serial={:.2}x",
+            self.jobs,
+            self.wall_ns as f64 / 1e9,
+            self.cells_host_ns() as f64 / 1e9,
+            self.events_run(),
+            self.events_per_sec() / 1e6,
+            self.speedup_vs_serial(),
+        )
+    }
+}
+
+/// Measure wall-clock around a closure (helper for `run_*_bench`).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, u64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_nanos() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let work = |i: usize, p: &mut Progress| {
+            // Uneven per-cell cost exercises the dynamic queue.
+            let mut acc = 0u64;
+            for k in 0..(1 + i % 7) * 10_000 {
+                acc = acc.wrapping_mul(31).wrapping_add(k as u64);
+            }
+            p.line(format!("cell {i} start"));
+            p.line(format!("cell {i} acc={acc}"));
+            (i, acc)
+        };
+        let (serial, s_lines) = run_cells(1, 23, ProgressSink::Collected, work);
+        for jobs in [2, 4, 16] {
+            let (par, p_lines) = run_cells(jobs, 23, ProgressSink::Collected, work);
+            assert_eq!(serial, par, "results differ at jobs={jobs}");
+            assert_eq!(s_lines, p_lines, "progress lines differ at jobs={jobs}");
+        }
+        assert_eq!(s_lines.len(), 46);
+        assert!(s_lines[0].starts_with("cell 0 "));
+        assert!(s_lines[45].starts_with("cell 22 "));
+    }
+
+    #[test]
+    fn silent_collects_nothing() {
+        let (res, lines) = run_cells(4, 8, ProgressSink::Silent, |i, p| {
+            p.line(format!("noise {i}"));
+            i * 2
+        });
+        assert_eq!(res, (0..8).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(lines.is_empty());
+    }
+
+    #[test]
+    fn zero_and_one_cells() {
+        let (res, lines) = run_cells::<usize, _>(4, 0, ProgressSink::Collected, |_, _| {
+            unreachable!()
+        });
+        assert!(res.is_empty() && lines.is_empty());
+        let (res, _) = run_cells(8, 1, ProgressSink::Collected, |i, _| i + 41);
+        assert_eq!(res, vec![41]);
+    }
+
+    #[test]
+    fn more_jobs_than_cells() {
+        let (res, _) = run_cells(64, 3, ProgressSink::Silent, |i, _| i);
+        assert_eq!(res, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn resolve_jobs_precedence() {
+        // CLI beats everything; explicit 0 clamps to 1. (The env-var path
+        // is covered implicitly — tests must not mutate process env.)
+        assert_eq!(resolve_jobs(Some(7)), 7);
+        assert_eq!(resolve_jobs(Some(0)), 1);
+        assert!(resolve_jobs(None) >= 1);
+    }
+
+    #[test]
+    fn sweep_bench_math() {
+        let b = SweepBench {
+            jobs: 4,
+            wall_ns: 1_000_000_000,
+            cells: vec![
+                CellBench {
+                    label: "a".into(),
+                    host_ns: 1_500_000_000,
+                    events_run: 2_000_000,
+                    polls: 10,
+                },
+                CellBench {
+                    label: "b".into(),
+                    host_ns: 1_500_000_000,
+                    events_run: 1_000_000,
+                    polls: 20,
+                },
+            ],
+        };
+        assert_eq!(b.cells_host_ns(), 3_000_000_000);
+        assert_eq!(b.events_run(), 3_000_000);
+        assert_eq!(b.polls(), 30);
+        assert!((b.speedup_vs_serial() - 3.0).abs() < 1e-9);
+        assert!((b.events_per_sec() - 3e6).abs() < 1.0);
+        let s = b.render("quick-fig7");
+        assert!(s.contains("jobs=4"));
+        assert!(s.contains("3.00x"));
+    }
+}

@@ -10,6 +10,7 @@ use anyhow::{Context, Result};
 
 use super::figures::Point;
 use super::neighbor::{HaloMethod, NeighborPoint};
+use super::par::SweepBench;
 use crate::util::fmt;
 
 /// Render one figure's points as per-matrix tables. Columns: node count,
@@ -241,6 +242,60 @@ pub fn write_neighbor_csv(path: &Path, points: &[NeighborPoint]) -> Result<()> {
     Ok(())
 }
 
+/// Write host-side sweep benchmarks as JSON (`BENCH_sweep.json`): one
+/// entry per named sweep with wall time, aggregate cell host time,
+/// executor throughput and the estimated speedup over a serial run.
+/// Hand-rolled JSON, same as the trace exporter — the build is offline.
+pub fn write_bench_json(path: &Path, sweeps: &[(String, SweepBench)]) -> Result<()> {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f =
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"sweeps\": [")?;
+    for (si, (name, b)) in sweeps.iter().enumerate() {
+        writeln!(f, "    {{")?;
+        writeln!(f, "      \"name\": \"{}\",", esc(name))?;
+        writeln!(f, "      \"jobs\": {},", b.jobs)?;
+        writeln!(f, "      \"wall_ns\": {},", b.wall_ns)?;
+        writeln!(f, "      \"cells_host_ns\": {},", b.cells_host_ns())?;
+        writeln!(f, "      \"events_run\": {},", b.events_run())?;
+        writeln!(f, "      \"polls\": {},", b.polls())?;
+        writeln!(f, "      \"events_per_sec\": {:.1},", b.events_per_sec())?;
+        writeln!(
+            f,
+            "      \"speedup_vs_serial\": {:.3},",
+            b.speedup_vs_serial()
+        )?;
+        writeln!(f, "      \"cells\": [")?;
+        for (ci, c) in b.cells.iter().enumerate() {
+            writeln!(
+                f,
+                "        {{\"label\": \"{}\", \"host_ns\": {}, \
+                 \"events_run\": {}, \"polls\": {}}}{}",
+                esc(&c.label),
+                c.host_ns,
+                c.events_run,
+                c.polls,
+                if ci + 1 < b.cells.len() { "," } else { "" }
+            )?;
+        }
+        writeln!(f, "      ]")?;
+        writeln!(
+            f,
+            "    }}{}",
+            if si + 1 < sweeps.len() { "," } else { "" }
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
 /// Write points as CSV (one row per measurement).
 pub fn write_csv(path: &Path, points: &[Point]) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -328,6 +383,32 @@ mod tests {
         let content = std::fs::read_to_string(&path).unwrap();
         assert!(content.starts_with("matrix,method,mpi"));
         assert_eq!(content.lines().count(), 3);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bench_json_is_wellformed() {
+        use crate::bench::par::CellBench;
+        let b = SweepBench {
+            jobs: 2,
+            wall_ns: 500,
+            cells: vec![CellBench {
+                label: "m \"x\" nodes=2".into(),
+                host_ns: 400,
+                events_run: 7,
+                polls: 9,
+            }],
+        };
+        let path = std::env::temp_dir().join("sdde_bench_json_test.json");
+        write_bench_json(&path, &[("fig7-quick".to_string(), b)]).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("\"name\": \"fig7-quick\""));
+        assert!(content.contains("\"jobs\": 2"));
+        assert!(content.contains("\\\"x\\\""));
+        assert_eq!(
+            content.matches('{').count(),
+            content.matches('}').count()
+        );
         std::fs::remove_file(path).ok();
     }
 

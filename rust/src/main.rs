@@ -25,8 +25,9 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use sdde::bench::{
-    render_figure, render_neighbor_figure, run_neighbor_sweep, run_sweep, write_csv,
-    write_neighbor_csv, FigureId, HaloMethod, NeighborSweepConfig, SweepConfig,
+    render_figure, render_neighbor_figure, resolve_jobs, run_neighbor_sweep_bench,
+    run_sweep_bench, write_bench_json, write_csv, write_neighbor_csv, FigureId, HaloMethod,
+    NeighborSweepConfig, ProgressSink, SweepBench, SweepConfig,
 };
 use sdde::mpi::World;
 use sdde::mpix::{IntraAlgo, MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
@@ -64,11 +65,12 @@ fn print_help() {
          USAGE: sdde <figures|neighbor|sdde|trace|solve|info> [flags]\n\n\
          figures --fig <5|6|7|8|all> [--quick] [--div N] [--out DIR]\n\
                  [--nodes 2,4,..] [--ppn N] [--matrices a,b] [--algos x,y]\n\
-                 [--region node|socket] [--seed N]\n\
+                 [--region node|socket] [--seed N] [--jobs N]\n\
+                 [--bench-json FILE]\n\
          neighbor [--nodes 2,4,..] [--ppn N] [--iters 1,16,256] [--div N]\n\
                  [--matrices a,b] [--methods p2p,persistent,loc-persistent]\n\
                  [--mpi openmpi|mvapich2|both] [--region node|socket]\n\
-                 [--out DIR] [--seed N]\n\
+                 [--out DIR] [--seed N] [--jobs N] [--bench-json FILE]\n\
          sdde    --matrix <preset> --nodes N [--ppn N] [--algo NAME]\n\
                  [--variant crs|v] [--mpi openmpi|mvapich2] [--div N]\n\
          trace   [--matrix <preset>] [--div N] [--nodes N] [--ppn N]\n\
@@ -88,6 +90,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     let quick = args.has("quick");
     let div = args.get_parsed("div", if quick { 64 } else { 1 });
     let out_dir = args.get("out").map(PathBuf::from);
+    // --jobs beats SDDE_JOBS beats serial; results are identical either way.
+    let jobs = resolve_jobs(args.get("jobs").and_then(|s| s.parse().ok()));
+    let mut benches: Vec<(String, SweepBench)> = Vec::new();
 
     for fig in figs {
         let mut cfg = if quick {
@@ -125,23 +130,28 @@ fn cmd_figures(args: &Args) -> Result<()> {
                 })
                 .collect::<Result<_>>()?;
         }
-        let points = run_sweep(&cfg);
+        cfg.jobs = jobs;
+        let fig_no = match fig {
+            FigureId::Fig5 => 5,
+            FigureId::Fig6 => 6,
+            FigureId::Fig7 => 7,
+            FigureId::Fig8 => 8,
+        };
+        let (points, bench) = run_sweep_bench(&cfg);
+        eprintln!("{}", bench.render(&format!("fig{fig_no}")));
+        benches.push((format!("fig{fig_no}"), bench));
         println!("{}", render_figure(&fig.title(), &points));
         if let Some(dir) = &out_dir {
-            let name = format!(
-                "fig{}_{}.csv",
-                match fig {
-                    FigureId::Fig5 => 5,
-                    FigureId::Fig6 => 6,
-                    FigureId::Fig7 => 7,
-                    FigureId::Fig8 => 8,
-                },
-                cfg.flavor.name()
-            );
+            let name = format!("fig{}_{}.csv", fig_no, cfg.flavor.name());
             let path = dir.join(name);
             write_csv(&path, &points)?;
             println!("wrote {}", path.display());
         }
+    }
+    if let Some(bp) = args.get("bench-json") {
+        let path = PathBuf::from(bp);
+        write_bench_json(&path, &benches)?;
+        eprintln!("wrote {}", path.display());
     }
     Ok(())
 }
@@ -153,6 +163,8 @@ fn cmd_neighbor(args: &Args) -> Result<()> {
         s => vec![MpiFlavor::parse(s).ok_or_else(|| anyhow::anyhow!("unknown mpi flavor {s}"))?],
     };
     let out_dir = args.get("out").map(PathBuf::from);
+    let jobs = resolve_jobs(args.get("jobs").and_then(|s| s.parse().ok()));
+    let mut benches: Vec<(String, SweepBench)> = Vec::new();
     for flavor in flavors {
         let mut cfg = NeighborSweepConfig::quick(flavor, div);
         if let Some(nodes) = args.get_list("nodes") {
@@ -201,8 +213,11 @@ fn cmd_neighbor(args: &Args) -> Result<()> {
                 })
                 .collect::<Result<_>>()?;
         }
-        cfg.progress = true;
-        let points = run_neighbor_sweep(&cfg);
+        cfg.progress = ProgressSink::Stderr;
+        cfg.jobs = jobs;
+        let (points, bench) = run_neighbor_sweep_bench(&cfg);
+        eprintln!("{}", bench.render(&format!("neighbor-{}", flavor.name())));
+        benches.push((format!("neighbor-{}", flavor.name()), bench));
         let title = format!(
             "Neighbor figure: persistent neighbor alltoallv using {}",
             flavor.name()
@@ -213,6 +228,11 @@ fn cmd_neighbor(args: &Args) -> Result<()> {
             write_neighbor_csv(&path, &points)?;
             println!("wrote {}", path.display());
         }
+    }
+    if let Some(bp) = args.get("bench-json") {
+        let path = PathBuf::from(bp);
+        write_bench_json(&path, &benches)?;
+        eprintln!("wrote {}", path.display());
     }
     Ok(())
 }

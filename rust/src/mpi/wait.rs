@@ -48,9 +48,13 @@ impl Signal {
         self.0.borrow().set
     }
 
+    /// Register a waker to fire on [`Signal::set`] (no-op if already set).
+    /// NBX progress loops re-poll the same [`WaitAny`] many times between
+    /// wakes; duplicate registrations from one task are deduplicated so
+    /// the waker list stays O(waiting tasks), not O(polls).
     pub fn register(&self, waker: &Waker) {
         let mut st = self.0.borrow_mut();
-        if !st.set {
+        if !st.set && !st.wakers.iter().any(|w| w.will_wake(waker)) {
             st.wakers.push(waker.clone());
         }
     }

@@ -3,8 +3,9 @@
 //! completion semantics, probes, and per-tier traffic counters.
 
 use std::cell::{Cell, RefCell};
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::future::Future;
+use std::hash::Hash;
 use std::pin::Pin;
 use std::rc::Rc;
 use std::task::{Context, Poll, Waker};
@@ -12,6 +13,7 @@ use std::task::{Context, Poll, Waker};
 use super::{Tag, ANY_SOURCE, ANY_TAG, TAG_INTERNAL_BASE};
 use crate::simnet::{CostModel, Sim, SimHandle, SimStats, Tier, Time, Topology};
 use crate::trace::{Event, EventKind, Trace, TraceConfig, TraceSummary, Tracer};
+use crate::util::FxHashMap;
 
 // ---------------------------------------------------------------------------
 // Payload / message types
@@ -136,9 +138,10 @@ impl Request {
     }
 
     /// Register a waker to fire on completion (no-op if already done).
+    /// Re-registering the same task across polls is deduplicated.
     pub fn register_waker(&self, waker: &Waker) {
         let mut st = self.st.borrow_mut();
-        if !st.done {
+        if !st.done && !st.wakers.iter().any(|w| w.will_wake(waker)) {
             st.wakers.push(waker.clone());
         }
     }
@@ -167,7 +170,10 @@ impl Future for Request {
         if st.done {
             Poll::Ready(st.msg.take())
         } else {
-            st.wakers.push(cx.waker().clone());
+            let waker = cx.waker();
+            if !st.wakers.iter().any(|w| w.will_wake(waker)) {
+                st.wakers.push(waker.clone());
+            }
             Poll::Pending
         }
     }
@@ -231,12 +237,226 @@ struct InMsg {
     sync_req: Option<Request>,
     /// Trace id linking this message back to its send event (0 untraced).
     msg_id: u64,
+    /// Arrival sequence number (strictly increasing per rank).
+    seq: u64,
 }
 
 struct RecvSpec {
     src: usize, // or ANY_SOURCE
     tag: Tag,   // or ANY_TAG
     req: Request,
+    /// Post sequence number (strictly increasing per rank).
+    seq: u64,
+}
+
+/// Remove `seq` from a bucket's seq list, dropping the bucket when empty
+/// (collective tags carry sequence numbers, so live tag values are
+/// unbounded over a run — empty buckets must not accumulate).
+fn bucket_remove<K: Eq + Hash>(map: &mut FxHashMap<K, VecDeque<u64>>, key: K, seq: u64) {
+    let Some(dq) = map.get_mut(&key) else {
+        debug_assert!(false, "bucket missing for queued entry");
+        return;
+    };
+    // Seq lists are in insertion order, i.e. sorted.
+    let i = dq.partition_point(|&s| s < seq);
+    debug_assert!(i < dq.len() && dq[i] == seq, "seq missing from bucket");
+    dq.remove(i);
+    if dq.is_empty() {
+        map.remove(&key);
+    }
+}
+
+/// Arrival-ordered unexpected-message queue with src/tag bucket indexes.
+///
+/// The buckets are host-side only: the *charged* queue-search cost is
+/// always `match_cost(pos + 1)` for a match at arrival-order position
+/// `pos` (and `match_cost(len)` on a miss) — exactly what a linear scan
+/// of the arrival-ordered queue would charge. The indexes merely locate
+/// that position in O(bucket front + log len) host work instead of O(len),
+/// so virtual times are bit-for-bit unchanged while deep queues stop
+/// costing host time per probe.
+struct UnexpectedQueue {
+    /// Messages in arrival order; `seq` strictly increasing ⇒ sorted.
+    queue: VecDeque<InMsg>,
+    next_seq: u64,
+    /// Bumped on every push/remove. A receive that charged its match cost
+    /// can skip the authoritative post-charge re-lookup when unchanged.
+    epoch: u64,
+    /// (src, tag) → seqs with exactly that envelope.
+    by_src_tag: FxHashMap<(usize, Tag), VecDeque<u64>>,
+    /// tag → seqs (serves `ANY_SOURCE` + concrete-tag specs — NBX probes).
+    by_tag: FxHashMap<Tag, VecDeque<u64>>,
+    /// src → seqs (serves concrete-src + `ANY_TAG` specs).
+    by_src: FxHashMap<usize, VecDeque<u64>>,
+}
+
+impl UnexpectedQueue {
+    fn new() -> UnexpectedQueue {
+        UnexpectedQueue {
+            queue: VecDeque::new(),
+            next_seq: 0,
+            epoch: 0,
+            by_src_tag: FxHashMap::default(),
+            by_tag: FxHashMap::default(),
+            by_src: FxHashMap::default(),
+        }
+    }
+
+    fn push(&mut self, mut m: InMsg) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.epoch += 1;
+        m.seq = seq;
+        self.by_src_tag
+            .entry((m.src, m.tag))
+            .or_default()
+            .push_back(seq);
+        self.by_tag.entry(m.tag).or_default().push_back(seq);
+        self.by_src.entry(m.src).or_default().push_back(seq);
+        self.queue.push_back(m);
+    }
+
+    /// Arrival-order position and seq of the first message matching the
+    /// receive spec (wildcards allowed), via the bucket indexes. Debug
+    /// builds cross-check the answer against the linear scan it replaces.
+    fn first_match(&self, src: usize, tag: Tag) -> Option<(usize, u64)> {
+        let hit = self.first_match_indexed(src, tag);
+        debug_assert_eq!(
+            hit.map(|(pos, _)| pos),
+            self.queue
+                .iter()
+                .position(|m| matches(src, tag, m.src, m.tag)),
+            "bucket index disagrees with linear scan for spec ({src}, {tag})"
+        );
+        hit
+    }
+
+    fn first_match_indexed(&self, src: usize, tag: Tag) -> Option<(usize, u64)> {
+        let seq = match (src == ANY_SOURCE, tag == ANY_TAG) {
+            (false, false) => *self.by_src_tag.get(&(src, tag))?.front()?,
+            (true, false) => *self.by_tag.get(&tag)?.front()?,
+            (false, true) => *self.by_src.get(&src)?.front()?,
+            (true, true) => self.queue.front()?.seq,
+        };
+        let pos = self.queue.partition_point(|m| m.seq < seq);
+        debug_assert!(pos < self.queue.len() && self.queue[pos].seq == seq);
+        Some((pos, seq))
+    }
+
+    /// The charged scan count for a lookup result: the scan stops at the
+    /// match position, or touches the whole queue on a miss.
+    fn scanned(&self, hit: Option<(usize, u64)>) -> usize {
+        match hit {
+            Some((pos, _)) => pos + 1,
+            None => self.queue.len(),
+        }
+    }
+
+    fn peek(&self, pos: usize) -> &InMsg {
+        &self.queue[pos]
+    }
+
+    fn remove_at(&mut self, pos: usize) -> InMsg {
+        let m = self
+            .queue
+            .remove(pos)
+            .expect("unexpected-queue position out of range");
+        self.epoch += 1;
+        bucket_remove(&mut self.by_src_tag, (m.src, m.tag), m.seq);
+        bucket_remove(&mut self.by_tag, m.tag, m.seq);
+        bucket_remove(&mut self.by_src, m.src, m.seq);
+        m
+    }
+}
+
+/// Post-ordered receive queue bucketed by spec shape: an arrival consults
+/// at most four bucket fronts (exact, `ANY_SOURCE`, `ANY_TAG`, both) and
+/// takes the earliest-posted candidate — the same winner, at the same
+/// charged position, as the old linear scan in post order.
+struct PostedQueue {
+    /// Specs in post order; `seq` strictly increasing ⇒ sorted.
+    queue: Vec<RecvSpec>,
+    next_seq: u64,
+    /// Spec (src, tag), both concrete.
+    exact: FxHashMap<(usize, Tag), VecDeque<u64>>,
+    /// Spec (`ANY_SOURCE`, tag).
+    any_src: FxHashMap<Tag, VecDeque<u64>>,
+    /// Spec (src, `ANY_TAG`).
+    any_tag: FxHashMap<usize, VecDeque<u64>>,
+    /// Spec (`ANY_SOURCE`, `ANY_TAG`).
+    any_any: VecDeque<u64>,
+}
+
+impl PostedQueue {
+    fn new() -> PostedQueue {
+        PostedQueue {
+            queue: Vec::new(),
+            next_seq: 0,
+            exact: FxHashMap::default(),
+            any_src: FxHashMap::default(),
+            any_tag: FxHashMap::default(),
+            any_any: VecDeque::new(),
+        }
+    }
+
+    fn push(&mut self, src: usize, tag: Tag, req: Request) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        match (src == ANY_SOURCE, tag == ANY_TAG) {
+            (false, false) => self.exact.entry((src, tag)).or_default().push_back(seq),
+            (true, false) => self.any_src.entry(tag).or_default().push_back(seq),
+            (false, true) => self.any_tag.entry(src).or_default().push_back(seq),
+            (true, true) => self.any_any.push_back(seq),
+        }
+        self.queue.push(RecvSpec { src, tag, req, seq });
+    }
+
+    /// Post-order position of the first spec matching an arrival with
+    /// envelope (src, tag) — src and tag are concrete here. Debug builds
+    /// cross-check against the linear scan this replaces.
+    fn first_match(&self, src: usize, tag: Tag) -> Option<usize> {
+        let hit = self.first_match_indexed(src, tag);
+        debug_assert_eq!(
+            hit,
+            self.queue
+                .iter()
+                .position(|p| matches(p.src, p.tag, src, tag)),
+            "posted index disagrees with linear scan for arrival ({src}, {tag})"
+        );
+        hit
+    }
+
+    fn first_match_indexed(&self, src: usize, tag: Tag) -> Option<usize> {
+        let mut best: Option<u64> = None;
+        let mut consider = |cand: Option<u64>| {
+            if let Some(s) = cand {
+                best = Some(best.map_or(s, |b| b.min(s)));
+            }
+        };
+        consider(self.exact.get(&(src, tag)).and_then(|d| d.front().copied()));
+        consider(self.any_src.get(&tag).and_then(|d| d.front().copied()));
+        consider(self.any_tag.get(&src).and_then(|d| d.front().copied()));
+        consider(self.any_any.front().copied());
+        let seq = best?;
+        let pos = self.queue.partition_point(|p| p.seq < seq);
+        debug_assert!(pos < self.queue.len() && self.queue[pos].seq == seq);
+        Some(pos)
+    }
+
+    fn remove_at(&mut self, pos: usize) -> RecvSpec {
+        let spec = self.queue.remove(pos);
+        match (spec.src == ANY_SOURCE, spec.tag == ANY_TAG) {
+            (false, false) => bucket_remove(&mut self.exact, (spec.src, spec.tag), spec.seq),
+            (true, false) => bucket_remove(&mut self.any_src, spec.tag, spec.seq),
+            (false, true) => bucket_remove(&mut self.any_tag, spec.src, spec.seq),
+            (true, true) => {
+                let i = self.any_any.partition_point(|&s| s < spec.seq);
+                debug_assert!(i < self.any_any.len() && self.any_any[i] == spec.seq);
+                self.any_any.remove(i);
+            }
+        }
+        spec
+    }
 }
 
 pub(crate) struct RankState {
@@ -244,15 +464,18 @@ pub(crate) struct RankState {
     nic_free: Time,
     /// CPU busy-until (matching / software overheads serialize here).
     cpu_free: Time,
-    unexpected: VecDeque<InMsg>,
-    posted: Vec<RecvSpec>,
+    unexpected: UnexpectedQueue,
+    posted: PostedQueue,
     /// Bumped on every arrival; probe futures watch it.
     arrival_epoch: u64,
     arrival_wakers: Vec<Waker>,
+    /// Reusable drain buffer for `arrival_wakers` — [`deliver`] swaps it in
+    /// instead of allocating a fresh `Vec<Waker>` per message.
+    wakers_scratch: Vec<Waker>,
     /// FIFO guard: per-destination last scheduled arrival time.
-    last_arrival_to: HashMap<usize, Time>,
+    last_arrival_to: FxHashMap<usize, Time>,
     /// Per-collective-kind sequence numbers (tag disambiguation).
-    pub(crate) coll_seq: HashMap<Tag, u32>,
+    pub(crate) coll_seq: FxHashMap<Tag, u32>,
     /// RMA windows (indexed by window id).
     pub(crate) windows: Vec<super::rma::WinState>,
 }
@@ -262,12 +485,13 @@ impl RankState {
         RankState {
             nic_free: 0,
             cpu_free: 0,
-            unexpected: VecDeque::new(),
-            posted: Vec::new(),
+            unexpected: UnexpectedQueue::new(),
+            posted: PostedQueue::new(),
             arrival_epoch: 0,
             arrival_wakers: Vec::new(),
-            last_arrival_to: HashMap::new(),
-            coll_seq: HashMap::new(),
+            wakers_scratch: Vec::new(),
+            last_arrival_to: FxHashMap::default(),
+            coll_seq: FxHashMap::default(),
             windows: Vec::new(),
         }
     }
@@ -606,29 +830,29 @@ impl Comm {
     /// Non-blocking receive. `src`/`tag` accept [`ANY_SOURCE`]/[`ANY_TAG`].
     pub async fn irecv(&self, src: usize, tag: Tag) -> Request {
         let st = &self.state;
-        // Scan the unexpected queue (queue-search cost ∝ entries scanned).
-        let scanned = {
+        // One indexed lookup yields both the candidate match and the
+        // charged scan count (the arrival-order position a linear scan of
+        // the queue would stop at — the modeled queue-search cost).
+        let (cand, scanned, epoch) = {
             let r = st.ranks[self.rank].borrow();
-            let mut scanned = r.unexpected.len();
-            for (i, m) in r.unexpected.iter().enumerate() {
-                if matches(src, tag, m.src, m.tag) {
-                    scanned = i + 1;
-                    break;
-                }
-            }
-            scanned
+            let cand = r.unexpected.first_match(src, tag);
+            (cand, r.unexpected.scanned(cand), r.unexpected.epoch)
         };
         self.charge_cpu(st.cost.match_cost(scanned)).await;
 
         // Authoritative match *after* the charge: a message may have
-        // arrived while the CPU was busy; matching must observe it, or the
-        // receive would be posted while its message rots in the queue.
+        // arrived (or been taken by a sibling task on this rank) while the
+        // CPU was busy; matching must observe it, or the receive would be
+        // posted while its message rots in the queue. The epoch guard
+        // skips the re-lookup in the common unchanged case.
         let found = {
             let mut r = st.ranks[self.rank].borrow_mut();
-            r.unexpected
-                .iter()
-                .position(|m| matches(src, tag, m.src, m.tag))
-                .map(|idx| r.unexpected.remove(idx).unwrap())
+            let cand = if r.unexpected.epoch == epoch {
+                cand
+            } else {
+                r.unexpected.first_match(src, tag)
+            };
+            cand.map(|(pos, _)| r.unexpected.remove_at(pos))
         };
         if let Some(m) = found {
             return self.complete_match(m).await;
@@ -636,11 +860,10 @@ impl Comm {
 
         // Post the receive for a future arrival.
         let req = Request::new();
-        st.ranks[self.rank].borrow_mut().posted.push(RecvSpec {
-            src,
-            tag,
-            req: req.clone(),
-        });
+        st.ranks[self.rank]
+            .borrow_mut()
+            .posted
+            .push(src, tag, req.clone());
         req
     }
 
@@ -719,27 +942,25 @@ impl Comm {
 
     // -- probes -------------------------------------------------------------
 
-    /// Non-blocking probe: scan the unexpected queue once (charging the
-    /// queue-search cost) and report a matching envelope if present.
+    /// Non-blocking probe: one indexed lookup (charging the modeled
+    /// queue-search cost of the scan it stands in for) reporting a
+    /// matching envelope if present. An empty or missed queue charges the
+    /// whole-queue scan and touches no entries on the host.
     pub async fn iprobe(&self, src: usize, tag: Tag) -> Option<ProbeInfo> {
         let st = &self.state;
         let (info, scanned) = {
             let r = st.ranks[self.rank].borrow();
-            let mut info = None;
-            let mut scanned = 0usize;
-            for (i, m) in r.unexpected.iter().enumerate() {
-                scanned = i + 1;
-                if matches(src, tag, m.src, m.tag) {
-                    info = Some(ProbeInfo {
-                        src: m.src,
-                        tag: m.tag,
-                        count: m.payload.len(),
-                        bytes: m.payload.bytes,
-                    });
-                    break;
+            let cand = r.unexpected.first_match(src, tag);
+            let info = cand.map(|(pos, _)| {
+                let m = r.unexpected.peek(pos);
+                ProbeInfo {
+                    src: m.src,
+                    tag: m.tag,
+                    count: m.payload.len(),
+                    bytes: m.payload.bytes,
                 }
-            }
-            (info, scanned)
+            });
+            (info, r.unexpected.scanned(cand))
         };
         self.charge_cpu(st.cost.match_cost(scanned)).await;
         info
@@ -781,12 +1002,13 @@ impl Comm {
         self.state.ranks[self.rank].borrow().arrival_epoch
     }
 
-    /// Register a waker for the next arrival at this rank.
+    /// Register a waker for the next arrival at this rank. Re-registering
+    /// the same task before the next arrival is deduplicated.
     pub fn register_arrival_waker(&self, waker: &Waker) {
-        self.state.ranks[self.rank]
-            .borrow_mut()
-            .arrival_wakers
-            .push(waker.clone());
+        let mut r = self.state.ranks[self.rank].borrow_mut();
+        if !r.arrival_wakers.iter().any(|w| w.will_wake(waker)) {
+            r.arrival_wakers.push(waker.clone());
+        }
     }
 
     /// Counters snapshot (shared across ranks; callers usually read it from
@@ -847,15 +1069,16 @@ fn deliver(
 ) {
     let mut r = state.ranks[dst].borrow_mut();
     r.arrival_epoch += 1;
-    let wakers: Vec<Waker> = r.arrival_wakers.drain(..).collect();
+    // Drain arrival wakers into the reusable scratch buffer (no per-message
+    // Vec allocation; restored at the end of the function).
+    let mut wakers = std::mem::take(&mut r.wakers_scratch);
+    debug_assert!(wakers.is_empty());
+    wakers.append(&mut r.arrival_wakers);
 
-    // Match against posted receives, in post order.
-    let pos = r
-        .posted
-        .iter()
-        .position(|p| matches(p.src, p.tag, src, tag));
-    if let Some(i) = pos {
-        let spec = r.posted.remove(i);
+    // Match against posted receives, in post order (bucketed lookup; the
+    // charged cost below is the post-order position, as before).
+    if let Some(i) = r.posted.first_match(src, tag) {
+        let spec = r.posted.remove_at(i);
         // Charge the receiver's CPU for the match.
         let now = state.sim.now();
         let scanned = i + 1;
@@ -892,19 +1115,24 @@ fn deliver(
             spec.req.complete(Some(msg));
         }
     } else {
-        r.unexpected.push_back(InMsg {
+        r.unexpected.push(InMsg {
             src,
             tag,
             payload,
             rendezvous,
             sync_req,
             msg_id,
+            seq: 0, // assigned by push
         });
         drop(r);
     }
-    for w in wakers {
+    for w in wakers.drain(..) {
         w.wake();
     }
+    // Hand the (empty, capacity-retaining) buffer back for the next
+    // delivery. Wakes only enqueue tasks on this executor, so nothing ran
+    // in between that could have taken the scratch buffer.
+    state.ranks[dst].borrow_mut().wakers_scratch = wakers;
 }
 
 /// Trace helper: one posted-receive match event (no-op when disabled).
@@ -961,7 +1189,10 @@ impl Future for ArrivalWait {
         if r.arrival_epoch != self.epoch {
             Poll::Ready(())
         } else {
-            r.arrival_wakers.push(cx.waker().clone());
+            let waker = cx.waker();
+            if !r.arrival_wakers.iter().any(|w| w.will_wake(waker)) {
+                r.arrival_wakers.push(waker.clone());
+            }
             Poll::Pending
         }
     }
@@ -1167,6 +1398,96 @@ mod tests {
         });
         assert_eq!(out.counters.internode_sent[0], 2);
         assert_eq!(out.counters.max_internode_per_rank(), 2);
+    }
+
+    #[test]
+    fn any_tag_recv_gets_earliest_from_source() {
+        // Exercises the by-src bucket: (concrete src, ANY_TAG) receives
+        // must drain that source's messages in arrival (FIFO) order.
+        let out = world(1, 3).run(|c| async move {
+            match c.rank() {
+                0 => {
+                    for t in [7u32, 3, 9] {
+                        c.send(2, t, Payload::ints(&[t as u64])).await;
+                    }
+                    vec![]
+                }
+                1 => {
+                    c.send(2, 1, Payload::ints(&[100])).await;
+                    vec![]
+                }
+                _ => {
+                    c.sim().sleep(1_000_000).await; // let everything queue up
+                    let mut got = Vec::new();
+                    for _ in 0..3 {
+                        got.push(c.recv(0, ANY_TAG).await.payload.words[0]);
+                    }
+                    got.push(c.recv(1, ANY_TAG).await.payload.words[0]);
+                    got
+                }
+            }
+        });
+        assert_eq!(out.results[2], vec![7, 3, 9, 100]);
+    }
+
+    #[test]
+    fn posted_wildcard_first_posted_wins() {
+        // Matching against posted receives is in post order: a wildcard
+        // posted before an exact spec takes the first arrival.
+        let out = world(1, 2).run(|c| async move {
+            if c.rank() == 0 {
+                c.sim().sleep(10_000).await;
+                c.send(1, 5, Payload::ints(&[1])).await;
+                c.send(1, 5, Payload::ints(&[2])).await;
+                0
+            } else {
+                let r_any = c.irecv(ANY_SOURCE, ANY_TAG).await;
+                let r_exact = c.irecv(0, 5).await;
+                let m_any = r_any.await.unwrap();
+                let m_exact = r_exact.await.unwrap();
+                m_any.payload.words[0] * 10 + m_exact.payload.words[0]
+            }
+        });
+        assert_eq!(out.results[1], 12);
+    }
+
+    #[test]
+    fn deep_queue_distinct_tags_match_from_any_position() {
+        // 300 distinct tags queued, drained in reverse order: every recv
+        // matches at a different arrival-order position, and the per-tag
+        // buckets are created and torn down along the way.
+        let out = world(1, 2).run(|c| async move {
+            if c.rank() == 0 {
+                for t in 0..300u32 {
+                    c.isend(1, t, Payload::ints(&[t as u64])).await;
+                }
+                0
+            } else {
+                c.sim().sleep(5_000_000).await;
+                let mut sum = 0u64;
+                for t in (0..300u32).rev() {
+                    sum += c.recv(0, t).await.payload.words[0];
+                }
+                sum
+            }
+        });
+        assert_eq!(out.results[1], (0..300u64).sum::<u64>());
+    }
+
+    #[test]
+    fn host_stats_populated() {
+        let out = world(1, 2).run(|c| async move {
+            if c.rank() == 0 {
+                c.send(1, 1, Payload::ints(&[1])).await;
+            } else {
+                c.recv(0, 1).await;
+            }
+        });
+        assert!(out.exec_stats.events_run > 0);
+        assert!(out.exec_stats.polls > 0);
+        // Wall-clock accounting: Instant is monotonic and the run did real
+        // work, so a populated (possibly small) duration must be recorded.
+        assert!(out.exec_stats.host_ns > 0);
     }
 
     #[test]

@@ -30,6 +30,20 @@ pub struct SimStats {
     pub events_run: u64,
     /// Futures polled (ready-queue drains; counts re-polls after wakes).
     pub polls: u64,
+    /// Host wall-clock time spent inside [`Sim::run`], ns. Cumulative over
+    /// repeated `run` calls; 0 until the first call returns.
+    pub host_ns: u64,
+}
+
+impl SimStats {
+    /// Host-side engine throughput: timer events per wall-clock second.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.host_ns == 0 {
+            0.0
+        } else {
+            self.events_run as f64 * 1e9 / self.host_ns as f64
+        }
+    }
 }
 
 type BoxFut = Pin<Box<dyn Future<Output = ()> + 'static>>;
@@ -70,6 +84,7 @@ struct SimInner {
     free_cb_slots: RefCell<Vec<usize>>,
     events_run: Cell<u64>,
     polls: Cell<u64>,
+    host_ns: Cell<u64>,
 }
 
 // ---------------------------------------------------------------------------
@@ -186,6 +201,7 @@ impl Sim {
     /// Returns the final virtual time. Panics if tasks remain alive but
     /// nothing can make progress (a deadlock in the simulated program).
     pub fn run(&self) -> Time {
+        let host_t0 = std::time::Instant::now();
         loop {
             // Drain all runnable tasks at the current instant.
             loop {
@@ -232,6 +248,9 @@ impl Sim {
                 None => break,
             }
         }
+        self.inner.host_ns.set(
+            self.inner.host_ns.get() + host_t0.elapsed().as_nanos() as u64,
+        );
         assert_eq!(
             self.inner.live_tasks.get(),
             0,
@@ -251,6 +270,7 @@ impl Sim {
         SimStats {
             events_run: self.inner.events_run.get(),
             polls: self.inner.polls.get(),
+            host_ns: self.inner.host_ns.get(),
         }
     }
 }

@@ -2,9 +2,11 @@
 
 pub mod args;
 pub mod fmt;
+pub mod hash;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
 pub use args::Args;
+pub use hash::{FxHashMap, FxHashSet};
 pub use rng::Rng;

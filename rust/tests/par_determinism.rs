@@ -1,0 +1,94 @@
+//! The parallel sweep engine must be invisible in the results: running a
+//! sweep with jobs=1 and jobs=4 has to produce identical point vectors,
+//! identical CSV bytes, and identical (collected) progress output. This
+//! is the determinism contract that lets CI and users crank `--jobs`
+//! without re-validating figures.
+
+use sdde::bench::{
+    run_cells, run_neighbor_sweep_bench, run_sweep_bench, write_csv, write_neighbor_csv,
+    FigureId, NeighborSweepConfig, ProgressSink, SweepConfig,
+};
+use sdde::simnet::MpiFlavor;
+
+#[test]
+fn figure_sweep_is_jobs_invariant() {
+    let mut cfg = SweepConfig::quick(FigureId::Fig7, 400);
+    cfg.nodes = vec![2, 4];
+    cfg.matrices.truncate(2);
+    cfg.progress = ProgressSink::Collected;
+
+    cfg.jobs = 1;
+    let (serial, bench1) = run_sweep_bench(&cfg);
+    cfg.jobs = 4;
+    let (parallel, bench4) = run_sweep_bench(&cfg);
+
+    assert!(!serial.is_empty());
+    assert_eq!(serial, parallel, "points differ between jobs=1 and jobs=4");
+    assert_eq!(bench1.cells.len(), bench4.cells.len());
+    // Simulated work is identical; only host wall time may differ.
+    assert_eq!(bench1.events_run(), bench4.events_run());
+    assert_eq!(bench1.polls(), bench4.polls());
+
+    // CSV bytes, the artifact CI diffs.
+    let dir = std::env::temp_dir();
+    let p1 = dir.join("sdde_par_det_serial.csv");
+    let p4 = dir.join("sdde_par_det_parallel.csv");
+    write_csv(&p1, &serial).unwrap();
+    write_csv(&p4, &parallel).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    let b4 = std::fs::read(&p4).unwrap();
+    assert_eq!(b1, b4, "CSV bytes differ between jobs=1 and jobs=4");
+    std::fs::remove_file(p1).ok();
+    std::fs::remove_file(p4).ok();
+}
+
+#[test]
+fn neighbor_sweep_is_jobs_invariant() {
+    let mut cfg = NeighborSweepConfig::quick(MpiFlavor::Mvapich2, 400);
+    cfg.nodes = vec![2];
+    cfg.matrices.truncate(1);
+    cfg.iters = vec![1, 8];
+    cfg.progress = ProgressSink::Collected;
+
+    cfg.jobs = 1;
+    let (serial, _) = run_neighbor_sweep_bench(&cfg);
+    cfg.jobs = 4;
+    let (parallel, _) = run_neighbor_sweep_bench(&cfg);
+
+    assert!(!serial.is_empty());
+    assert_eq!(serial, parallel);
+
+    let dir = std::env::temp_dir();
+    let p1 = dir.join("sdde_par_det_nb_serial.csv");
+    let p4 = dir.join("sdde_par_det_nb_parallel.csv");
+    write_neighbor_csv(&p1, &serial).unwrap();
+    write_neighbor_csv(&p4, &parallel).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p4).unwrap());
+    std::fs::remove_file(p1).ok();
+    std::fs::remove_file(p4).ok();
+}
+
+#[test]
+fn progress_lines_are_jobs_invariant() {
+    // The engine's ordered flush: collected lines must come out in cell
+    // index order regardless of completion order.
+    let work = |i: usize, p: &mut sdde::bench::Progress| {
+        p.line(format!("[cell {i}] begin"));
+        // Skew completion order: later cells finish earlier.
+        let spins = (32 - i) * 20_000;
+        let mut acc = 1u64;
+        for k in 0..spins {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k as u64);
+        }
+        p.line(format!("[cell {i}] end acc={acc}"));
+        acc
+    };
+    let (r1, l1) = run_cells(1, 32, ProgressSink::Collected, work);
+    let (r8, l8) = run_cells(8, 32, ProgressSink::Collected, work);
+    assert_eq!(r1, r8);
+    assert_eq!(l1, l8);
+    assert_eq!(l1.len(), 64);
+    for (i, chunk) in l1.chunks(2).enumerate() {
+        assert!(chunk[0].starts_with(&format!("[cell {i}] begin")));
+    }
+}
