@@ -1,0 +1,199 @@
+//! Chaos sweeps: a figure sweep repeated under a battery of seeded fault
+//! plans, reporting per-seed makespan inflation against the fault-free
+//! baseline and checking the traffic invariants the fault layer promises
+//! (injection-time message/byte counters must not move under faults).
+//!
+//! This is the CLI-facing wrapper (`sdde chaos`, and `--faults` on the
+//! figure commands); the pass/fail proofs of perturbation invariance live
+//! in `tests/fault_invariance.rs`.
+
+use super::figures::{run_sweep, Point, SweepConfig};
+use crate::simnet::{FaultPlan, FaultProfile};
+use crate::util::fmt;
+
+/// One chaos sweep: a base figure configuration re-run under `seeds`
+/// distinct fault plans sharing one profile.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Base sweep (its own `faults` field is ignored; the baseline runs
+    /// fault-free and each chaos run installs a per-seed plan).
+    pub base: SweepConfig,
+    pub seeds: Vec<u64>,
+    pub profile: FaultProfile,
+}
+
+impl ChaosConfig {
+    pub fn new(base: SweepConfig, seeds: Vec<u64>, profile: FaultProfile) -> ChaosConfig {
+        ChaosConfig {
+            base,
+            seeds,
+            profile,
+        }
+    }
+}
+
+/// One faulted re-run of the base sweep.
+#[derive(Clone, Debug)]
+pub struct ChaosRun {
+    pub seed: u64,
+    pub points: Vec<Point>,
+    /// Mean over points of `faulted time / baseline time`.
+    pub mean_inflation: f64,
+    /// Worst-case inflation and the point it occurred at.
+    pub max_inflation: f64,
+    pub max_label: String,
+}
+
+/// Everything a chaos sweep measured.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub profile_name: String,
+    pub baseline: Vec<Point>,
+    pub runs: Vec<ChaosRun>,
+    /// Traffic-invariance violations (empty on a healthy fault layer:
+    /// faults may move time, never messages).
+    pub violations: Vec<String>,
+}
+
+impl ChaosReport {
+    pub fn traffic_invariant(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Plain-text table: one row per seed, inflation stats, plus the
+    /// invariance verdict (the `sdde chaos` output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "-- chaos sweep: {} seed(s), profile {}, {} baseline point(s) --\n",
+            self.runs.len(),
+            self.profile_name,
+            self.baseline.len()
+        );
+        let mut rows = vec![vec![
+            "seed".to_string(),
+            "mean inflation".to_string(),
+            "max inflation".to_string(),
+            "worst point".to_string(),
+        ]];
+        for r in &self.runs {
+            rows.push(vec![
+                r.seed.to_string(),
+                format!("{:.3}x", r.mean_inflation),
+                format!("{:.3}x", r.max_inflation),
+                r.max_label.clone(),
+            ]);
+        }
+        out.push_str(&fmt::table(&rows));
+        if self.traffic_invariant() {
+            out.push_str("traffic invariance: OK (faults moved time, not messages)\n");
+        } else {
+            out.push_str(&format!(
+                "traffic invariance: {} VIOLATION(S)\n",
+                self.violations.len()
+            ));
+            for v in &self.violations {
+                out.push_str(&format!("  {v}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Run the baseline sweep fault-free, then once per seed under the
+/// profile, comparing point-for-point.
+pub fn run_chaos(cfg: &ChaosConfig) -> ChaosReport {
+    let mut base_cfg = cfg.base.clone();
+    base_cfg.faults = None;
+    let baseline = run_sweep(&base_cfg);
+    let mut runs = Vec::new();
+    let mut violations = Vec::new();
+    for &seed in &cfg.seeds {
+        let mut c = cfg.base.clone();
+        c.faults = Some(FaultPlan::with_profile(seed, cfg.profile));
+        let points = run_sweep(&c);
+        let mut sum = 0.0;
+        let mut max = 0.0f64;
+        let mut max_label = String::from("-");
+        let mut n = 0usize;
+        for (b, f) in baseline.iter().zip(&points) {
+            debug_assert_eq!((b.matrix.as_str(), b.algo, b.nodes), (
+                f.matrix.as_str(),
+                f.algo,
+                f.nodes
+            ));
+            if b.max_internode != f.max_internode || b.total_msgs != f.total_msgs {
+                violations.push(format!(
+                    "seed {seed} {} {} nodes={}: msgs {}→{}, max-internode {}→{}",
+                    b.matrix, b.algo, b.nodes, b.total_msgs, f.total_msgs,
+                    b.max_internode, f.max_internode
+                ));
+            }
+            let ratio = f.time_ns as f64 / b.time_ns.max(1) as f64;
+            sum += ratio;
+            n += 1;
+            if ratio > max {
+                max = ratio;
+                max_label = format!("{}/{}/n{}", b.matrix, b.algo, b.nodes);
+            }
+        }
+        runs.push(ChaosRun {
+            seed,
+            points,
+            mean_inflation: if n > 0 { sum / n as f64 } else { 0.0 },
+            max_inflation: max,
+            max_label,
+        });
+    }
+    ChaosReport {
+        profile_name: profile_label(&cfg.profile),
+        baseline,
+        runs,
+        violations,
+    }
+}
+
+/// Best-effort name for a profile (matches the CLI spellings for the
+/// stock profiles; custom knob combinations print as "custom").
+fn profile_label(p: &FaultProfile) -> String {
+    for name in ["off", "light", "heavy", "jitter", "straggler", "rendezvous", "duplicate"] {
+        if FaultProfile::parse(name).as_ref() == Ok(p) {
+            return name.to_string();
+        }
+    }
+    "custom".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::figures::FigureId;
+
+    #[test]
+    fn chaos_sweep_reports_inflation_and_invariance() {
+        let mut base = SweepConfig::quick(FigureId::Fig5, 400);
+        base.nodes = vec![2];
+        base.matrices.truncate(1);
+        let cfg = ChaosConfig::new(base, vec![1, 2], FaultProfile::heavy());
+        let rep = run_chaos(&cfg);
+        assert_eq!(rep.runs.len(), 2);
+        assert!(rep.traffic_invariant(), "{:?}", rep.violations);
+        for r in &rep.runs {
+            assert_eq!(r.points.len(), rep.baseline.len());
+            assert!(r.mean_inflation > 0.0);
+            assert!(r.max_inflation >= r.mean_inflation * 0.5);
+        }
+        let text = rep.render();
+        assert!(text.contains("chaos sweep"));
+        assert!(text.contains("traffic invariance: OK"));
+        assert!(text.contains("heavy"));
+    }
+
+    #[test]
+    fn profile_labels_roundtrip() {
+        assert_eq!(profile_label(&FaultProfile::heavy()), "heavy");
+        assert_eq!(profile_label(&FaultProfile::off()), "off");
+        let mut p = FaultProfile::jitter();
+        p.jitter_max_ns += 1;
+        assert_eq!(profile_label(&p), "custom");
+    }
+}

@@ -13,7 +13,7 @@ use crate::mpi::World;
 use crate::mpix::{
     alltoall_crs, alltoallv_crs, IntraAlgo, MpixComm, MpixInfo, SddeAlgorithm,
 };
-use crate::simnet::{CostModel, MpiFlavor, RegionKind, SimStats, Time, Topology};
+use crate::simnet::{CostModel, FaultPlan, MpiFlavor, RegionKind, SimStats, Time, Topology};
 use crate::sparse::{MatrixPreset, Partition, SpmvPattern};
 use crate::trace::{Trace, TraceConfig, TraceSummary};
 
@@ -95,6 +95,11 @@ pub struct SweepConfig {
     /// Worker threads for the sweep (cells = matrix × node-count pairs).
     /// Results and output are identical for any value; see [`super::par`].
     pub jobs: usize,
+    /// Seeded fault injection for every cell world (chaos sweeps). Each
+    /// cell derives an independent child plan via [`FaultPlan::for_cell`],
+    /// so results stay byte-identical for any `jobs` value. `None` (and
+    /// the inactive plan) leave the sweep bit-identical to fault-free.
+    pub faults: Option<FaultPlan>,
 }
 
 impl SweepConfig {
@@ -116,6 +121,7 @@ impl SweepConfig {
             seed: 2023,
             progress: ProgressSink::Stderr,
             jobs: 1,
+            faults: None,
         }
     }
 
@@ -169,7 +175,10 @@ pub fn run_sweep_bench(cfg: &SweepConfig) -> (Vec<Point>, SweepBench) {
     let ((cell_out, _), wall_ns) = timed(|| {
         run_cells(cfg.jobs, keys.len(), cfg.progress, |i, pr| {
             let (mi, nodes) = keys[i];
-            run_figure_cell(cfg, &cfg.matrices[mi], nodes, pr)
+            // Child plan per cell: derived from the cell *index*, not the
+            // worker thread, so chaos sweeps are jobs-invariant.
+            let faults = cfg.faults.map(|p| p.for_cell(i as u64));
+            run_figure_cell(cfg, &cfg.matrices[mi], nodes, faults, pr)
         })
     });
     let mut points = Vec::new();
@@ -192,6 +201,7 @@ fn run_figure_cell(
     cfg: &SweepConfig,
     preset: &MatrixPreset,
     nodes: usize,
+    faults: Option<FaultPlan>,
     pr: &mut Progress,
 ) -> (Vec<Point>, CellBench) {
     let topo = Topology::quartz(nodes, cfg.ppn);
@@ -219,7 +229,7 @@ fn run_figure_cell(
         if cfg.variant == Variant::Variable && algo == SddeAlgorithm::Rma {
             continue;
         }
-        let (time_ns, summary, stats) = run_once_stats(
+        let (time_ns, summary, stats) = run_once_stats_faulted(
             topo.clone(),
             cfg.flavor,
             algo,
@@ -227,6 +237,7 @@ fn run_figure_cell(
             cfg.intra,
             cfg.variant,
             patterns.clone(),
+            faults,
         );
         cell.host_ns += stats.host_ns;
         cell.events_run += stats.events_run;
@@ -251,7 +262,8 @@ fn run_figure_cell(
     (points, cell)
 }
 
-/// Run one SDDE on a fresh world with the given trace mode.
+/// Run one SDDE on a fresh world with the given trace mode and optional
+/// fault plan.
 #[allow(clippy::too_many_arguments)]
 fn run_world(
     topo: Topology,
@@ -262,8 +274,12 @@ fn run_world(
     variant: Variant,
     patterns: Rc<Vec<SpmvPattern>>,
     trace: TraceConfig,
+    faults: Option<FaultPlan>,
 ) -> crate::mpi::RunOutput<Time> {
-    let world = World::with_trace(topo, CostModel::preset(flavor), trace);
+    let world = World::builder(topo, CostModel::preset(flavor))
+        .trace(trace)
+        .faults(faults)
+        .build();
     world.run(move |c| {
         let patterns = patterns.clone();
         async move {
@@ -324,6 +340,22 @@ pub fn run_once_stats(
     variant: Variant,
     patterns: Rc<Vec<SpmvPattern>>,
 ) -> (Time, TraceSummary, SimStats) {
+    run_once_stats_faulted(topo, flavor, algo, region, intra, variant, patterns, None)
+}
+
+/// [`run_once_stats`] under an optional seeded fault plan (chaos sweeps;
+/// `None` is bit-identical to the unfaulted path).
+#[allow(clippy::too_many_arguments)]
+pub fn run_once_stats_faulted(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    intra: IntraAlgo,
+    variant: Variant,
+    patterns: Rc<Vec<SpmvPattern>>,
+    faults: Option<FaultPlan>,
+) -> (Time, TraceSummary, SimStats) {
     let out = run_world(
         topo,
         flavor,
@@ -333,6 +365,7 @@ pub fn run_once_stats(
         variant,
         patterns,
         TraceConfig::counters_only(),
+        faults,
     );
     let summary = out.trace.summary;
     debug_assert_eq!(summary.user_msgs(), out.counters.user_msgs);
@@ -353,6 +386,23 @@ pub fn run_once_traced(
     variant: Variant,
     patterns: Rc<Vec<SpmvPattern>>,
 ) -> (Time, Trace) {
+    run_once_traced_faulted(topo, flavor, algo, region, intra, variant, patterns, None)
+}
+
+/// [`run_once_traced`] under an optional seeded fault plan — the trace
+/// then carries `EventKind::Fault` annotations, so `sdde trace` can
+/// attribute makespan inflation to the injected faults.
+#[allow(clippy::too_many_arguments)]
+pub fn run_once_traced_faulted(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    intra: IntraAlgo,
+    variant: Variant,
+    patterns: Rc<Vec<SpmvPattern>>,
+    faults: Option<FaultPlan>,
+) -> (Time, Trace) {
     let out = run_world(
         topo,
         flavor,
@@ -362,6 +412,7 @@ pub fn run_once_traced(
         variant,
         patterns,
         TraceConfig::full(),
+        faults,
     );
     let elapsed = out.results.into_iter().max().unwrap_or(0);
     (elapsed, out.trace)
@@ -420,6 +471,40 @@ mod tests {
         // Serial: simulator host time is a subset of the sweep wall time.
         assert!(bench.wall_ns >= bench.cells_host_ns());
         assert!(bench.speedup_vs_serial() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn off_fault_plan_sweep_is_identical() {
+        // FaultPlan::off() bit-identity at the sweep level: every point
+        // (times included) must match the no-plan sweep exactly.
+        let mut cfg = SweepConfig::quick(FigureId::Fig5, 400);
+        cfg.nodes = vec![2];
+        cfg.matrices.truncate(1);
+        let base = run_sweep(&cfg);
+        cfg.faults = Some(FaultPlan::off());
+        let off = run_sweep(&cfg);
+        assert_eq!(base, off);
+    }
+
+    #[test]
+    fn faulted_sweep_is_jobs_invariant_and_traffic_preserving() {
+        let mut cfg = SweepConfig::quick(FigureId::Fig5, 400);
+        cfg.nodes = vec![2, 4];
+        cfg.matrices.truncate(2);
+        let base = run_sweep(&cfg);
+        cfg.faults = Some(FaultPlan::seeded(42));
+        let serial = run_sweep(&cfg);
+        cfg.jobs = 3;
+        let par = run_sweep(&cfg);
+        // Per-cell plans derive from the cell index, so worker assignment
+        // can't matter (invariant 7 with faults on).
+        assert_eq!(serial, par);
+        // Faults perturb timing, never traffic (counted at injection).
+        assert_eq!(base.len(), serial.len());
+        for (b, f) in base.iter().zip(&serial) {
+            assert_eq!(b.max_internode, f.max_internode, "{}", b.algo);
+            assert_eq!(b.total_msgs, f.total_msgs, "{}", b.algo);
+        }
     }
 
     #[test]

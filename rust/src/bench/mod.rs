@@ -4,20 +4,23 @@
 //! sweep per paper figure (5–8); [`neighbor`] sweeps the steady-state
 //! persistent neighborhood collectives; [`report`] renders tables/CSV;
 //! [`par`] runs independent sweep cells on worker threads with
-//! bit-identical results and ordered progress output.
+//! bit-identical results and ordered progress output; [`chaos`] re-runs a
+//! figure sweep under seeded fault plans and reports makespan inflation.
 
+pub mod chaos;
 pub mod figures;
 pub mod neighbor;
 pub mod par;
 pub mod report;
 
+pub use chaos::{run_chaos, ChaosConfig, ChaosReport, ChaosRun};
 pub use figures::{
-    run_once, run_once_stats, run_once_traced, run_sweep, run_sweep_bench, FigureId, Point,
-    SweepConfig, Variant,
+    run_once, run_once_stats, run_once_stats_faulted, run_once_traced, run_once_traced_faulted,
+    run_sweep, run_sweep_bench, FigureId, Point, SweepConfig, Variant,
 };
 pub use neighbor::{
-    run_halo_once, run_halo_once_stats, run_neighbor_sweep, run_neighbor_sweep_bench,
-    HaloMethod, NeighborPoint, NeighborSweepConfig,
+    run_halo_once, run_halo_once_faulted, run_halo_once_stats, run_neighbor_sweep,
+    run_neighbor_sweep_bench, HaloMethod, NeighborPoint, NeighborSweepConfig,
 };
 pub use par::{
     resolve_jobs, run_cells, CellBench, Progress, ProgressSink, SweepBench,

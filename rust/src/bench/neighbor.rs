@@ -14,7 +14,7 @@ use std::rc::Rc;
 use super::par::{run_cells, timed, CellBench, ProgressSink, SweepBench};
 use crate::mpi::World;
 use crate::mpix::{MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
-use crate::simnet::{CostModel, MpiFlavor, RegionKind, SimStats, Time, Topology};
+use crate::simnet::{CostModel, FaultPlan, MpiFlavor, RegionKind, SimStats, Time, Topology};
 use crate::solver::DistMatrix;
 use crate::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
 use crate::trace::TraceConfig;
@@ -72,6 +72,10 @@ pub struct NeighborSweepConfig {
     pub progress: ProgressSink,
     /// Worker threads; one cell per (matrix, nodes, method, iters) tuple.
     pub jobs: usize,
+    /// Seeded fault injection for every cell world (chaos sweeps); each
+    /// cell derives a child plan from its index, so any `jobs` value
+    /// yields byte-identical output. `None` = fault-free.
+    pub faults: Option<FaultPlan>,
 }
 
 impl NeighborSweepConfig {
@@ -93,6 +97,7 @@ impl NeighborSweepConfig {
             seed: 2023,
             progress: ProgressSink::Silent,
             jobs: 1,
+            faults: None,
         }
     }
 }
@@ -146,12 +151,28 @@ pub fn run_halo_once_stats(
     preset: Rc<MatrixPreset>,
     seed: u64,
 ) -> (Time, Time, u64, SimStats) {
+    run_halo_once_faulted(topo, flavor, algo, region, method, iters, preset, seed, None)
+}
+
+/// [`run_halo_once_stats`] under an optional seeded fault plan (`None` is
+/// bit-identical to the unfaulted path).
+#[allow(clippy::too_many_arguments)]
+pub fn run_halo_once_faulted(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    region: RegionKind,
+    method: HaloMethod,
+    iters: usize,
+    preset: Rc<MatrixPreset>,
+    seed: u64,
+    faults: Option<FaultPlan>,
+) -> (Time, Time, u64, SimStats) {
     let part = Partition::new(preset.n, topo.nranks());
-    let world = World::with_trace(
-        topo,
-        CostModel::preset(flavor),
-        TraceConfig::counters_only(),
-    );
+    let world = World::builder(topo, CostModel::preset(flavor))
+        .trace(TraceConfig::counters_only())
+        .faults(faults)
+        .build();
     let out = world.run(move |c| {
         let preset = preset.clone();
         async move {
@@ -231,7 +252,8 @@ pub fn run_neighbor_sweep_bench(
             let preset = Rc::new(cfg.matrices[mi].clone());
             let topo = Topology::quartz(nodes, cfg.ppn);
             let ranks = topo.nranks();
-            let (setup_ns, loop_ns, sent, stats) = run_halo_once_stats(
+            let faults = cfg.faults.map(|p| p.for_cell(i as u64));
+            let (setup_ns, loop_ns, sent, stats) = run_halo_once_faulted(
                 topo,
                 cfg.flavor,
                 cfg.algo,
@@ -240,6 +262,7 @@ pub fn run_neighbor_sweep_bench(
                 iters,
                 preset.clone(),
                 cfg.seed,
+                faults,
             );
             pr.line(format!(
                 "[neighbor] {} nodes={nodes} {:>14} iters={iters:>5}: \

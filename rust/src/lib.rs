@@ -10,11 +10,16 @@
 //! ## Layer map (see DESIGN.md)
 //!
 //! * [`simnet`] — substrate: deterministic single-threaded async executor
-//!   with a virtual clock, hierarchical topology (node/socket/core) and a
-//!   tiered LogGP-with-matching network cost model.
+//!   with a virtual clock, hierarchical topology (node/socket/core), a
+//!   tiered LogGP-with-matching network cost model, and seeded fault plans
+//!   ([`simnet::fault`]: latency jitter, stragglers, forced rendezvous,
+//!   duplicate delivery — off by default, bit-identical when off).
 //! * [`mpi`] — substrate: a simulated MPI (p2p with unexpected-message
 //!   queues and eager/rendezvous protocols, collectives built from p2p,
-//!   one-sided RMA windows).
+//!   one-sided RMA windows), plus the hang-diagnosis layer
+//!   ([`mpi::watchdog`]): a virtual-time quiescence watchdog and
+//!   [`mpi::WaitGraph`] stall reports (per-rank blocked ops, near-miss
+//!   unexpected messages, wait-cycle detection).
 //! * [`mpix`] — **the paper's contribution**: the MPI Advance-style SDDE
 //!   API and all five algorithms.
 //! * [`mpix::neighbor`] — the consumer side: distributed-graph topology
@@ -46,11 +51,13 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::mpi::{Comm, Payload, Tag, World, ANY_SOURCE, ANY_TAG};
+    pub use crate::mpi::{Comm, Payload, Tag, WaitGraph, World, ANY_SOURCE, ANY_TAG};
     pub use crate::mpix::{
         alltoall_crs, alltoallv_crs, CrsArgs, CrsResult, CrsvArgs, CrsvResult, MpixComm,
         MpixInfo, NeighborAlltoallv, NeighborComm, NeighborMethod, SddeAlgorithm,
     };
-    pub use crate::simnet::{CostModel, MpiFlavor, RegionKind, Tier, Time, Topology};
+    pub use crate::simnet::{
+        CostModel, FaultPlan, FaultProfile, MpiFlavor, RegionKind, Tier, Time, Topology,
+    };
     pub use crate::trace::{Trace, TraceConfig, TraceSummary};
 }

@@ -8,16 +8,25 @@
 //! * `trace`    — run one fully-traced SDDE: per-tier/per-family summary,
 //!   critical path, Chrome-trace JSON (+ optional CSV) export.
 //! * `solve`    — distributed CG/Jacobi solve over an SDDE-formed pattern.
+//! * `chaos`    — re-run a figure sweep under a battery of seeded fault
+//!   plans; report makespan inflation and check traffic invariance.
 //! * `info`     — list matrix presets, algorithms and cost-model presets.
+//!
+//! `figures`, `neighbor`, `sdde` and `trace` accept
+//! `--faults SEED[:PROFILE]` to inject seeded network perturbation
+//! (jitter, stragglers, forced rendezvous, duplicate delivery); results
+//! must not change, only virtual time may.
 //!
 //! Examples:
 //! ```text
 //! sdde figures --fig 7 --quick
 //! sdde figures --fig all --out results/
+//! sdde figures --fig 5 --quick --faults 42:heavy
 //! sdde neighbor --nodes 2,4 --iters 1,16,256 --mpi both
 //! sdde sdde --matrix cage14 --nodes 8 --algo loc-nonblocking --variant v
 //! sdde trace --matrix cage14 --div 16 --nodes 4 --ppn 8 --out trace.json
 //! sdde solve --nx 48 --ny 48 --nodes 2 --ppn 4 --solver cg --halo loc
+//! sdde chaos --fig 5 --div 400 --nseeds 8 --profile heavy
 //! ```
 
 use std::path::PathBuf;
@@ -25,13 +34,13 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use sdde::bench::{
-    render_figure, render_neighbor_figure, resolve_jobs, run_neighbor_sweep_bench,
-    run_sweep_bench, write_bench_json, write_csv, write_neighbor_csv, FigureId, HaloMethod,
-    NeighborSweepConfig, ProgressSink, SweepBench, SweepConfig,
+    render_figure, render_neighbor_figure, resolve_jobs, run_chaos, run_neighbor_sweep_bench,
+    run_sweep_bench, write_bench_json, write_csv, write_neighbor_csv, ChaosConfig, FigureId,
+    HaloMethod, NeighborSweepConfig, ProgressSink, SweepBench, SweepConfig,
 };
 use sdde::mpi::World;
 use sdde::mpix::{IntraAlgo, MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
-use sdde::simnet::{CostModel, MpiFlavor, RegionKind, Topology};
+use sdde::simnet::{CostModel, FaultPlan, FaultProfile, MpiFlavor, RegionKind, Topology};
 use sdde::solver::{cg, jacobi, CsrLocal, DistMatrix};
 use sdde::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
 use sdde::trace::{critical_path, write_chrome_trace, write_trace_csv};
@@ -47,6 +56,7 @@ fn main() {
         "sdde" => cmd_sdde(&args),
         "trace" => cmd_trace(&args),
         "solve" => cmd_solve(&args),
+        "chaos" => cmd_chaos(&args),
         "info" => cmd_info(),
         _ => {
             print_help();
@@ -62,24 +72,43 @@ fn main() {
 fn print_help() {
     println!(
         "sdde — A More Scalable Sparse Dynamic Data Exchange (reproduction)\n\n\
-         USAGE: sdde <figures|neighbor|sdde|trace|solve|info> [flags]\n\n\
+         USAGE: sdde <figures|neighbor|sdde|trace|solve|chaos|info> [flags]\n\n\
          figures --fig <5|6|7|8|all> [--quick] [--div N] [--out DIR]\n\
                  [--nodes 2,4,..] [--ppn N] [--matrices a,b] [--algos x,y]\n\
                  [--region node|socket] [--seed N] [--jobs N]\n\
-                 [--bench-json FILE]\n\
+                 [--faults SEED[:PROFILE]] [--bench-json FILE]\n\
          neighbor [--nodes 2,4,..] [--ppn N] [--iters 1,16,256] [--div N]\n\
                  [--matrices a,b] [--methods p2p,persistent,loc-persistent]\n\
                  [--mpi openmpi|mvapich2|both] [--region node|socket]\n\
-                 [--out DIR] [--seed N] [--jobs N] [--bench-json FILE]\n\
+                 [--out DIR] [--seed N] [--jobs N]\n\
+                 [--faults SEED[:PROFILE]] [--bench-json FILE]\n\
          sdde    --matrix <preset> --nodes N [--ppn N] [--algo NAME]\n\
                  [--variant crs|v] [--mpi openmpi|mvapich2] [--div N]\n\
+                 [--faults SEED[:PROFILE]]\n\
          trace   [--matrix <preset>] [--div N] [--nodes N] [--ppn N]\n\
                  [--algo NAME] [--variant crs|v] [--mpi openmpi|mvapich2]\n\
-                 [--seed N] [--out FILE.json] [--csv FILE.csv]\n\
+                 [--seed N] [--faults SEED[:PROFILE]]\n\
+                 [--out FILE.json] [--csv FILE.csv]\n\
          solve   [--nx N --ny N] [--nodes N --ppn N] [--solver cg|jacobi]\n\
                  [--algo NAME] [--iters N] [--halo p2p|standard|loc]\n\
-         info"
+         chaos   [--fig 5|6|7|8] [--div N] [--nodes 2,4,..] [--ppn N]\n\
+                 [--matrices a,b] [--nseeds N | --seeds 1,2,..]\n\
+                 [--profile light|heavy|jitter|straggler|rendezvous|duplicate]\n\
+                 [--jobs N]\n\
+         info\n\n\
+         fault profiles: light heavy jitter straggler rendezvous duplicate"
     );
+}
+
+/// Shared `--faults SEED[:PROFILE]` parser; `None` when the flag is
+/// absent (fault-free, bit-identical to before the fault layer existed).
+fn parse_faults(args: &Args) -> Result<Option<FaultPlan>> {
+    match args.get("faults") {
+        None => Ok(None),
+        Some(s) => FaultPlan::parse(s)
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("bad --faults {s}: {e}")),
+    }
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
@@ -92,6 +121,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     let out_dir = args.get("out").map(PathBuf::from);
     // --jobs beats SDDE_JOBS beats serial; results are identical either way.
     let jobs = resolve_jobs(args.get("jobs").and_then(|s| s.parse().ok()));
+    let faults = parse_faults(args)?;
     let mut benches: Vec<(String, SweepBench)> = Vec::new();
 
     for fig in figs {
@@ -131,6 +161,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
                 .collect::<Result<_>>()?;
         }
         cfg.jobs = jobs;
+        cfg.faults = faults;
         let fig_no = match fig {
             FigureId::Fig5 => 5,
             FigureId::Fig6 => 6,
@@ -164,6 +195,7 @@ fn cmd_neighbor(args: &Args) -> Result<()> {
     };
     let out_dir = args.get("out").map(PathBuf::from);
     let jobs = resolve_jobs(args.get("jobs").and_then(|s| s.parse().ok()));
+    let faults = parse_faults(args)?;
     let mut benches: Vec<(String, SweepBench)> = Vec::new();
     for flavor in flavors {
         let mut cfg = NeighborSweepConfig::quick(flavor, div);
@@ -215,6 +247,7 @@ fn cmd_neighbor(args: &Args) -> Result<()> {
         }
         cfg.progress = ProgressSink::Stderr;
         cfg.jobs = jobs;
+        cfg.faults = faults;
         let (points, bench) = run_neighbor_sweep_bench(&cfg);
         eprintln!("{}", bench.render(&format!("neighbor-{}", flavor.name())));
         benches.push((format!("neighbor-{}", flavor.name()), bench));
@@ -255,6 +288,7 @@ fn cmd_sdde(args: &Args) -> Result<()> {
         v => bail!("unknown variant {v}"),
     };
     let seed = args.get_parsed("seed", 2023u64);
+    let faults = parse_faults(args)?;
 
     let topo = Topology::quartz(nodes, ppn);
     let nranks = topo.nranks();
@@ -280,7 +314,7 @@ fn cmd_sdde(args: &Args) -> Result<()> {
         send_nnz.iter().sum::<usize>() as f64 / nranks as f64,
         send_nnz.iter().max().unwrap()
     );
-    let (t, summary) = sdde::bench::figures::run_once(
+    let (t, summary, _) = sdde::bench::run_once_stats_faulted(
         topo,
         flavor,
         algo,
@@ -288,6 +322,7 @@ fn cmd_sdde(args: &Args) -> Result<()> {
         IntraAlgo::Personalized,
         variant,
         patterns,
+        faults,
     );
     println!("SDDE time (max over ranks): {}", fmt::ns(t));
     println!(
@@ -299,6 +334,13 @@ fn cmd_sdde(args: &Args) -> Result<()> {
         "per-tier msgs [self, intra-socket, inter-socket, inter-node]: {:?}",
         summary.user_msgs()
     );
+    if summary.fault_events > 0 {
+        println!(
+            "injected faults: {} events, {} total delay",
+            summary.fault_events,
+            fmt::ns(summary.fault_delay_ns)
+        );
+    }
     Ok(())
 }
 
@@ -322,6 +364,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         v => bail!("unknown variant {v}"),
     };
     let seed = args.get_parsed("seed", 2023u64);
+    let faults = parse_faults(args)?;
     let out_path = PathBuf::from(args.get_or("out", "trace.json"));
 
     let topo = Topology::quartz(nodes, ppn);
@@ -342,7 +385,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
             .map(|r| SpmvPattern::build(&preset, part, r, seed))
             .collect(),
     );
-    let (t, trace) = sdde::bench::run_once_traced(
+    let (t, trace) = sdde::bench::run_once_traced_faulted(
         topo,
         flavor,
         algo,
@@ -350,6 +393,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         IntraAlgo::Personalized,
         variant,
         patterns,
+        faults,
     );
     if trace.events.is_empty() {
         bail!("trace recorded no events (tracing disabled?)");
@@ -445,6 +489,55 @@ fn cmd_solve(args: &Args) -> Result<()> {
         fmt::ns(out.end_time),
         out.counters.total_user_msgs()
     );
+    Ok(())
+}
+
+/// Chaos sweep: one fault-free baseline plus one faulted re-run per seed,
+/// reporting makespan inflation and enforcing the traffic invariant
+/// (faults may move virtual time, never message counts).
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let fig = {
+        let s = args.get_or("fig", "5");
+        FigureId::parse(s).ok_or_else(|| anyhow::anyhow!("unknown figure {s}"))?
+    };
+    let div = args.get_parsed("div", 64usize);
+    let mut base = SweepConfig::quick(fig, div);
+    if let Some(nodes) = args.get_list("nodes") {
+        base.nodes = nodes.iter().map(|s| s.parse().unwrap_or(2)).collect();
+    }
+    base.ppn = args.get_parsed("ppn", base.ppn);
+    base.seed = args.get_parsed("seed", base.seed);
+    if let Some(ms) = args.get_list("matrices") {
+        base.matrices = ms
+            .iter()
+            .map(|m| {
+                MatrixPreset::parse(m)
+                    .map(|p| if div > 1 { p.scaled(div) } else { p })
+                    .ok_or_else(|| anyhow::anyhow!("unknown matrix {m}"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    base.jobs = resolve_jobs(args.get("jobs").and_then(|s| s.parse().ok()));
+    let seeds: Vec<u64> = match args.get_list("seeds") {
+        Some(v) => v
+            .iter()
+            .map(|s| s.parse::<u64>().map_err(|_| anyhow::anyhow!("bad seed {s}")))
+            .collect::<Result<_>>()?,
+        None => {
+            let n = args.get_parsed("nseeds", 8u64);
+            let s0 = args.get_parsed("seed0", 1u64);
+            (s0..s0 + n).collect()
+        }
+    };
+    let profile = {
+        let s = args.get_or("profile", "heavy");
+        FaultProfile::parse(s).map_err(|e| anyhow::anyhow!("bad --profile {s}: {e}"))?
+    };
+    let rep = run_chaos(&ChaosConfig::new(base, seeds, profile));
+    println!("{}", rep.render());
+    if !rep.traffic_invariant() {
+        bail!("traffic invariance violated under faults");
+    }
     Ok(())
 }
 

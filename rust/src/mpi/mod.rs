@@ -13,12 +13,16 @@
 pub mod coll;
 pub mod rma;
 pub mod wait;
+pub mod watchdog;
 pub mod world;
 
 pub use coll::{IBarrier, ReduceOp};
 pub use rma::Window;
 pub use wait::WaitAny;
-pub use world::{waitall, Comm, Counters, Msg, Payload, ProbeInfo, Request, RunOutput, World};
+pub use watchdog::{BlockedOp, MissReason, NearMiss, OpKind, RankWait, WaitGraph};
+pub use world::{
+    waitall, Comm, Counters, Msg, Payload, ProbeInfo, Request, RunOutput, World, WorldBuilder,
+};
 
 /// MPI-style message tag.
 pub type Tag = u32;

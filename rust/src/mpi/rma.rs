@@ -105,6 +105,7 @@ impl Window {
         let outstanding = self.outstanding.clone();
         let vals = vals.to_vec();
         c.sim().schedule(arrival, move || {
+            state.sim.note_progress();
             let mut r = state.ranks[dst].borrow_mut();
             let win = &mut r.windows[id];
             win.data[offset..offset + vals.len()].copy_from_slice(&vals);

@@ -1,0 +1,365 @@
+//! Hang diagnosis: turn a stalled simulation into a `WaitGraph` report.
+//!
+//! When `Sim::try_run` stalls (true deadlock: empty timer heap with live
+//! tasks; or quiescence: the virtual-time watchdog tripped), `World`
+//! assembles a [`WaitGraph`] from per-rank state instead of hanging or
+//! panicking bare: every blocked operation with the envelope it waits
+//! for, the *nearest-miss* unexpected messages sitting in that rank's
+//! queue (same source but wrong tag, or same tag but wrong source — the
+//! classic mismatched-tag bug), and a wait-for cycle if one exists
+//! (send/send deadlocks).
+//!
+//! Blocked receives are read straight off the posted-receive queues.
+//! Operations with no queue footprint — synchronous/rendezvous sends
+//! waiting for a match, blocking probes — are tracked in a host-side
+//! per-rank registry: registered when the wait begins, removed by an
+//! `on_complete` callback or an RAII [`OpGuard`]. The registry never
+//! touches virtual time, so diagnosis stays observational (invariant 8's
+//! bit-identity is unaffected by it).
+
+use std::rc::{Rc, Weak};
+
+use super::world::WorldState;
+use super::{Tag, ANY_SOURCE, ANY_TAG};
+use crate::simnet::{Stall, Time};
+
+/// What a blocked operation is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// A posted receive that never matched.
+    Recv,
+    /// A synchronous send (issend) waiting for the receiver to match.
+    SyncSend,
+    /// A rendezvous send waiting for the receiver to match and pull.
+    RendezvousSend,
+    /// A blocking probe waiting for a matching envelope.
+    Probe,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Recv => "recv",
+            OpKind::SyncSend => "sync-send",
+            OpKind::RendezvousSend => "rendezvous-send",
+            OpKind::Probe => "probe",
+        }
+    }
+}
+
+/// One blocked operation: the envelope it is waiting on.
+#[derive(Clone, Debug)]
+pub struct BlockedOp {
+    pub kind: OpKind,
+    /// Peer rank (source for recv/probe, destination for sends); may be
+    /// [`ANY_SOURCE`] for wildcard receives/probes.
+    pub peer: usize,
+    /// Tag; may be [`ANY_TAG`].
+    pub tag: Tag,
+    /// Virtual time the wait began (`None` for posted receives, which
+    /// have no registry entry).
+    pub since: Option<Time>,
+}
+
+/// Why an unexpected message *almost* matched a blocked receive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MissReason {
+    /// Source matches the spec, tag does not (mismatched-tag bug).
+    TagMismatch,
+    /// Tag matches the spec, source does not.
+    SrcMismatch,
+}
+
+/// An unexpected message that nearly matches one of a rank's blocked
+/// receives — the most actionable hint in a mismatched-envelope hang.
+#[derive(Clone, Debug)]
+pub struct NearMiss {
+    /// Envelope of the unexpected message.
+    pub src: usize,
+    pub tag: Tag,
+    /// The blocked spec it nearly matched.
+    pub wanted_peer: usize,
+    pub wanted_tag: Tag,
+    pub reason: MissReason,
+}
+
+/// Everything known about one blocked rank.
+#[derive(Clone, Debug)]
+pub struct RankWait {
+    pub rank: usize,
+    pub ops: Vec<BlockedOp>,
+    pub near_misses: Vec<NearMiss>,
+    /// Depth of the rank's unexpected queue at stall time.
+    pub unexpected: usize,
+}
+
+/// The full stall diagnostic returned by `World::run_checked`.
+#[derive(Clone, Debug)]
+pub struct WaitGraph {
+    pub stall: Stall,
+    /// Virtual time at which the stall was declared.
+    pub at: Time,
+    /// Blocked ranks (ranks with no pending ops are omitted).
+    pub blocked: Vec<RankWait>,
+    /// A wait-for cycle among blocked ranks, if one exists (closed path:
+    /// first and last element are the same rank).
+    pub cycle: Option<Vec<usize>>,
+}
+
+fn fmt_peer(p: usize) -> String {
+    if p == ANY_SOURCE {
+        "any".into()
+    } else {
+        p.to_string()
+    }
+}
+
+fn fmt_tag(t: Tag) -> String {
+    if t == ANY_TAG {
+        "any".into()
+    } else {
+        format!("{t:#x}")
+    }
+}
+
+impl WaitGraph {
+    /// Ranks that appear blocked.
+    pub fn blocked_ranks(&self) -> Vec<usize> {
+        self.blocked.iter().map(|b| b.rank).collect()
+    }
+
+    /// All blocked ops of `rank` (empty if the rank isn't blocked).
+    pub fn ops_of(&self, rank: usize) -> Vec<BlockedOp> {
+        self.blocked
+            .iter()
+            .find(|b| b.rank == rank)
+            .map(|b| b.ops.clone())
+            .unwrap_or_default()
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let kind = match self.stall {
+            Stall::Deadlock { .. } => "deadlock",
+            Stall::Quiescent { .. } => "quiescent (watchdog)",
+        };
+        out.push_str(&format!(
+            "wait graph: {} at t={} — {} blocked rank(s), {} live task(s)\n",
+            kind,
+            self.at,
+            self.blocked.len(),
+            self.stall.live_tasks()
+        ));
+        if let Stall::Quiescent { last_progress, .. } = self.stall {
+            out.push_str(&format!("  last progress at t={last_progress}\n"));
+        }
+        for b in &self.blocked {
+            for op in &b.ops {
+                let dir = match op.kind {
+                    OpKind::Recv | OpKind::Probe => "from",
+                    OpKind::SyncSend | OpKind::RendezvousSend => "to",
+                };
+                let since = op
+                    .since
+                    .map(|t| format!(" since t={t}"))
+                    .unwrap_or_default();
+                out.push_str(&format!(
+                    "  rank {}: blocked {} {} {} tag {}{}\n",
+                    b.rank,
+                    op.kind.name(),
+                    dir,
+                    fmt_peer(op.peer),
+                    fmt_tag(op.tag),
+                    since
+                ));
+            }
+            for nm in &b.near_misses {
+                let why = match nm.reason {
+                    MissReason::TagMismatch => "tag mismatch",
+                    MissReason::SrcMismatch => "source mismatch",
+                };
+                out.push_str(&format!(
+                    "    near miss: unexpected msg from {} tag {} \
+                     vs wanted ({}, {}) — {}\n",
+                    nm.src,
+                    fmt_tag(nm.tag),
+                    fmt_peer(nm.wanted_peer),
+                    fmt_tag(nm.wanted_tag),
+                    why
+                ));
+            }
+            if b.unexpected > 0 {
+                out.push_str(&format!(
+                    "    unexpected queue depth: {}\n",
+                    b.unexpected
+                ));
+            }
+        }
+        match &self.cycle {
+            Some(path) => {
+                let s: Vec<String> = path.iter().map(|r| r.to_string()).collect();
+                out.push_str(&format!("  cycle: {}\n", s.join(" -> ")));
+            }
+            None => out.push_str("  no wait cycle (missing counterpart)\n"),
+        }
+        out
+    }
+}
+
+/// RAII registration of a blocked op (used by blocking probes): the entry
+/// is removed when the guard drops, however the wait ends. Holds only a
+/// weak reference, so a guard leaked across a dropped world is inert.
+pub(crate) struct OpGuard {
+    state: Weak<WorldState>,
+    rank: usize,
+    id: u64,
+}
+
+impl OpGuard {
+    pub(crate) fn register(state: &Rc<WorldState>, rank: usize, op: BlockedOp) -> OpGuard {
+        let id = state.register_op(rank, op);
+        OpGuard {
+            state: Rc::downgrade(state),
+            rank,
+            id,
+        }
+    }
+}
+
+impl Drop for OpGuard {
+    fn drop(&mut self) {
+        if let Some(s) = self.state.upgrade() {
+            s.unregister_op(self.rank, self.id);
+        }
+    }
+}
+
+/// Assemble the diagnostic from a stalled world's rank state.
+pub(crate) fn collect_wait_graph(state: &WorldState, stall: Stall) -> WaitGraph {
+    let at = state.sim.now();
+    let mut blocked = Vec::new();
+    for (rank, cell) in state.ranks.iter().enumerate() {
+        let r = cell.borrow();
+        let mut ops: Vec<BlockedOp> = r
+            .watchdog_recvs()
+            .into_iter()
+            .map(|(src, tag)| BlockedOp {
+                kind: OpKind::Recv,
+                peer: src,
+                tag,
+                since: None,
+            })
+            .collect();
+        ops.extend(r.watchdog_ops());
+        if ops.is_empty() {
+            continue;
+        }
+        let unexpected_env = r.watchdog_unexpected();
+        let mut near_misses = Vec::new();
+        for op in ops.iter().filter(|o| matches!(o.kind, OpKind::Recv | OpKind::Probe)) {
+            for &(src, tag) in &unexpected_env {
+                let src_ok = op.peer == ANY_SOURCE || op.peer == src;
+                let tag_ok = op.tag == ANY_TAG || op.tag == tag;
+                let reason = match (src_ok, tag_ok) {
+                    (true, false) => MissReason::TagMismatch,
+                    (false, true) => MissReason::SrcMismatch,
+                    // Full match (blocked elsewhere) or full mismatch:
+                    // neither is a *near* miss.
+                    _ => continue,
+                };
+                near_misses.push(NearMiss {
+                    src,
+                    tag,
+                    wanted_peer: op.peer,
+                    wanted_tag: op.tag,
+                    reason,
+                });
+            }
+        }
+        near_misses.truncate(8); // keep reports readable on deep queues
+        blocked.push(RankWait {
+            rank,
+            ops,
+            near_misses,
+            unexpected: unexpected_env.len(),
+        });
+    }
+    let cycle = find_cycle(&blocked);
+    WaitGraph {
+        stall,
+        at,
+        blocked,
+        cycle,
+    }
+}
+
+/// Wait-for cycle detection over the concrete-peer edges of blocked ranks
+/// (wildcard specs contribute no edge). DFS with tricolor marking;
+/// returns a closed path `[a, …, a]` if a cycle exists.
+fn find_cycle(blocked: &[RankWait]) -> Option<Vec<usize>> {
+    use std::collections::BTreeMap;
+    let mut edges: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for b in blocked {
+        let peers: Vec<usize> = b
+            .ops
+            .iter()
+            .filter(|o| o.peer != ANY_SOURCE)
+            .map(|o| o.peer)
+            .collect();
+        edges.insert(b.rank, peers);
+    }
+
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Gray,
+        Black,
+    }
+    let mut color: BTreeMap<usize, Color> =
+        edges.keys().map(|&k| (k, Color::White)).collect();
+
+    fn dfs(
+        v: usize,
+        edges: &BTreeMap<usize, Vec<usize>>,
+        color: &mut BTreeMap<usize, Color>,
+        path: &mut Vec<usize>,
+    ) -> Option<Vec<usize>> {
+        color.insert(v, Color::Gray);
+        path.push(v);
+        if let Some(peers) = edges.get(&v) {
+            for &p in peers {
+                match color.get(&p) {
+                    Some(Color::Gray) => {
+                        // Found a back edge: close the cycle from p.
+                        let start = path.iter().position(|&x| x == p).unwrap();
+                        let mut cyc = path[start..].to_vec();
+                        cyc.push(p);
+                        return Some(cyc);
+                    }
+                    Some(Color::White) => {
+                        if let Some(c) = dfs(p, edges, color, path) {
+                            return Some(c);
+                        }
+                    }
+                    // Black (explored) or not a blocked rank: no cycle here.
+                    _ => {}
+                }
+            }
+        }
+        path.pop();
+        color.insert(v, Color::Black);
+        None
+    }
+
+    let starts: Vec<usize> = edges.keys().copied().collect();
+    for s in starts {
+        if color[&s] == Color::White {
+            let mut path = Vec::new();
+            if let Some(c) = dfs(s, &edges, &mut color, &mut path) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}

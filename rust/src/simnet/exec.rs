@@ -46,6 +46,33 @@ impl SimStats {
     }
 }
 
+/// Why a simulation stopped making progress (returned by [`Sim::try_run`]
+/// instead of hanging or panicking; `mpi::World` turns it into a
+/// `WaitGraph` diagnostic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stall {
+    /// Timer heap empty with live tasks: nothing can ever run again.
+    Deadlock { live_tasks: usize },
+    /// The watchdog tripped: virtual time ran more than the configured
+    /// quiet horizon past the last progress mark while tasks were still
+    /// blocked — a livelock or lost-progress hang (e.g. a polling loop
+    /// that burns virtual time on a request that never completes).
+    Quiescent { live_tasks: usize, last_progress: Time },
+}
+
+impl Stall {
+    pub fn live_tasks(&self) -> usize {
+        match *self {
+            Stall::Deadlock { live_tasks } => live_tasks,
+            Stall::Quiescent { live_tasks, .. } => live_tasks,
+        }
+    }
+
+    pub fn is_deadlock(&self) -> bool {
+        matches!(self, Stall::Deadlock { .. })
+    }
+}
+
 type BoxFut = Pin<Box<dyn Future<Output = ()> + 'static>>;
 type EventCb = Box<dyn FnOnce() + 'static>;
 
@@ -85,6 +112,12 @@ struct SimInner {
     events_run: Cell<u64>,
     polls: Cell<u64>,
     host_ns: Cell<u64>,
+    /// Virtual time of the last externally-reported progress (message
+    /// delivery etc.; see [`SimHandle::note_progress`]). Watchdog state.
+    progress_mark: Cell<Time>,
+    /// Quiescence watchdog: if set, stall when the next event lies more
+    /// than this many ns past `progress_mark` with tasks still live.
+    quiet_horizon: Cell<Option<Time>>,
 }
 
 // ---------------------------------------------------------------------------
@@ -201,7 +234,40 @@ impl Sim {
     /// Returns the final virtual time. Panics if tasks remain alive but
     /// nothing can make progress (a deadlock in the simulated program).
     pub fn run(&self) -> Time {
+        match self.try_run() {
+            Ok(t) => t,
+            Err(Stall::Deadlock { live_tasks }) => panic!(
+                "simulation deadlock: {} task(s) blocked with no pending events at t={}",
+                live_tasks,
+                self.inner.now.get()
+            ),
+            Err(Stall::Quiescent {
+                live_tasks,
+                last_progress,
+            }) => panic!(
+                "simulation deadlock (quiescent): {} task(s) made no progress \
+                 since t={} (quiet horizon exceeded at t={})",
+                live_tasks,
+                last_progress,
+                self.inner.now.get()
+            ),
+        }
+    }
+
+    /// Like [`Sim::run`], but a stalled simulation returns [`Stall`]
+    /// instead of panicking (or, for livelocks under a quiet horizon,
+    /// spinning forever). On `Err` the simulation state is left intact so
+    /// callers can build diagnostics from it.
+    pub fn try_run(&self) -> Result<Time, Stall> {
         let host_t0 = std::time::Instant::now();
+        let res = self.run_loop();
+        self.inner
+            .host_ns
+            .set(self.inner.host_ns.get() + host_t0.elapsed().as_nanos() as u64);
+        res
+    }
+
+    fn run_loop(&self) -> Result<Time, Stall> {
         loop {
             // Drain all runnable tasks at the current instant.
             loop {
@@ -230,10 +296,23 @@ impl Sim {
                     }
                 }
             }
-            // Advance virtual time to the next event.
+            // Advance virtual time to the next event. Before committing,
+            // let the quiescence watchdog veto a march past the horizon:
+            // live tasks + a long progress-free stretch of virtual time is
+            // a livelock (e.g. a poll loop on a request nobody completes).
             let next = self.inner.timers.borrow_mut().pop();
             match next {
                 Some(Reverse((t, _, slot))) => {
+                    if let Some(h) = self.inner.quiet_horizon.get() {
+                        if self.inner.live_tasks.get() > 0
+                            && t > self.inner.progress_mark.get().saturating_add(h)
+                        {
+                            return Err(Stall::Quiescent {
+                                live_tasks: self.inner.live_tasks.get(),
+                                last_progress: self.inner.progress_mark.get(),
+                            });
+                        }
+                    }
                     debug_assert!(t >= self.inner.now.get());
                     self.inner.now.set(t);
                     let action = self.inner.callbacks.borrow_mut()[slot].take();
@@ -245,24 +324,31 @@ impl Sim {
                         None => {}
                     }
                 }
-                None => break,
+                None => {
+                    if self.inner.live_tasks.get() > 0 {
+                        return Err(Stall::Deadlock {
+                            live_tasks: self.inner.live_tasks.get(),
+                        });
+                    }
+                    return Ok(self.inner.now.get());
+                }
             }
         }
-        self.inner.host_ns.set(
-            self.inner.host_ns.get() + host_t0.elapsed().as_nanos() as u64,
-        );
-        assert_eq!(
-            self.inner.live_tasks.get(),
-            0,
-            "simulation deadlock: {} task(s) blocked with no pending events at t={}",
-            self.inner.live_tasks.get(),
-            self.inner.now.get()
-        );
-        self.inner.now.get()
     }
 
     pub fn now(&self) -> Time {
         self.inner.now.get()
+    }
+
+    /// Arm (or disarm with `None`) the quiescence watchdog: the run stalls
+    /// with [`Stall::Quiescent`] when virtual time would advance more than
+    /// `horizon` ns past the last [`SimHandle::note_progress`] call while
+    /// tasks are still live. Off by default. The horizon must exceed the
+    /// longest legitimate progress-free stretch of the program (sleeps,
+    /// fences); progress is whatever the embedding layer says it is —
+    /// `mpi::World` marks every message delivery.
+    pub fn set_quiet_horizon(&self, horizon: Option<Time>) {
+        self.inner.quiet_horizon.set(horizon);
     }
 
     /// Executor statistics — used by the §Perf harness.
@@ -297,6 +383,14 @@ impl SimHandle {
     /// Current virtual time.
     pub fn now(&self) -> Time {
         self.upgrade().now.get()
+    }
+
+    /// Mark "the simulation is making progress" for the quiescence
+    /// watchdog (see [`Sim::set_quiet_horizon`]). One Cell store; safe to
+    /// call on hot paths whether or not the watchdog is armed.
+    pub fn note_progress(&self) {
+        let inner = self.upgrade();
+        inner.progress_mark.set(inner.now.get());
     }
 
     /// Schedule `cb` to run at absolute virtual time `at`.
@@ -462,6 +556,75 @@ mod tests {
             std::future::pending::<()>().await;
         });
         sim.run();
+    }
+
+    #[test]
+    fn try_run_reports_deadlock_without_panicking() {
+        let sim = Sim::new();
+        sim.spawn(async move {
+            std::future::pending::<()>().await;
+        });
+        assert_eq!(sim.try_run(), Err(Stall::Deadlock { live_tasks: 1 }));
+    }
+
+    #[test]
+    fn try_run_completes_like_run() {
+        let sim = Sim::new();
+        let h = sim.handle();
+        sim.spawn(async move {
+            h.sleep(250).await;
+        });
+        assert_eq!(sim.try_run(), Ok(250));
+    }
+
+    #[test]
+    fn quiet_horizon_stalls_a_livelock() {
+        // A task that burns virtual time forever waiting on a wake that
+        // never comes: without the watchdog this loops on the host too.
+        let sim = Sim::new();
+        sim.set_quiet_horizon(Some(10_000));
+        let h = sim.handle();
+        sim.spawn(async move {
+            loop {
+                h.sleep(1_000).await;
+            }
+        });
+        match sim.try_run() {
+            Err(Stall::Quiescent {
+                live_tasks,
+                last_progress,
+            }) => {
+                assert_eq!(live_tasks, 1);
+                assert_eq!(last_progress, 0);
+            }
+            other => panic!("expected quiescent stall, got {other:?}"),
+        }
+        assert!(sim.now() <= 10_000);
+    }
+
+    #[test]
+    fn note_progress_feeds_the_watchdog() {
+        let sim = Sim::new();
+        sim.set_quiet_horizon(Some(5_000));
+        let h = sim.handle();
+        sim.spawn(async move {
+            for _ in 0..10 {
+                h.sleep(4_000).await;
+                h.note_progress(); // deliveries keep the watchdog fed
+            }
+        });
+        assert_eq!(sim.try_run(), Ok(40_000));
+    }
+
+    #[test]
+    fn horizon_none_never_stalls_terminating_programs() {
+        let sim = Sim::new();
+        sim.set_quiet_horizon(None);
+        let h = sim.handle();
+        sim.spawn(async move {
+            h.sleep(1_000_000).await;
+        });
+        assert_eq!(sim.try_run(), Ok(1_000_000));
     }
 
     #[test]

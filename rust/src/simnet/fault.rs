@@ -1,0 +1,513 @@
+//! Seeded fault injection: deterministic network/CPU perturbation plans.
+//!
+//! A [`FaultPlan`] is a pure value — a seed plus a [`FaultProfile`] of
+//! perturbation knobs. A world that is handed an *active* plan builds one
+//! [`FaultState`] with an independent RNG stream per rank
+//! (`derive_seed(plan.seed, rank)`), so every draw is a deterministic
+//! function of (plan, rank, program order) and `--jobs N` sweeps stay
+//! byte-identical to serial runs when each cell derives its own plan via
+//! [`FaultPlan::for_cell`].
+//!
+//! Injection points (wired in `mpi::world`):
+//!
+//! * **latency jitter** — extra wire delay added *before* the per-(src,dst)
+//!   FIFO clamp, so MPI non-overtaking is preserved by construction and
+//!   only inter-pair interleavings are reordered (covers p2p and RMA puts);
+//! * **straggler episodes** — per-rank periodic CPU-slowdown windows, a
+//!   deterministic function of `(rank, now)` (no draws on the hot path);
+//! * **forced rendezvous** — eager-eligible sends demoted to the
+//!   rendezvous protocol (never self-messages);
+//! * **duplicate delivery** — bounded retransmit-style second delivery of
+//!   eager data; the matching layer must dedup it before matching.
+//!
+//! An inactive plan ([`FaultPlan::off`], or any all-zero profile) is
+//! never materialized into a `FaultState`: zero RNG draws, zero extra
+//! arithmetic, bit-identical virtual times (DESIGN.md invariant 8).
+
+use std::cell::{Cell, RefCell};
+
+use crate::simnet::Time;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Fault-type codes stamped into the `tag` field of `EventKind::Fault`
+/// trace events, so `sdde trace` can attribute makespan inflation.
+pub const FAULT_JITTER: u32 = 0;
+pub const FAULT_STRAGGLER: u32 = 1;
+pub const FAULT_RENDEZVOUS: u32 = 2;
+pub const FAULT_DUPLICATE: u32 = 3;
+
+/// Human name for a fault-type code (trace rendering).
+pub fn fault_name(code: u32) -> &'static str {
+    match code {
+        FAULT_JITTER => "jitter",
+        FAULT_STRAGGLER => "straggler",
+        FAULT_RENDEZVOUS => "forced-rendezvous",
+        FAULT_DUPLICATE => "duplicate",
+        _ => "fault",
+    }
+}
+
+/// Perturbation knobs. All probabilities are per-opportunity; all times
+/// are virtual ns. A profile with every knob zero is inactive.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultProfile {
+    /// Probability a message gets extra wire delay.
+    pub jitter_prob: f64,
+    /// Max extra delay, ns (uniform in `[1, max]` when hit).
+    pub jitter_max_ns: Time,
+    /// Probability a rank is a straggler at all (drawn once per world).
+    pub straggler_prob: f64,
+    /// CPU-cost multiplier inside a straggler episode.
+    pub straggler_factor: u64,
+    /// Episode period, ns (one slowdown window per period).
+    pub straggler_period_ns: Time,
+    /// Slowdown window length within each period, ns.
+    pub straggler_duty_ns: Time,
+    /// Probability an eager-eligible send is forced to rendezvous.
+    pub force_rendezvous_prob: f64,
+    /// Probability an eager delivery is duplicated (retransmit-style).
+    pub duplicate_prob: f64,
+    /// Max extra delay of the duplicate copy, ns.
+    pub duplicate_delay_ns: Time,
+    /// Per-rank budget of injected duplicates (bounded chaos).
+    pub duplicate_budget: u32,
+}
+
+impl FaultProfile {
+    /// All knobs zero: injects nothing.
+    pub fn off() -> FaultProfile {
+        FaultProfile {
+            jitter_prob: 0.0,
+            jitter_max_ns: 0,
+            straggler_prob: 0.0,
+            straggler_factor: 1,
+            straggler_period_ns: 1,
+            straggler_duty_ns: 0,
+            force_rendezvous_prob: 0.0,
+            duplicate_prob: 0.0,
+            duplicate_delay_ns: 0,
+            duplicate_budget: 0,
+        }
+    }
+
+    /// Mild perturbation of every kind — the default for `--faults SEED`.
+    pub fn light() -> FaultProfile {
+        FaultProfile {
+            jitter_prob: 0.25,
+            jitter_max_ns: 2_500,
+            straggler_prob: 0.0,
+            force_rendezvous_prob: 0.05,
+            duplicate_prob: 0.02,
+            duplicate_delay_ns: 3_000,
+            duplicate_budget: 8,
+            ..FaultProfile::off()
+        }
+    }
+
+    /// Aggressive everything: jitter, stragglers, demotion, duplicates.
+    pub fn heavy() -> FaultProfile {
+        FaultProfile {
+            jitter_prob: 0.6,
+            jitter_max_ns: 15_000,
+            straggler_prob: 0.25,
+            straggler_factor: 4,
+            straggler_period_ns: 200_000,
+            straggler_duty_ns: 60_000,
+            force_rendezvous_prob: 0.2,
+            duplicate_prob: 0.1,
+            duplicate_delay_ns: 10_000,
+            duplicate_budget: 64,
+        }
+    }
+
+    /// Only latency jitter / reordering.
+    pub fn jitter() -> FaultProfile {
+        FaultProfile {
+            jitter_prob: 0.8,
+            jitter_max_ns: 20_000,
+            ..FaultProfile::off()
+        }
+    }
+
+    /// Only per-rank CPU slowdown episodes.
+    pub fn straggler() -> FaultProfile {
+        FaultProfile {
+            straggler_prob: 0.5,
+            straggler_factor: 8,
+            straggler_period_ns: 100_000,
+            straggler_duty_ns: 50_000,
+            ..FaultProfile::off()
+        }
+    }
+
+    /// Every eligible send demoted to rendezvous.
+    pub fn rendezvous() -> FaultProfile {
+        FaultProfile {
+            force_rendezvous_prob: 1.0,
+            ..FaultProfile::off()
+        }
+    }
+
+    /// Only duplicate deliveries.
+    pub fn duplicate() -> FaultProfile {
+        FaultProfile {
+            duplicate_prob: 0.25,
+            duplicate_delay_ns: 8_000,
+            duplicate_budget: 256,
+            ..FaultProfile::off()
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<FaultProfile, String> {
+        match name {
+            "off" => Ok(FaultProfile::off()),
+            "light" => Ok(FaultProfile::light()),
+            "heavy" => Ok(FaultProfile::heavy()),
+            "jitter" => Ok(FaultProfile::jitter()),
+            "straggler" => Ok(FaultProfile::straggler()),
+            "rendezvous" | "rdv" => Ok(FaultProfile::rendezvous()),
+            "duplicate" | "dup" => Ok(FaultProfile::duplicate()),
+            _ => Err(format!(
+                "unknown fault profile '{name}' \
+                 (off|light|heavy|jitter|straggler|rendezvous|duplicate)"
+            )),
+        }
+    }
+
+    /// Does this profile inject anything at all?
+    pub fn is_active(&self) -> bool {
+        self.jitter_prob > 0.0
+            || self.straggler_prob > 0.0
+            || self.force_rendezvous_prob > 0.0
+            || self.duplicate_prob > 0.0
+    }
+}
+
+/// A seeded perturbation plan for one world. Plain data (`Copy`) so sweep
+/// cells can carry it across threads; the mutable per-rank streams live
+/// in [`FaultState`], built per world.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub profile: FaultProfile,
+}
+
+impl FaultPlan {
+    /// The do-nothing plan: worlds built with it are bit-identical to
+    /// worlds built with no plan at all (enforced by regression test).
+    pub fn off() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            profile: FaultProfile::off(),
+        }
+    }
+
+    /// Default (light) profile under the given seed.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            profile: FaultProfile::light(),
+        }
+    }
+
+    pub fn with_profile(seed: u64, profile: FaultProfile) -> FaultPlan {
+        FaultPlan { seed, profile }
+    }
+
+    /// Parse the CLI form `SEED[:PROFILE]`, e.g. `42` or `42:heavy`.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let (seed_s, prof_s) = match s.split_once(':') {
+            Some((a, b)) => (a, Some(b)),
+            None => (s, None),
+        };
+        let seed: u64 = seed_s
+            .parse()
+            .map_err(|_| format!("bad fault seed '{seed_s}' (want SEED[:PROFILE])"))?;
+        let profile = match prof_s {
+            Some(p) => FaultProfile::parse(p)?,
+            None => FaultProfile::light(),
+        };
+        Ok(FaultPlan { seed, profile })
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.profile.is_active()
+    }
+
+    /// Independent child plan for sweep cell `cell` — same profile, seed
+    /// derived with [`derive_seed`] so cells don't share streams and the
+    /// assignment of cells to worker threads can't matter (invariant 7).
+    pub fn for_cell(&self, cell: u64) -> FaultPlan {
+        FaultPlan {
+            seed: derive_seed(self.seed, cell),
+            profile: self.profile,
+        }
+    }
+}
+
+/// Per-rank straggler schedule: slow inside a periodic window. Purely a
+/// function of `now`, so CPU charges never consume RNG draws.
+#[derive(Clone, Copy, Debug)]
+struct Straggler {
+    factor: u64,
+    period: Time,
+    duty: Time,
+    phase: Time,
+}
+
+struct FaultRank {
+    /// Stream for this rank's send-side draws (jitter, demotion, dup).
+    rng: RefCell<Rng>,
+    straggler: Option<Straggler>,
+    dup_left: Cell<u32>,
+}
+
+/// Mutable per-world fault state. Only built for active plans; `None`
+/// elsewhere keeps the fault-off fast path free of any fault arithmetic.
+pub struct FaultState {
+    profile: FaultProfile,
+    ranks: Vec<FaultRank>,
+    injected: Cell<u64>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan, nranks: usize) -> FaultState {
+        let p = plan.profile;
+        let ranks = (0..nranks)
+            .map(|r| {
+                // Separate derivation chain for the one-shot straggler
+                // election so it never perturbs the per-message stream.
+                let mut elect = Rng::substream(derive_seed(plan.seed, 0xFA17), r as u64);
+                let straggler = if p.straggler_prob > 0.0
+                    && p.straggler_factor > 1
+                    && p.straggler_duty_ns > 0
+                    && elect.chance(p.straggler_prob)
+                {
+                    Some(Straggler {
+                        factor: p.straggler_factor,
+                        period: p.straggler_period_ns.max(1),
+                        duty: p.straggler_duty_ns,
+                        phase: elect.below(p.straggler_period_ns.max(1)),
+                    })
+                } else {
+                    None
+                };
+                FaultRank {
+                    rng: RefCell::new(Rng::substream(plan.seed, r as u64)),
+                    straggler,
+                    dup_left: Cell::new(p.duplicate_budget),
+                }
+            })
+            .collect();
+        FaultState {
+            profile: p,
+            ranks,
+            injected: Cell::new(0),
+        }
+    }
+
+    /// Total faults injected so far (all kinds).
+    pub fn injected(&self) -> u64 {
+        self.injected.get()
+    }
+
+    fn count(&self) {
+        self.injected.set(self.injected.get() + 1);
+    }
+
+    /// Extra wire delay for a message leaving `src` (0 = no fault).
+    pub fn jitter(&self, src: usize) -> Time {
+        if self.profile.jitter_prob <= 0.0 || self.profile.jitter_max_ns == 0 {
+            return 0;
+        }
+        let mut rng = self.ranks[src].rng.borrow_mut();
+        if rng.chance(self.profile.jitter_prob) {
+            self.count();
+            1 + rng.below(self.profile.jitter_max_ns)
+        } else {
+            0
+        }
+    }
+
+    /// Should this eager-eligible send be demoted to rendezvous?
+    pub fn force_rendezvous(&self, src: usize) -> bool {
+        if self.profile.force_rendezvous_prob <= 0.0 {
+            return false;
+        }
+        let hit = self.ranks[src]
+            .rng
+            .borrow_mut()
+            .chance(self.profile.force_rendezvous_prob);
+        if hit {
+            self.count();
+        }
+        hit
+    }
+
+    /// Should this eager delivery be duplicated? Returns the extra delay
+    /// of the retransmitted copy. Bounded by the per-rank budget.
+    pub fn duplicate(&self, src: usize) -> Option<Time> {
+        if self.profile.duplicate_prob <= 0.0 {
+            return None;
+        }
+        let fr = &self.ranks[src];
+        if fr.dup_left.get() == 0 {
+            return None;
+        }
+        let mut rng = fr.rng.borrow_mut();
+        if rng.chance(self.profile.duplicate_prob) {
+            fr.dup_left.set(fr.dup_left.get() - 1);
+            self.count();
+            Some(1 + rng.below(self.profile.duplicate_delay_ns.max(1)))
+        } else {
+            None
+        }
+    }
+
+    /// CPU cost after any straggler slowdown at virtual time `now`.
+    /// Deterministic in `(rank, now)`; consumes no RNG draws.
+    pub fn slowed(&self, rank: usize, now: Time, cost: Time) -> Time {
+        match &self.ranks[rank].straggler {
+            Some(s) if (now + s.phase) % s.period < s.duty => {
+                if cost > 0 {
+                    self.count();
+                }
+                cost.saturating_mul(s.factor)
+            }
+            _ => cost,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_plan_is_inactive() {
+        assert!(!FaultPlan::off().is_active());
+        assert!(!FaultProfile::off().is_active());
+        assert!(FaultPlan::seeded(1).is_active());
+        for p in [
+            FaultProfile::light(),
+            FaultProfile::heavy(),
+            FaultProfile::jitter(),
+            FaultProfile::straggler(),
+            FaultProfile::rendezvous(),
+            FaultProfile::duplicate(),
+        ] {
+            assert!(p.is_active());
+        }
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(FaultPlan::parse("42").unwrap(), FaultPlan::seeded(42));
+        assert_eq!(
+            FaultPlan::parse("7:heavy").unwrap(),
+            FaultPlan::with_profile(7, FaultProfile::heavy())
+        );
+        assert_eq!(
+            FaultPlan::parse("0:off").unwrap().profile,
+            FaultProfile::off()
+        );
+        assert!(FaultPlan::parse("nope").is_err());
+        assert!(FaultPlan::parse("1:gremlins").is_err());
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_rank() {
+        let mk = || FaultState::new(FaultPlan::seeded(99), 4);
+        let a = mk();
+        let b = mk();
+        for r in 0..4 {
+            for _ in 0..50 {
+                assert_eq!(a.jitter(r), b.jitter(r));
+                assert_eq!(a.force_rendezvous(r), b.force_rendezvous(r));
+                assert_eq!(a.duplicate(r), b.duplicate(r));
+            }
+        }
+        assert_eq!(a.injected(), b.injected());
+    }
+
+    #[test]
+    fn ranks_have_independent_streams() {
+        let s = FaultState::new(
+            FaultPlan::with_profile(3, FaultProfile::jitter()),
+            2,
+        );
+        let a: Vec<Time> = (0..64).map(|_| s.jitter(0)).collect();
+        let b: Vec<Time> = (0..64).map(|_| s.jitter(1)).collect();
+        assert_ne!(a, b);
+        // Interleaving order across ranks must not matter: each rank has
+        // its own stream, so rank 0's draws are a function of rank 0 only.
+        let s2 = FaultState::new(
+            FaultPlan::with_profile(3, FaultProfile::jitter()),
+            2,
+        );
+        let mut a2 = Vec::new();
+        let mut b2 = Vec::new();
+        for _ in 0..64 {
+            b2.push(s2.jitter(1));
+            a2.push(s2.jitter(0));
+        }
+        assert_eq!(a, a2);
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn duplicate_budget_is_bounded() {
+        let mut prof = FaultProfile::duplicate();
+        prof.duplicate_prob = 1.0;
+        prof.duplicate_budget = 5;
+        let s = FaultState::new(FaultPlan::with_profile(1, prof), 1);
+        let hits = (0..100).filter(|_| s.duplicate(0).is_some()).count();
+        assert_eq!(hits, 5);
+    }
+
+    #[test]
+    fn straggler_slowdown_is_windowed_and_drawless() {
+        let plan = FaultPlan::with_profile(11, FaultProfile::straggler());
+        let p = FaultProfile::straggler();
+        let s = FaultState::new(plan, 8);
+        // At least one rank elected with prob 0.5 over 8 ranks (seeded:
+        // deterministic — if this ever fails the seed just needs bumping).
+        let slow_rank = (0..8).find(|&r| {
+            (0..p.straggler_period_ns)
+                .step_by(1000)
+                .any(|t| s.slowed(r, t, 100) > 100)
+        });
+        let r = slow_rank.expect("no straggler elected under seed 11");
+        // Within one period the factor applies in the duty window only,
+        // and repeated queries at the same `now` agree (no draws).
+        let mut saw_fast = false;
+        let mut saw_slow = false;
+        for t in (0..p.straggler_period_ns * 2).step_by(500) {
+            let c1 = s.slowed(r, t, 100);
+            let c2 = s.slowed(r, t, 100);
+            assert_eq!(c1, c2);
+            match c1 {
+                100 => saw_fast = true,
+                c if c == 100 * p.straggler_factor => saw_slow = true,
+                c => panic!("unexpected slowed cost {c}"),
+            }
+        }
+        assert!(saw_fast && saw_slow);
+    }
+
+    #[test]
+    fn for_cell_derives_distinct_plans() {
+        let p = FaultPlan::seeded(42);
+        assert_ne!(p.for_cell(0).seed, p.for_cell(1).seed);
+        assert_eq!(p.for_cell(3), p.for_cell(3));
+        assert_eq!(p.for_cell(0).profile, p.profile);
+    }
+
+    #[test]
+    fn fault_names_cover_codes() {
+        assert_eq!(fault_name(FAULT_JITTER), "jitter");
+        assert_eq!(fault_name(FAULT_STRAGGLER), "straggler");
+        assert_eq!(fault_name(FAULT_RENDEZVOUS), "forced-rendezvous");
+        assert_eq!(fault_name(FAULT_DUPLICATE), "duplicate");
+    }
+}

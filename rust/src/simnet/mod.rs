@@ -9,11 +9,16 @@
 //!   locality *tier* of any (src, dst) pair.
 //! * [`cost`] — the LogGP-with-matching cost model and the two calibration
 //!   presets standing in for OpenMPI 4.1.2 / Mvapich2 2.3.7 on Quartz.
+//! * [`fault`] — seeded, deterministic perturbation plans (latency jitter,
+//!   stragglers, forced rendezvous, duplicate delivery); off by default
+//!   and bit-identical when off.
 
 pub mod cost;
 pub mod exec;
+pub mod fault;
 pub mod topology;
 
 pub use cost::{CostModel, MpiFlavor};
-pub use exec::{Sim, SimHandle, SimStats, Time};
+pub use exec::{Sim, SimHandle, SimStats, Stall, Time};
+pub use fault::{FaultPlan, FaultProfile, FaultState};
 pub use topology::{RegionKind, Tier, Topology};

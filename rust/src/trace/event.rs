@@ -36,10 +36,15 @@ pub enum EventKind {
     RmaPut,
     /// [`crate::mpi::Comm::charge_cpu`] busy interval.
     CpuCharge,
+    /// An injected fault fired (`tag` carries the `simnet::fault::FAULT_*`
+    /// code; the span is the injected delay, zero-width for delayless
+    /// perturbations). Never counted as message traffic — the rollup must
+    /// stay bit-compatible with [`crate::mpi::Counters`] under faults.
+    Fault,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 8] = [
+    pub const ALL: [EventKind; 9] = [
         EventKind::EagerSend,
         EventKind::RendezvousSend,
         EventKind::RecvMatch,
@@ -48,6 +53,7 @@ impl EventKind {
         EventKind::CollRound,
         EventKind::RmaPut,
         EventKind::CpuCharge,
+        EventKind::Fault,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -60,6 +66,7 @@ impl EventKind {
             EventKind::CollRound => "coll-round",
             EventKind::RmaPut => "rma-put",
             EventKind::CpuCharge => "cpu",
+            EventKind::Fault => "fault",
         }
     }
 

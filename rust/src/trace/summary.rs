@@ -38,6 +38,12 @@ pub struct TraceSummary {
     pub cpu_busy_ns: u64,
     /// Total time ranks spent blocked in `WaitAny` (ns).
     pub wait_ns: u64,
+    /// Injected fault events (0 unless the world ran with a fault plan).
+    pub fault_events: u64,
+    /// Total virtual delay injected by faults (jitter + straggler
+    /// dilation + duplicate retransmit offsets), ns. This is what `sdde
+    /// trace` uses to attribute makespan inflation to injected faults.
+    pub fault_delay_ns: u64,
 }
 
 impl TraceSummary {
@@ -74,6 +80,13 @@ impl TraceSummary {
             EventKind::CollRound => self.coll_rounds += 1,
             EventKind::CpuCharge => self.cpu_busy_ns += ev.duration(),
             EventKind::Wait => self.wait_ns += ev.duration(),
+            // Fault events are annotations, not traffic: they must not
+            // perturb any counter `Counters` mirrors (bit-compat under
+            // fault injection is asserted by trace_conservation).
+            EventKind::Fault => {
+                self.fault_events += 1;
+                self.fault_delay_ns += ev.duration();
+            }
         }
     }
 
@@ -141,6 +154,7 @@ impl TraceSummary {
             && self.coll_rounds == 0
             && self.cpu_busy_ns == 0
             && self.wait_ns == 0
+            && self.fault_events == 0
     }
 
     /// Render the per-tier × per-family tables plus the scalar counters
@@ -202,6 +216,13 @@ impl TraceSummary {
             fmt::ns(self.cpu_busy_ns),
             fmt::ns(self.wait_ns),
         ));
+        if self.fault_events > 0 {
+            out.push_str(&format!(
+                "injected faults: {} events, {} total delay\n",
+                self.fault_events,
+                fmt::ns(self.fault_delay_ns),
+            ));
+        }
         out
     }
 }
@@ -262,6 +283,28 @@ mod tests {
     #[test]
     fn empty_summary_is_empty() {
         assert!(TraceSummary::new(8).is_empty());
+    }
+
+    #[test]
+    fn fault_events_are_annotations_not_traffic() {
+        // A fault event (tag = fault code) must count toward the fault
+        // rollup only: every counter Counters mirrors stays untouched.
+        let events = [
+            ev(EventKind::EagerSend, 0, 0x1000, 64, Tier::InterNode),
+            ev(EventKind::Fault, 0, 0, 0, Tier::InterNode),
+            ev(EventKind::Fault, 1, 1, 0, Tier::SelfMsg),
+        ];
+        let s = TraceSummary::from_events(&events, 2);
+        assert_eq!(s.fault_events, 2);
+        assert_eq!(s.fault_delay_ns, 40); // two 20 ns spans
+        assert_eq!(s.total_msgs(), 1);
+        assert_eq!(s.internode_sent, vec![1, 0]);
+        assert_eq!(s.cpu_busy_ns, 0);
+        let base = TraceSummary::from_events(&events[..1], 2);
+        assert_eq!(s.msgs, base.msgs);
+        assert_eq!(s.bytes, base.bytes);
+        assert!(s.render("t").contains("injected faults: 2 events"));
+        assert!(!base.render("t").contains("injected faults"));
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod stats;
 
 pub use args::Args;
 pub use hash::{FxHashMap, FxHashSet};
-pub use rng::Rng;
+pub use rng::{derive_seed, Rng};

@@ -18,6 +18,24 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Key derivation: map `(seed, stream)` to an independent child seed.
+///
+/// Both inputs pass through full splitmix64 chains before mixing, so
+/// child seeds for adjacent stream ids share no statistical structure
+/// (unlike the cheap XOR fold in [`Rng::stream`], which is kept verbatim
+/// because pattern generation depends on its exact output). The function
+/// composes: `derive_seed(derive_seed(s, cell), rank)` yields
+/// per-(cell, rank) streams — the fault layer uses exactly that shape so
+/// `--jobs N` chaos sweeps stay byte-identical to serial runs.
+pub fn derive_seed(seed: u64, stream: u64) -> u64 {
+    let mut a = seed;
+    let h = splitmix64(&mut a);
+    let mut b = h ^ stream.wrapping_mul(0xD1B54A32D192ED03).rotate_left(29);
+    let lo = splitmix64(&mut b);
+    let hi = splitmix64(&mut b);
+    lo ^ hi.rotate_left(32)
+}
+
 impl Rng {
     /// Seed the generator; any u64 (including 0) is a valid seed.
     pub fn new(seed: u64) -> Self {
@@ -34,6 +52,13 @@ impl Rng {
     /// Derive an independent stream (e.g. one per rank) from this seed.
     pub fn stream(seed: u64, stream: u64) -> Self {
         Rng::new(seed ^ stream.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17))
+    }
+
+    /// Strongly derived independent stream via [`derive_seed`]. Prefer
+    /// this for new code (the fault layer's per-(cell, rank) streams);
+    /// [`Rng::stream`] stays as-is for output compatibility.
+    pub fn substream(seed: u64, stream: u64) -> Self {
+        Rng::new(derive_seed(seed, stream))
     }
 
     #[inline]
@@ -189,6 +214,47 @@ mod tests {
         let mut a = Rng::stream(42, 0);
         let mut b = Rng::stream(42, 1);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn derive_seed_is_deterministic_and_stream_sensitive() {
+        assert_eq!(derive_seed(42, 7), derive_seed(42, 7));
+        assert_ne!(derive_seed(42, 7), derive_seed(42, 8));
+        assert_ne!(derive_seed(42, 7), derive_seed(43, 7));
+    }
+
+    #[test]
+    fn derive_seed_decorrelates_adjacent_streams() {
+        // Adjacent stream ids must differ in many bits (a weak XOR fold
+        // would leave low-bit structure); require a sane Hamming distance.
+        for s in 0..16u64 {
+            let d = derive_seed(1, s) ^ derive_seed(1, s + 1);
+            assert!(d.count_ones() >= 12, "stream {s}: weak mix {d:#x}");
+        }
+    }
+
+    #[test]
+    fn derive_seed_composes_to_distinct_grids() {
+        // (cell, rank) grid: all children pairwise distinct.
+        let mut seen = std::collections::BTreeSet::new();
+        for cell in 0..8u64 {
+            for rank in 0..8u64 {
+                assert!(seen.insert(derive_seed(derive_seed(9, cell), rank)));
+            }
+        }
+    }
+
+    #[test]
+    fn substream_sequences_are_independent() {
+        let mut a = Rng::substream(5, 0);
+        let mut b = Rng::substream(5, 1);
+        let mut same = 0;
+        for _ in 0..64 {
+            if a.next_u64() == b.next_u64() {
+                same += 1;
+            }
+        }
+        assert_eq!(same, 0);
     }
 
     #[test]

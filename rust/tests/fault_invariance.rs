@@ -1,0 +1,281 @@
+//! Perturbation-invariance proofs (paper invariant 8 in DESIGN.md): a
+//! seeded fault plan — latency jitter, stragglers, forced rendezvous,
+//! duplicate delivery — may move *virtual time*, but must never change
+//! what any SDDE algorithm computes, what the solver stack computes, or
+//! how many user messages cross the network; and `FaultPlan::off()` must
+//! be bit-identical to a world with no fault layer at all.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use sdde::bench::{
+    resolve_jobs, run_cells, run_sweep, write_csv, FigureId, Point, ProgressSink, SweepConfig,
+};
+use sdde::mpi::World;
+use sdde::mpix::{alltoall_crs, CrsArgs, CrsResult, MpixComm, MpixInfo, NeighborMethod,
+    SddeAlgorithm};
+use sdde::simnet::{CostModel, FaultPlan, FaultProfile, MpiFlavor, RegionKind, Topology};
+use sdde::solver::DistMatrix;
+use sdde::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
+use sdde::util::Rng;
+
+fn random_const_pattern(nranks: usize, max_deg: usize, sendcount: usize, seed: u64) -> Vec<CrsArgs> {
+    let mut rng = Rng::new(seed);
+    (0..nranks)
+        .map(|p| {
+            let deg = rng.usize_below(max_deg.min(nranks) + 1);
+            let dest = rng.sample_distinct(nranks, deg);
+            let sendvals = dest
+                .iter()
+                .flat_map(|&d| (0..sendcount).map(move |k| (p * 1000 + d * 10 + k) as u64))
+                .collect();
+            CrsArgs {
+                dest,
+                sendcount,
+                sendvals,
+            }
+        })
+        .collect()
+}
+
+fn oracle_c(pattern: &[CrsArgs]) -> Vec<CrsResult> {
+    let n = pattern.len();
+    let mut recv: Vec<BTreeMap<usize, Vec<u64>>> = vec![BTreeMap::new(); n];
+    for (p, args) in pattern.iter().enumerate() {
+        for (i, &d) in args.dest.iter().enumerate() {
+            recv[d].insert(p, args.vals(i).to_vec());
+        }
+    }
+    recv.into_iter()
+        .map(|m| {
+            let mut res = CrsResult::default();
+            for (s, v) in m {
+                res.src.push(s);
+                res.recvvals.extend(v);
+            }
+            res
+        })
+        .collect()
+}
+
+/// Run one const-size SDDE under an optional fault plan and return the
+/// per-rank results plus total user messages (the traffic invariant).
+fn run_c_faulted(
+    topo: Topology,
+    flavor: MpiFlavor,
+    algo: SddeAlgorithm,
+    pattern: Vec<CrsArgs>,
+    faults: Option<FaultPlan>,
+) -> (Vec<CrsResult>, u64) {
+    let pattern = Rc::new(pattern);
+    let world = World::builder(topo, CostModel::preset(flavor))
+        .faults(faults)
+        .build();
+    let out = world.run(move |c| {
+        let pattern = pattern.clone();
+        async move {
+            let mx = MpixComm::new(c.clone(), RegionKind::Node);
+            let info = MpixInfo::with_algorithm(algo);
+            alltoall_crs(&mx, &info, &pattern[c.rank()]).await.unwrap()
+        }
+    });
+    let msgs = out.counters.total_user_msgs();
+    (out.results, msgs)
+}
+
+/// Acceptance core: all five SDDE algorithms × both MPI presets reproduce
+/// the sequential oracle under ≥ 8 seeded fault plans (heavy profile:
+/// every perturbation class at once), with user-message counts identical
+/// to the unfaulted run. One parallel cell per (algo, flavor).
+#[test]
+fn all_algorithms_match_oracle_under_eight_fault_seeds() {
+    const SEEDS: [u64; 8] = [1, 2, 3, 5, 8, 13, 21, 42];
+    let cells: Vec<(SddeAlgorithm, MpiFlavor)> = SddeAlgorithm::ALL
+        .into_iter()
+        .flat_map(|a| [(a, MpiFlavor::Mvapich2), (a, MpiFlavor::OpenMpi)])
+        .collect();
+    let (reports, _) = run_cells(
+        resolve_jobs(None),
+        cells.len(),
+        ProgressSink::Silent,
+        |i, _| {
+            let (algo, flavor) = cells[i];
+            let topo = Topology::quartz(2, 4);
+            let pattern = random_const_pattern(topo.nranks(), 5, 2, 100 + i as u64);
+            let expect = oracle_c(&pattern);
+            let (base, base_msgs) =
+                run_c_faulted(topo.clone(), flavor, algo, pattern.clone(), None);
+            if base != expect {
+                return Some(format!("{algo:?}/{flavor:?}: fault-free run != oracle"));
+            }
+            for seed in SEEDS {
+                let plan = FaultPlan::with_profile(seed, FaultProfile::heavy());
+                let (got, msgs) =
+                    run_c_faulted(topo.clone(), flavor, algo, pattern.clone(), Some(plan));
+                if got != expect {
+                    return Some(format!("{algo:?}/{flavor:?} fault seed {seed}: != oracle"));
+                }
+                if msgs != base_msgs {
+                    return Some(format!(
+                        "{algo:?}/{flavor:?} fault seed {seed}: user msgs {msgs} != {base_msgs}"
+                    ));
+                }
+            }
+            None
+        },
+    );
+    let failures: Vec<String> = reports.into_iter().flatten().collect();
+    assert!(failures.is_empty(), "{failures:#?}");
+}
+
+/// Each perturbation class in isolation (jitter / straggler / forced
+/// rendezvous / duplicate delivery) preserves the oracle result too —
+/// localizes a regression to one fault mechanism.
+#[test]
+fn each_fault_class_alone_preserves_results() {
+    let profiles = [
+        ("jitter", FaultProfile::jitter()),
+        ("straggler", FaultProfile::straggler()),
+        ("rendezvous", FaultProfile::rendezvous()),
+        ("duplicate", FaultProfile::duplicate()),
+    ];
+    let topo = Topology::quartz(3, 3);
+    let pattern = random_const_pattern(topo.nranks(), 6, 3, 7);
+    let expect = oracle_c(&pattern);
+    for (name, profile) in profiles {
+        for seed in [11, 12] {
+            let plan = FaultPlan::with_profile(seed, profile);
+            let (got, _) = run_c_faulted(
+                topo.clone(),
+                MpiFlavor::Mvapich2,
+                SddeAlgorithm::LocalityNonBlocking,
+                pattern.clone(),
+                Some(plan),
+            );
+            assert_eq!(got, expect, "profile {name} seed {seed}");
+        }
+    }
+}
+
+/// Neighbor-persistent SpMV stays bit-for-bit identical to the legacy p2p
+/// halo — and to its own fault-free run — under heavy perturbation
+/// (acceptance: same arithmetic, different wires, perturbed timing).
+#[test]
+fn persistent_spmv_bitwise_stable_under_faults() {
+    let preset = MatrixPreset::poisson2d(16, 12);
+    let topo = Topology::quartz(2, 4);
+    let part = Partition::new(preset.n, topo.nranks());
+
+    let run = |faults: Option<FaultPlan>| -> Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let world = World::builder(topo.clone(), CostModel::preset(MpiFlavor::Mvapich2))
+            .faults(faults)
+            .build();
+        let preset2 = Rc::new(preset.clone());
+        let out = world.run(move |c| {
+            let preset = preset2.clone();
+            async move {
+                let rank = c.rank();
+                let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                let info = MpixInfo::with_algorithm(SddeAlgorithm::LocalityNonBlocking);
+                let pat = SpmvPattern::build(&preset, part, rank, 3);
+                let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+                let (s, e) = part.range(rank);
+                let x: Vec<f64> = (s..e).map(|g| (g % 13) as f64 - 6.0).collect();
+
+                let a_p2p = DistMatrix::build(&preset, part, rank, 3, pkg.clone());
+                let y_p2p = a_p2p.spmv(&c, &x).await;
+
+                let mut a_std = DistMatrix::build(&preset, part, rank, 3, pkg.clone());
+                a_std.init_halo(&mx, NeighborMethod::Standard).await;
+                let y_std = a_std.spmv(&c, &x).await;
+
+                let mut a_loc = DistMatrix::build(&preset, part, rank, 3, pkg);
+                a_loc.init_halo(&mx, NeighborMethod::Locality).await;
+                let y_loc = a_loc.spmv(&c, &x).await;
+
+                (y_p2p, y_std, y_loc)
+            }
+        });
+        out.results
+    };
+
+    let base = run(None);
+    for seed in [4, 9, 23] {
+        let faulted = run(Some(FaultPlan::with_profile(seed, FaultProfile::heavy())));
+        for (rank, ((bp, bs, bl), (fp, fs, fl))) in base.iter().zip(&faulted).enumerate() {
+            let as_bits =
+                |v: &[f64]| v.iter().map(|y| y.to_bits()).collect::<Vec<u64>>();
+            assert_eq!(as_bits(bp), as_bits(fp), "seed {seed} rank {rank}: p2p moved");
+            assert_eq!(as_bits(bp), as_bits(bs), "rank {rank}: standard != p2p");
+            assert_eq!(as_bits(fp), as_bits(fs), "seed {seed} rank {rank}: standard != p2p");
+            assert_eq!(as_bits(fp), as_bits(fl), "seed {seed} rank {rank}: locality != p2p");
+            assert_eq!(as_bits(bl), as_bits(fl), "seed {seed} rank {rank}: locality moved");
+        }
+    }
+}
+
+fn tiny_sweep() -> SweepConfig {
+    let mut cfg = SweepConfig::quick(FigureId::Fig5, 400);
+    cfg.nodes = vec![2, 4];
+    cfg.matrices.truncate(1);
+    cfg
+}
+
+fn csv_bytes(points: &[Point], name: &str) -> Vec<u8> {
+    let path = std::env::temp_dir().join(format!("sdde_fault_inv_{name}_{}.csv", std::process::id()));
+    write_csv(&path, points).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+/// `FaultPlan::off()` is not "very small faults" — it is the *absence* of
+/// the fault layer: points and rendered CSV bytes are identical.
+#[test]
+fn off_plan_sweep_and_csv_are_bit_identical() {
+    let base_cfg = tiny_sweep();
+    let mut off_cfg = tiny_sweep();
+    off_cfg.faults = Some(FaultPlan::off());
+    let base = run_sweep(&base_cfg);
+    let off = run_sweep(&off_cfg);
+    assert_eq!(base, off, "FaultPlan::off() perturbed a sweep");
+    assert_eq!(
+        csv_bytes(&base, "base"),
+        csv_bytes(&off, "off"),
+        "CSV bytes differ under FaultPlan::off()"
+    );
+}
+
+/// Chaos sweeps parallelize like everything else: per-cell fault streams
+/// derive from (seed, cell index) — never from the worker thread — so a
+/// faulted sweep at `--jobs 4` is byte-identical to serial (satellite of
+/// invariant 7, with faults on).
+#[test]
+fn faulted_sweep_is_jobs_invariant_including_csv() {
+    let mut serial_cfg = tiny_sweep();
+    serial_cfg.faults = Some(FaultPlan::seeded(42));
+    serial_cfg.jobs = 1;
+    let mut par_cfg = serial_cfg.clone();
+    par_cfg.jobs = 4;
+    let serial = run_sweep(&serial_cfg);
+    let par = run_sweep(&par_cfg);
+    assert_eq!(serial, par, "faulted sweep changed under --jobs 4");
+    assert_eq!(
+        csv_bytes(&serial, "jobs1"),
+        csv_bytes(&par, "jobs4"),
+        "faulted sweep CSV bytes differ across jobs counts"
+    );
+    // And the faults actually bit: some point's virtual time moved.
+    let mut base_cfg = tiny_sweep();
+    base_cfg.jobs = 1;
+    let base = run_sweep(&base_cfg);
+    assert!(
+        base.iter().zip(&serial).any(|(b, f)| b.time_ns != f.time_ns),
+        "fault plan seeded(42) injected nothing"
+    );
+    // Traffic metrics never move (red-dot metrics are fault-invariant).
+    for (b, f) in base.iter().zip(&serial) {
+        assert_eq!(b.max_internode, f.max_internode, "{}/{}", b.matrix, b.nodes);
+        assert_eq!(b.total_msgs, f.total_msgs, "{}/{}", b.matrix, b.nodes);
+    }
+}

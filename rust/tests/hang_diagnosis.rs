@@ -1,0 +1,178 @@
+//! Hang-diagnosis corpus: classic MPI deadlock/livelock bugs, each run
+//! through `World::run_checked`, which must *terminate* (no wall-clock
+//! timeouts) and hand back a `WaitGraph` naming the blocked operations,
+//! the envelopes they wait for, near-miss unexpected messages, and any
+//! wait-for cycle. The out-of-start-order locality wait — the one corpus
+//! member diagnosed at the API layer before a hang can form — fail-fasts
+//! with a panic instead (see also tests/neighbor_agreement.rs).
+
+use sdde::mpi::{MissReason, OpKind, Payload, World};
+use sdde::simnet::{CostModel, MpiFlavor, Stall, Time, Topology};
+
+fn world(nodes: usize, ppn: usize) -> World {
+    World::new(Topology::quartz(nodes, ppn), CostModel::preset(MpiFlavor::Mvapich2))
+}
+
+/// Mismatched tag: the sender uses tag 7, the receiver waits on tag 8.
+/// The diagnostic must point at the near-miss (same source, wrong tag)
+/// sitting in the receiver's unexpected queue.
+#[test]
+fn mismatched_tag_is_reported_as_near_miss() {
+    let err = world(1, 2)
+        .run_checked(|c| async move {
+            match c.rank() {
+                0 => {
+                    c.send(1, 7, Payload::ints(&[1, 2, 3])).await;
+                }
+                _ => {
+                    let _ = c.recv(0, 8).await; // typo'd tag: hangs forever
+                }
+            }
+        })
+        .expect_err("mismatched tags must stall");
+    assert!(matches!(err.stall, Stall::Deadlock { .. }));
+    assert_eq!(err.blocked_ranks(), vec![1]);
+    let ops = err.ops_of(1);
+    assert_eq!(ops.len(), 1);
+    assert_eq!(ops[0].kind, OpKind::Recv);
+    assert_eq!((ops[0].peer, ops[0].tag), (0, 8));
+    let nm = &err.blocked[0].near_misses;
+    assert_eq!(nm.len(), 1);
+    assert_eq!((nm[0].src, nm[0].tag), (0, 7));
+    assert_eq!(nm[0].reason, MissReason::TagMismatch);
+    assert!(err.cycle.is_none());
+    let text = err.render();
+    assert!(text.contains("near miss"), "{text}");
+    assert!(text.contains("tag mismatch"), "{text}");
+}
+
+/// Missing receive: a synchronous send whose receiver exits without ever
+/// posting. The diagnostic names the blocked sync-send and the envelope
+/// it still hopes someone will match.
+#[test]
+fn missing_recv_reports_blocked_sync_send() {
+    let err = world(1, 2)
+        .run_checked(|c| async move {
+            if c.rank() == 0 {
+                let r = c.issend(1, 5, Payload::ints(&[9])).await;
+                r.await; // completes only on match — never
+            }
+            // rank 1 exits immediately: the classic forgotten recv.
+        })
+        .expect_err("sync send without a receiver must stall");
+    assert!(matches!(err.stall, Stall::Deadlock { .. }));
+    assert_eq!(err.blocked_ranks(), vec![0]);
+    let ops = err.ops_of(0);
+    assert_eq!(ops.len(), 1);
+    assert_eq!(ops[0].kind, OpKind::SyncSend);
+    assert_eq!((ops[0].peer, ops[0].tag), (1, 5));
+    assert!(ops[0].since.is_some(), "registry ops carry a start time");
+    // One-sided blocking is not a cycle.
+    assert!(err.cycle.is_none());
+    assert!(err.render().contains("no wait cycle"), "{}", err.render());
+}
+
+/// Send/send deadlock: both ranks push a rendezvous-sized message and
+/// wait for completion before receiving. The wait graph must close the
+/// 0 -> 1 -> 0 cycle.
+#[test]
+fn rendezvous_send_send_cycle_is_detected() {
+    let err = world(1, 2)
+        .run_checked(|c| async move {
+            let me = c.rank();
+            let peer = 1 - me;
+            // 80 KB: far above both presets' eager limits, so the send
+            // blocks until the (never-posted) receive matches.
+            let r = c.isend(peer, 3, Payload::longs(&vec![me as u64; 10_000])).await;
+            r.await;
+            let _ = c.recv(peer, 3).await; // never reached
+        })
+        .expect_err("head-on rendezvous sends must stall");
+    assert_eq!(err.blocked_ranks(), vec![0, 1]);
+    for rank in [0, 1] {
+        let ops = err.ops_of(rank);
+        assert_eq!(ops.len(), 1, "rank {rank}");
+        assert_eq!(ops[0].kind, OpKind::RendezvousSend, "rank {rank}");
+        assert_eq!(ops[0].peer, 1 - rank, "rank {rank}");
+    }
+    let cycle = err.cycle.clone().expect("cycle must be found");
+    assert_eq!(cycle.first(), cycle.last(), "closed path");
+    assert!(cycle.contains(&0) && cycle.contains(&1), "{cycle:?}");
+    assert!(err.render().contains("cycle: "), "{}", err.render());
+}
+
+/// Blocking probe with no sender: the RAII op registry must surface the
+/// probe's envelope in the report.
+#[test]
+fn blocked_probe_is_reported() {
+    let err = world(1, 2)
+        .run_checked(|c| async move {
+            if c.rank() == 1 {
+                let _ = c.probe(0, 12).await; // nothing ever arrives
+            }
+        })
+        .expect_err("probe without a sender must stall");
+    assert_eq!(err.blocked_ranks(), vec![1]);
+    let ops = err.ops_of(1);
+    assert_eq!(ops.len(), 1);
+    assert_eq!(ops[0].kind, OpKind::Probe);
+    assert_eq!((ops[0].peer, ops[0].tag), (0, 12));
+}
+
+/// Livelock, not deadlock: one rank spins on the CPU forever while
+/// another waits on it. The timer heap never drains, so only the
+/// virtual-time quiescence watchdog can catch this — it must trip at the
+/// horizon and still name the blocked sync-send.
+#[test]
+fn watchdog_catches_busy_spin_livelock() {
+    const HORIZON: Time = 1_000_000; // 1 ms of virtual silence
+    let err = World::builder(
+        Topology::quartz(1, 2),
+        CostModel::preset(MpiFlavor::Mvapich2),
+    )
+    .watchdog(HORIZON)
+    .build()
+    .run_checked(|c| async move {
+        if c.rank() == 0 {
+            let r = c.issend(1, 4, Payload::ints(&[7])).await;
+            r.await;
+        } else {
+            // Polls "is it done yet?" without ever receiving: virtual
+            // time advances forever, progress never happens. Bounded
+            // only so a watchdog regression fails fast instead of
+            // running the loop out.
+            for _ in 0..1_000_000 {
+                c.charge_cpu(1_000).await;
+            }
+        }
+    })
+    .expect_err("watchdog must declare quiescence");
+    assert!(
+        matches!(err.stall, Stall::Quiescent { .. }),
+        "expected quiescence, got {:?}",
+        err.stall
+    );
+    let ops = err.ops_of(0);
+    assert_eq!(ops.len(), 1);
+    assert_eq!(ops[0].kind, OpKind::SyncSend);
+    let text = err.render();
+    assert!(text.contains("quiescent (watchdog)"), "{text}");
+    assert!(text.contains("last progress"), "{text}");
+}
+
+/// A healthy program through `run_checked` is not disturbed: same results
+/// as `run`, no diagnostic.
+#[test]
+fn run_checked_passes_healthy_programs_through() {
+    let out = world(1, 2)
+        .run_checked(|c| async move {
+            let me = c.rank();
+            let peer = 1 - me;
+            let r = c.isend(peer, 1, Payload::ints(&[me as u64])).await;
+            let m = c.recv(peer, 1).await;
+            r.await;
+            m.payload.words[0]
+        })
+        .expect("healthy program must not stall");
+    assert_eq!(out.results, vec![1, 0]);
+}

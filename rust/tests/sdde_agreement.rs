@@ -1,10 +1,16 @@
 //! Integration tests: every SDDE algorithm must produce the exact result a
 //! sequential oracle computes from the global pattern (paper invariant 1 in
 //! DESIGN.md), across topologies, region kinds and pattern densities.
+//!
+//! The big (algorithm × topology) matrices run their cells on worker
+//! threads via `bench::par::run_cells` (`SDDE_JOBS=N` to parallelize);
+//! each cell builds its own single-threaded `World`, and results are
+//! jobs-invariant, so only wall-clock changes.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
+use sdde::bench::{resolve_jobs, run_cells, ProgressSink};
 use sdde::mpi::World;
 use sdde::mpix::{
     alltoall_crs, alltoallv_crs, CrsArgs, CrsResult, CrsvArgs, CrsvResult, IntraAlgo, MpixComm,
@@ -77,7 +83,11 @@ fn run_v(
     out.results
 }
 
-fn check_algo_v(topo: Topology, algo: SddeAlgorithm, seed: u64) {
+/// One (topology, algorithm, seed) oracle check; `None` on agreement,
+/// `Some(description)` on the first mismatch. Worker-safe: panics stay
+/// out of the worker threads, the calling test asserts on the collected
+/// reports.
+fn check_algo_v_report(topo: Topology, algo: SddeAlgorithm, seed: u64) -> Option<String> {
     let n = topo.nranks();
     let pattern = random_pattern(n, n / 2 + 2, 6, seed);
     let expect = oracle_v(&pattern);
@@ -90,34 +100,48 @@ fn check_algo_v(topo: Topology, algo: SddeAlgorithm, seed: u64) {
             IntraAlgo::Personalized,
             pattern.clone(),
         );
-        assert_eq!(got, expect, "algo={algo:?} flavor={flavor:?} seed={seed}");
+        if got != expect {
+            return Some(format!(
+                "algo={algo:?} flavor={flavor:?} seed={seed}: result != oracle"
+            ));
+        }
+    }
+    None
+}
+
+fn check_algo_v(topo: Topology, algo: SddeAlgorithm, seed: u64) {
+    if let Some(m) = check_algo_v_report(topo, algo, seed) {
+        panic!("{m}");
     }
 }
 
 #[test]
-fn personalized_matches_oracle() {
-    check_algo_v(Topology::quartz(2, 4), SddeAlgorithm::Personalized, 1);
-    check_algo_v(Topology::quartz(4, 8), SddeAlgorithm::Personalized, 2);
-}
-
-#[test]
-fn nonblocking_matches_oracle() {
-    check_algo_v(Topology::quartz(2, 4), SddeAlgorithm::NonBlocking, 3);
-    check_algo_v(Topology::quartz(4, 8), SddeAlgorithm::NonBlocking, 4);
-}
-
-#[test]
-fn locality_personalized_matches_oracle() {
-    check_algo_v(Topology::quartz(2, 4), SddeAlgorithm::LocalityPersonalized, 5);
-    check_algo_v(Topology::quartz(4, 8), SddeAlgorithm::LocalityPersonalized, 6);
-    check_algo_v(Topology::quartz(3, 5), SddeAlgorithm::LocalityPersonalized, 7);
-}
-
-#[test]
-fn locality_nonblocking_matches_oracle() {
-    check_algo_v(Topology::quartz(2, 4), SddeAlgorithm::LocalityNonBlocking, 8);
-    check_algo_v(Topology::quartz(4, 8), SddeAlgorithm::LocalityNonBlocking, 9);
-    check_algo_v(Topology::quartz(3, 5), SddeAlgorithm::LocalityNonBlocking, 10);
+fn variable_matrix_all_algorithms_match_oracle() {
+    // The full variable-size (algorithm × topology) matrix, one parallel
+    // cell per combination.
+    let cells: Vec<(usize, usize, SddeAlgorithm, u64)> = vec![
+        (2, 4, SddeAlgorithm::Personalized, 1),
+        (4, 8, SddeAlgorithm::Personalized, 2),
+        (2, 4, SddeAlgorithm::NonBlocking, 3),
+        (4, 8, SddeAlgorithm::NonBlocking, 4),
+        (2, 4, SddeAlgorithm::LocalityPersonalized, 5),
+        (4, 8, SddeAlgorithm::LocalityPersonalized, 6),
+        (3, 5, SddeAlgorithm::LocalityPersonalized, 7),
+        (2, 4, SddeAlgorithm::LocalityNonBlocking, 8),
+        (4, 8, SddeAlgorithm::LocalityNonBlocking, 9),
+        (3, 5, SddeAlgorithm::LocalityNonBlocking, 10),
+    ];
+    let (reports, _) = run_cells(
+        resolve_jobs(None),
+        cells.len(),
+        ProgressSink::Silent,
+        |i, _| {
+            let (nodes, ppn, algo, seed) = cells[i];
+            check_algo_v_report(Topology::quartz(nodes, ppn), algo, seed)
+        },
+    );
+    let failures: Vec<String> = reports.into_iter().flatten().collect();
+    assert!(failures.is_empty(), "{failures:#?}");
 }
 
 #[test]
@@ -277,7 +301,12 @@ fn oracle_c(pattern: &[CrsArgs], sendcount: usize) -> Vec<CrsResult> {
         .collect()
 }
 
-fn check_algo_c(topo: Topology, algo: SddeAlgorithm, sendcount: usize, seed: u64) {
+fn check_algo_c_report(
+    topo: Topology,
+    algo: SddeAlgorithm,
+    sendcount: usize,
+    seed: u64,
+) -> Option<String> {
     let n = topo.nranks();
     let pattern = random_const_pattern(n, n / 2 + 2, sendcount, seed);
     let expect = oracle_c(&pattern, sendcount);
@@ -291,16 +320,37 @@ fn check_algo_c(topo: Topology, algo: SddeAlgorithm, sendcount: usize, seed: u64
             alltoall_crs(&mx, &info, &pattern[c.rank()]).await.unwrap()
         }
     });
-    assert_eq!(out.results, expect, "algo={algo:?} seed={seed}");
+    if out.results != expect {
+        return Some(format!("algo={algo:?} seed={seed}: result != oracle"));
+    }
+    None
 }
 
 #[test]
 fn alltoall_crs_all_algorithms_match_oracle() {
-    // CONST_SIZE = the paper's five plus the locality-RMA extension (§VI).
-    for (i, algo) in SddeAlgorithm::CONST_SIZE.into_iter().enumerate() {
-        check_algo_c(Topology::quartz(2, 4), algo, 1, 20 + i as u64);
-        check_algo_c(Topology::quartz(4, 4), algo, 3, 40 + i as u64);
-    }
+    // CONST_SIZE = the paper's five plus the locality-RMA extension (§VI);
+    // two topologies per algorithm, one parallel cell per combination.
+    let cells: Vec<(usize, usize, SddeAlgorithm, usize, u64)> = SddeAlgorithm::CONST_SIZE
+        .into_iter()
+        .enumerate()
+        .flat_map(|(i, algo)| {
+            [
+                (2, 4, algo, 1, 20 + i as u64),
+                (4, 4, algo, 3, 40 + i as u64),
+            ]
+        })
+        .collect();
+    let (reports, _) = run_cells(
+        resolve_jobs(None),
+        cells.len(),
+        ProgressSink::Silent,
+        |i, _| {
+            let (nodes, ppn, algo, sendcount, seed) = cells[i];
+            check_algo_c_report(Topology::quartz(nodes, ppn), algo, sendcount, seed)
+        },
+    );
+    let failures: Vec<String> = reports.into_iter().flatten().collect();
+    assert!(failures.is_empty(), "{failures:#?}");
 }
 
 #[test]
