@@ -1,0 +1,328 @@
+//! Model calibration: turn figure + chaos sweeps into a
+//! [`DispatchModel`] — the `sdde calibrate` engine.
+//!
+//! Three evidence passes feed the model's per-(bucket, algorithm) rows:
+//!
+//! 1. **Base cost** — fault-free figure sweeps; each cell's times are
+//!    normalized to the cell's winner, then averaged per bucket, so
+//!    `base = 1.0` marks the fault-free pick and other algorithms carry
+//!    their relative slowdown.
+//! 2. **Fault inflation** — the same sweeps re-run per (profile, seed)
+//!    chaos-style; `inflation = faulted time / baseline time`, averaged
+//!    per (bucket, algorithm, profile). This is the robustness evidence
+//!    the scoring rule `base × (1 + w·(inflation−1))` weighs.
+//! 3. **Critical-path wait share** — one fully-traced run per (bucket,
+//!    algorithm) on the bucket's first cell;
+//!    [`critical_path`] attributes chain time to event kinds, and the
+//!    `wait / covered` share becomes the model's `cp_wait` tiebreaker
+//!    (ties in score go to the algorithm that idles least).
+//!
+//! All accumulation is over `BTreeMap`s and every sweep is
+//! jobs-invariant, so calibration output is byte-identical for any
+//! `jobs` value — the same determinism contract as the sweeps it rides.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::figures::{run_sweep, FigureId, SweepConfig, Variant};
+use super::par::ProgressSink;
+use super::runspec::RunSpec;
+use crate::mpix::{DispatchModel, ModelEntry, PatternStats, SddeAlgorithm};
+use crate::simnet::{FaultPlan, FaultProfile, Topology};
+use crate::sparse::{MatrixPreset, Partition, SpmvPattern};
+use crate::trace::{critical_path, EventKind, TraceConfig};
+
+/// What to calibrate over. Defaults ([`CalibrateConfig::quick`]) are CI
+/// sized; `sdde calibrate` exposes every axis.
+#[derive(Clone, Debug)]
+pub struct CalibrateConfig {
+    /// Figures to sweep (their variants decide which buckets get rows).
+    pub figs: Vec<FigureId>,
+    /// Matrix shrink factor for the stock paper set.
+    pub div: usize,
+    pub nodes: Vec<usize>,
+    pub ppn: usize,
+    /// Explicit matrix set; `None` = the paper set scaled by `div`.
+    pub matrices: Option<Vec<MatrixPreset>>,
+    /// Fault profiles to calibrate inflation under (stock names).
+    pub profiles: Vec<String>,
+    /// Fault-plan seeds per profile (means over seeds).
+    pub seeds: Vec<u64>,
+    /// Robustness weight stored in the model.
+    pub robustness: f64,
+    pub jobs: usize,
+    pub progress: ProgressSink,
+}
+
+impl CalibrateConfig {
+    pub fn quick() -> CalibrateConfig {
+        CalibrateConfig {
+            figs: vec![FigureId::Fig5, FigureId::Fig7],
+            div: 400,
+            nodes: vec![2, 4],
+            ppn: 4,
+            matrices: None,
+            profiles: ["light", "heavy", "jitter", "straggler"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            seeds: vec![1, 2],
+            robustness: 1.0,
+            jobs: 1,
+            progress: ProgressSink::Silent,
+        }
+    }
+}
+
+/// Mean-accumulator keyed for deterministic iteration.
+type Acc<K> = BTreeMap<K, (f64, usize)>;
+
+fn push<K: Ord>(acc: &mut Acc<K>, key: K, v: f64) {
+    let e = acc.entry(key).or_insert((0.0, 0));
+    e.0 += v;
+    e.1 += 1;
+}
+
+fn mean(e: &(f64, usize)) -> f64 {
+    e.0 / e.1.max(1) as f64
+}
+
+/// The bucket a sweep point's cell falls into: the same discretization
+/// [`PatternStats::measure`] feeds at dispatch time, built from the
+/// cell's aggregate regime (mean destinations, node-region size = PPN).
+fn point_bucket(ranks: usize, ppn: usize, mean_send_nnz: f64, variant: Variant) -> String {
+    PatternStats {
+        nranks: ranks,
+        region_size: ppn,
+        send_nnz: mean_send_nnz.round() as usize,
+        local_frac: 0.0,
+        constant: variant == Variant::ConstSize,
+    }
+    .bucket()
+}
+
+fn sweep_for(cfg: &CalibrateConfig, fig: FigureId) -> SweepConfig {
+    let mut sweep = SweepConfig::quick(fig, cfg.div);
+    sweep.nodes = cfg.nodes.clone();
+    sweep.ppn = cfg.ppn;
+    if let Some(m) = &cfg.matrices {
+        sweep.matrices = m.clone();
+    }
+    sweep.jobs = cfg.jobs;
+    sweep.progress = cfg.progress;
+    sweep
+}
+
+/// Run the calibration sweeps and distill a [`DispatchModel`].
+pub fn run_calibrate(cfg: &CalibrateConfig) -> Result<DispatchModel> {
+    if cfg.figs.is_empty() {
+        return Err(anyhow!("calibrate needs at least one figure"));
+    }
+    let profiles: Vec<(String, FaultProfile)> = cfg
+        .profiles
+        .iter()
+        .map(|name| {
+            FaultProfile::parse(name)
+                .map(|p| (name.clone(), p))
+                .map_err(|e| anyhow!("bad calibration profile '{name}': {e}"))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut base_acc: Acc<(String, &'static str)> = BTreeMap::new();
+    let mut infl_acc: Acc<(String, &'static str, String)> = BTreeMap::new();
+    let mut cp_acc: Acc<(String, &'static str)> = BTreeMap::new();
+
+    for &fig in &cfg.figs {
+        let sweep = sweep_for(cfg, fig);
+        let baseline = run_sweep(&sweep);
+
+        // Pass 1: per-cell normalized base cost, pooled per bucket.
+        let mut cell_best: BTreeMap<(String, usize), u64> = BTreeMap::new();
+        for p in &baseline {
+            let k = (p.matrix.clone(), p.nodes);
+            let best = cell_best.entry(k).or_insert(u64::MAX);
+            *best = (*best).min(p.time_ns);
+        }
+        for p in &baseline {
+            let best = cell_best[&(p.matrix.clone(), p.nodes)].max(1);
+            let bucket = point_bucket(p.ranks, sweep.ppn, p.mean_send_nnz, sweep.variant);
+            push(&mut base_acc, (bucket, p.algo), p.time_ns as f64 / best as f64);
+        }
+
+        // Pass 2: fault inflation per (bucket, algorithm, profile).
+        for (name, profile) in &profiles {
+            for &seed in &cfg.seeds {
+                let mut faulted = sweep.clone();
+                faulted.faults = Some(FaultPlan::with_profile(seed, *profile));
+                let points = run_sweep(&faulted);
+                for (b, f) in baseline.iter().zip(&points) {
+                    debug_assert_eq!((b.algo, b.nodes), (f.algo, f.nodes));
+                    let bucket =
+                        point_bucket(b.ranks, sweep.ppn, b.mean_send_nnz, sweep.variant);
+                    push(
+                        &mut infl_acc,
+                        (bucket, b.algo, name.clone()),
+                        f.time_ns as f64 / b.time_ns.max(1) as f64,
+                    );
+                }
+            }
+        }
+
+        // Pass 3: critical-path wait share on each bucket's first cell.
+        let mut seen: BTreeMap<String, (String, usize)> = BTreeMap::new();
+        for p in &baseline {
+            let bucket = point_bucket(p.ranks, sweep.ppn, p.mean_send_nnz, sweep.variant);
+            seen.entry(bucket)
+                .or_insert_with(|| (p.matrix.clone(), p.nodes));
+        }
+        for (bucket, (matrix, nodes)) in &seen {
+            let preset = sweep
+                .matrices
+                .iter()
+                .find(|m| &m.name == matrix)
+                .expect("cell matrix came from this sweep");
+            let topo = Topology::quartz(*nodes, sweep.ppn);
+            let nranks = topo.nranks();
+            let part = Partition::new(preset.n, nranks);
+            let patterns: Rc<Vec<SpmvPattern>> = Rc::new(
+                (0..nranks)
+                    .map(|r| SpmvPattern::build(preset, part, r, sweep.seed))
+                    .collect(),
+            );
+            for &algo in &sweep.algos {
+                if sweep.variant == Variant::Variable && algo == SddeAlgorithm::Rma {
+                    continue;
+                }
+                let run = RunSpec::new(topo.clone(), sweep.flavor)
+                    .algo(algo)
+                    .region(sweep.region)
+                    .intra(sweep.intra)
+                    .trace(TraceConfig::full())
+                    .run_sdde(sweep.variant, patterns.clone());
+                let cp = critical_path(&run.trace.events);
+                let wait = cp
+                    .by_kind
+                    .iter()
+                    .find(|(k, _)| *k == EventKind::Wait)
+                    .map(|&(_, t)| t)
+                    .unwrap_or(0);
+                push(
+                    &mut cp_acc,
+                    (bucket.clone(), algo.name()),
+                    wait as f64 / cp.covered_ns.max(1) as f64,
+                );
+            }
+        }
+    }
+
+    // Distill: one entry per (bucket, algorithm), in bucket order with
+    // algorithms in their canonical rank.
+    let mut entries: Vec<ModelEntry> = base_acc
+        .iter()
+        .map(|((bucket, algo_name), acc)| {
+            let algo = SddeAlgorithm::parse(algo_name)
+                .expect("accumulator keys are canonical names");
+            let inflation = profiles
+                .iter()
+                .map(|(name, _)| {
+                    let v = infl_acc
+                        .get(&(bucket.clone(), *algo_name, name.clone()))
+                        .map(mean)
+                        .unwrap_or(1.0);
+                    (name.clone(), v)
+                })
+                .collect();
+            ModelEntry {
+                bucket: bucket.clone(),
+                algo,
+                base: mean(acc),
+                cp_wait: cp_acc
+                    .get(&(bucket.clone(), *algo_name))
+                    .map(mean)
+                    .unwrap_or(0.0),
+                inflation,
+            }
+        })
+        .collect();
+    let rank = |a: SddeAlgorithm| {
+        SddeAlgorithm::CONST_SIZE
+            .iter()
+            .position(|&x| x == a)
+            .unwrap_or(usize::MAX)
+    };
+    entries.sort_by(|a, b| a.bucket.cmp(&b.bucket).then(rank(a.algo).cmp(&rank(b.algo))));
+
+    Ok(DispatchModel {
+        robustness: cfg.robustness,
+        profiles: cfg.profiles.clone(),
+        entries,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CalibrateConfig {
+        CalibrateConfig {
+            figs: vec![FigureId::Fig5],
+            div: 400,
+            nodes: vec![2],
+            ppn: 4,
+            matrices: Some(vec![MatrixPreset::cage14_like().scaled(400)]),
+            profiles: vec!["heavy".to_string()],
+            seeds: vec![1],
+            robustness: 1.0,
+            jobs: 1,
+            progress: ProgressSink::Silent,
+        }
+    }
+
+    #[test]
+    fn calibrate_builds_a_coherent_model() {
+        let model = run_calibrate(&tiny()).unwrap();
+        assert_eq!(model.profiles, vec!["heavy"]);
+        // One bucket (one cell), every const-size algorithm measured.
+        assert_eq!(model.entries.len(), SddeAlgorithm::CONST_SIZE.len());
+        let mut best = f64::MAX;
+        for e in &model.entries {
+            assert!(e.base >= 1.0 - 1e-12, "{e:?}");
+            best = best.min(e.base);
+            assert_eq!(e.inflation.len(), 1);
+            assert_eq!(e.inflation[0].0, "heavy");
+            assert!(e.inflation[0].1 > 0.0, "{e:?}");
+            assert!((0.0..=1.0).contains(&e.cp_wait), "{e:?}");
+        }
+        // Normalization: the fault-free winner sits at exactly 1.0.
+        assert!((best - 1.0).abs() < 1e-12);
+        // The model must select *something* for its own bucket.
+        let bucket = &model.entries[0].bucket;
+        assert!(model.buckets().contains(bucket));
+    }
+
+    #[test]
+    fn calibrated_model_round_trips_through_json() {
+        let model = run_calibrate(&tiny()).unwrap();
+        let reparsed = DispatchModel::from_json(&model.to_json()).unwrap();
+        assert_eq!(reparsed, model);
+    }
+
+    #[test]
+    fn calibration_is_jobs_invariant() {
+        let mut cfg = tiny();
+        let serial = run_calibrate(&cfg).unwrap();
+        cfg.jobs = 3;
+        let parallel = run_calibrate(&cfg).unwrap();
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn unknown_profile_is_rejected_loudly() {
+        let mut cfg = tiny();
+        cfg.profiles = vec!["gremlins".to_string()];
+        let err = run_calibrate(&cfg).unwrap_err().to_string();
+        assert!(err.contains("gremlins"), "{err}");
+    }
+}

@@ -42,6 +42,10 @@ pub struct ChaosRun {
     /// Worst-case inflation and the point it occurred at.
     pub max_inflation: f64,
     pub max_label: String,
+    /// Points whose dispatch-column pick changed vs. the fault-free
+    /// baseline (non-zero only with a robustness-calibrated model loaded:
+    /// the faulted re-runs dispatch under this profile's noise regime).
+    pub dispatch_flips: usize,
 }
 
 /// Everything a chaos sweep measured.
@@ -74,6 +78,7 @@ impl ChaosReport {
             "mean inflation".to_string(),
             "max inflation".to_string(),
             "worst point".to_string(),
+            "dispatch flips".to_string(),
         ]];
         for r in &self.runs {
             rows.push(vec![
@@ -81,6 +86,7 @@ impl ChaosReport {
                 format!("{:.3}x", r.mean_inflation),
                 format!("{:.3}x", r.max_inflation),
                 r.max_label.clone(),
+                r.dispatch_flips.to_string(),
             ]);
         }
         out.push_str(&fmt::table(&rows));
@@ -102,14 +108,23 @@ impl ChaosReport {
 /// Run the baseline sweep fault-free, then once per seed under the
 /// profile, comparing point-for-point.
 pub fn run_chaos(cfg: &ChaosConfig) -> ChaosReport {
+    let profile_name = profile_label(&cfg.profile);
     let mut base_cfg = cfg.base.clone();
     base_cfg.faults = None;
+    // The baseline dispatches fault-free so the flip column is meaningful.
+    base_cfg.noise = None;
     let baseline = run_sweep(&base_cfg);
     let mut runs = Vec::new();
     let mut violations = Vec::new();
     for &seed in &cfg.seeds {
         let mut c = cfg.base.clone();
         c.faults = Some(FaultPlan::with_profile(seed, cfg.profile));
+        // Faulted re-runs dispatch under this profile's noise regime (a
+        // no-op without a model; "off"/"custom" are not calibrated names).
+        c.noise = match profile_name.as_str() {
+            "off" | "custom" => None,
+            name => Some(name.to_string()),
+        };
         let points = run_sweep(&c);
         let mut sum = 0.0;
         let mut max = 0.0f64;
@@ -136,16 +151,22 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosReport {
                 max_label = format!("{}/{}/n{}", b.matrix, b.algo, b.nodes);
             }
         }
+        let dispatch_flips = baseline
+            .iter()
+            .zip(&points)
+            .filter(|(b, f)| b.dispatch != f.dispatch)
+            .count();
         runs.push(ChaosRun {
             seed,
             points,
             mean_inflation: if n > 0 { sum / n as f64 } else { 0.0 },
             max_inflation: max,
             max_label,
+            dispatch_flips,
         });
     }
     ChaosReport {
-        profile_name: profile_label(&cfg.profile),
+        profile_name,
         baseline,
         runs,
         violations,
@@ -154,7 +175,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosReport {
 
 /// Best-effort name for a profile (matches the CLI spellings for the
 /// stock profiles; custom knob combinations print as "custom").
-fn profile_label(p: &FaultProfile) -> String {
+pub fn profile_label(p: &FaultProfile) -> String {
     for name in ["off", "light", "heavy", "jitter", "straggler", "rendezvous", "duplicate"] {
         if FaultProfile::parse(name).as_ref() == Ok(p) {
             return name.to_string();
@@ -186,6 +207,21 @@ mod tests {
         assert!(text.contains("chaos sweep"));
         assert!(text.contains("traffic invariance: OK"));
         assert!(text.contains("heavy"));
+    }
+
+    #[test]
+    fn model_noise_flips_the_dispatch_column() {
+        // With the embedded evidence model loaded, heavy-profile re-runs
+        // dispatch under "heavy" noise; small/crs buckets flip from
+        // personalized to nonblocking, so every point reports a flip.
+        let mut base = SweepConfig::quick(FigureId::Fig5, 400);
+        base.nodes = vec![2];
+        base.matrices.truncate(1);
+        base.dispatch = Some(crate::mpix::DispatchModel::embedded().clone());
+        let cfg = ChaosConfig::new(base, vec![1], FaultProfile::heavy());
+        let rep = run_chaos(&cfg);
+        assert_eq!(rep.runs[0].dispatch_flips, rep.baseline.len());
+        assert!(rep.render().contains("dispatch flips"));
     }
 
     #[test]

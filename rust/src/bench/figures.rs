@@ -4,16 +4,18 @@
 //! patterns once from the row-deterministic generator, run one simulated
 //! SDDE, and record the maximum per-rank virtual time of the exchange
 //! (all ranks enter together after a barrier) plus trace-derived traffic
-//! metrics (the [`crate::trace`] rollup in counters-only mode).
+//! metrics (the [`crate::trace`] rollup in counters-only mode). Every
+//! point also records what the [`crate::mpix::dispatch`] layer would have
+//! picked for that cell (the `dispatch` column) — the legacy heuristic by
+//! default, the loaded evidence model when `SweepConfig::dispatch` is set.
 
 use std::rc::Rc;
 
 use super::par::{run_cells, timed, CellBench, Progress, ProgressSink, SweepBench};
-use crate::mpi::World;
-use crate::mpix::{
-    alltoall_crs, alltoallv_crs, IntraAlgo, MpixComm, MpixInfo, SddeAlgorithm,
-};
-use crate::simnet::{CostModel, FaultPlan, MpiFlavor, RegionKind, SimStats, Time, Topology};
+use super::runspec::RunSpec;
+use crate::mpix::dispatch;
+use crate::mpix::{DispatchModel, IntraAlgo, PatternStats, SddeAlgorithm};
+use crate::simnet::{FaultPlan, MpiFlavor, RegionKind, Time, Topology};
 use crate::sparse::{MatrixPreset, Partition, SpmvPattern};
 use crate::trace::{Trace, TraceConfig, TraceSummary};
 
@@ -100,6 +102,12 @@ pub struct SweepConfig {
     /// so results stay byte-identical for any `jobs` value. `None` (and
     /// the inactive plan) leave the sweep bit-identical to fault-free.
     pub faults: Option<FaultPlan>,
+    /// Evidence model reported in the per-point `dispatch` column (and
+    /// consulted when an algorithm under test is `Dispatch`). `None` =
+    /// legacy heuristic.
+    pub dispatch: Option<DispatchModel>,
+    /// Noise regime handed to model-driven dispatch decisions.
+    pub noise: Option<String>,
 }
 
 impl SweepConfig {
@@ -122,6 +130,8 @@ impl SweepConfig {
             progress: ProgressSink::Stderr,
             jobs: 1,
             faults: None,
+            dispatch: None,
+            noise: None,
         }
     }
 
@@ -152,6 +162,44 @@ pub struct Point {
     pub total_msgs: u64,
     /// Mean per-rank destinations (send_nnz) — pattern statistic.
     pub mean_send_nnz: f64,
+    /// What the dispatch layer picks for this cell's pattern regime (the
+    /// heuristic, or the sweep's loaded model under `SweepConfig::noise`).
+    pub dispatch: &'static str,
+}
+
+/// Aggregate [`PatternStats`] for a whole pattern set — the sweep-level
+/// view of what one rank's [`PatternStats::measure`] sees inside an SDDE
+/// call: mean destinations per rank, pooled local fraction.
+pub fn pattern_set_stats(
+    topo: &Topology,
+    region: RegionKind,
+    variant: Variant,
+    patterns: &[SpmvPattern],
+) -> PatternStats {
+    let n = patterns.len().max(1);
+    let mean_nnz =
+        patterns.iter().map(|p| p.recv_nnz()).sum::<usize>() as f64 / n as f64;
+    let (mut local, mut total) = (0usize, 0usize);
+    for p in patterns {
+        let me = topo.region_of(p.rank, region);
+        local += p
+            .needed
+            .iter()
+            .filter(|(o, _)| topo.region_of(*o, region) == me)
+            .count();
+        total += p.needed.len();
+    }
+    PatternStats {
+        nranks: topo.nranks(),
+        region_size: topo.region_size(0, region),
+        send_nnz: mean_nnz.round() as usize,
+        local_frac: if total == 0 {
+            0.0
+        } else {
+            local as f64 / total as f64
+        },
+        constant: variant == Variant::ConstSize,
+    }
 }
 
 /// Run a sweep and return every measured point.
@@ -218,6 +266,18 @@ fn run_figure_cell(
     );
     let mean_send_nnz =
         patterns.iter().map(|p| p.recv_nnz() as f64).sum::<f64>() / nranks as f64;
+    // The dispatch column: one decision per cell, from the aggregate
+    // pattern regime — reported even when sweeping explicit algorithms.
+    let stats = pattern_set_stats(&topo, cfg.region, cfg.variant, &patterns);
+    let pick =
+        dispatch::select(cfg.dispatch.as_ref(), &stats, cfg.noise.as_deref());
+    let spec = RunSpec::new(topo, cfg.flavor)
+        .region(cfg.region)
+        .intra(cfg.intra)
+        .seed(cfg.seed)
+        .faults(faults)
+        .dispatch(cfg.dispatch.clone())
+        .noise(cfg.noise.clone());
     let mut points = Vec::new();
     let mut cell = CellBench {
         label: format!("{} nodes={nodes}", preset.name),
@@ -229,91 +289,37 @@ fn run_figure_cell(
         if cfg.variant == Variant::Variable && algo == SddeAlgorithm::Rma {
             continue;
         }
-        let (time_ns, summary, stats) = run_once_stats_faulted(
-            topo.clone(),
-            cfg.flavor,
-            algo,
-            cfg.region,
-            cfg.intra,
-            cfg.variant,
-            patterns.clone(),
-            faults,
-        );
-        cell.host_ns += stats.host_ns;
-        cell.events_run += stats.events_run;
-        cell.polls += stats.polls;
+        let run = spec
+            .clone()
+            .algo(algo)
+            .run_sdde(cfg.variant, patterns.clone());
+        cell.host_ns += run.stats.host_ns;
+        cell.events_run += run.stats.events_run;
+        cell.polls += run.stats.polls;
         pr.line(format!(
             "[sweep]   {:>17}: {:>12}  max-internode={}",
             algo.name(),
-            crate::util::fmt::ns(time_ns),
-            summary.max_internode_per_rank()
+            crate::util::fmt::ns(run.time_ns),
+            run.summary().max_internode_per_rank()
         ));
         points.push(Point {
             matrix: preset.name.clone(),
             algo: algo.name(),
             nodes,
             ranks: nranks,
-            time_ns,
-            max_internode: summary.max_internode_per_rank(),
-            total_msgs: summary.total_user_msgs(),
+            time_ns: run.time_ns,
+            max_internode: run.summary().max_internode_per_rank(),
+            total_msgs: run.summary().total_user_msgs(),
             mean_send_nnz,
+            dispatch: pick.algo.name(),
         });
     }
     (points, cell)
 }
 
-/// Run one SDDE on a fresh world with the given trace mode and optional
-/// fault plan.
-#[allow(clippy::too_many_arguments)]
-fn run_world(
-    topo: Topology,
-    flavor: MpiFlavor,
-    algo: SddeAlgorithm,
-    region: RegionKind,
-    intra: IntraAlgo,
-    variant: Variant,
-    patterns: Rc<Vec<SpmvPattern>>,
-    trace: TraceConfig,
-    faults: Option<FaultPlan>,
-) -> crate::mpi::RunOutput<Time> {
-    let world = World::builder(topo, CostModel::preset(flavor))
-        .trace(trace)
-        .faults(faults)
-        .build();
-    world.run(move |c| {
-        let patterns = patterns.clone();
-        async move {
-            let mx = MpixComm::new(c.clone(), region);
-            let info = MpixInfo {
-                algorithm: algo,
-                region,
-                intra,
-                ..MpixInfo::default()
-            };
-            let pat = &patterns[c.rank()];
-            // Align all ranks, then time only the exchange itself.
-            c.barrier().await;
-            let t0 = c.now();
-            match variant {
-                Variant::ConstSize => {
-                    let args = pat.crs_size_args();
-                    let r = alltoall_crs(&mx, &info, &args).await.unwrap();
-                    std::hint::black_box(&r);
-                }
-                Variant::Variable => {
-                    let args = pat.crsv_args();
-                    let r = alltoallv_crs(&mx, &info, &args).await.unwrap();
-                    std::hint::black_box(&r);
-                }
-            }
-            c.now() - t0
-        }
-    })
-}
-
 /// Run one SDDE on a fresh world; returns (max per-rank elapsed, trace
-/// rollup). The rollup mirrors the legacy `Counters` on the shared metrics
-/// (checked by a debug assertion and the conservation tests).
+/// rollup). Thin wrapper over [`RunSpec::run_sdde`] kept for external
+/// callers (ablations, conservation tests); sweeps build specs directly.
 pub fn run_once(
     topo: Topology,
     flavor: MpiFlavor,
@@ -323,56 +329,12 @@ pub fn run_once(
     variant: Variant,
     patterns: Rc<Vec<SpmvPattern>>,
 ) -> (Time, TraceSummary) {
-    let (t, summary, _) =
-        run_once_stats(topo, flavor, algo, region, intra, variant, patterns);
-    (t, summary)
-}
-
-/// [`run_once`] plus the executor's host-side stats (wall ns, events,
-/// polls) — the sweep engine aggregates these into its [`SweepBench`].
-#[allow(clippy::too_many_arguments)]
-pub fn run_once_stats(
-    topo: Topology,
-    flavor: MpiFlavor,
-    algo: SddeAlgorithm,
-    region: RegionKind,
-    intra: IntraAlgo,
-    variant: Variant,
-    patterns: Rc<Vec<SpmvPattern>>,
-) -> (Time, TraceSummary, SimStats) {
-    run_once_stats_faulted(topo, flavor, algo, region, intra, variant, patterns, None)
-}
-
-/// [`run_once_stats`] under an optional seeded fault plan (chaos sweeps;
-/// `None` is bit-identical to the unfaulted path).
-#[allow(clippy::too_many_arguments)]
-pub fn run_once_stats_faulted(
-    topo: Topology,
-    flavor: MpiFlavor,
-    algo: SddeAlgorithm,
-    region: RegionKind,
-    intra: IntraAlgo,
-    variant: Variant,
-    patterns: Rc<Vec<SpmvPattern>>,
-    faults: Option<FaultPlan>,
-) -> (Time, TraceSummary, SimStats) {
-    let out = run_world(
-        topo,
-        flavor,
-        algo,
-        region,
-        intra,
-        variant,
-        patterns,
-        TraceConfig::counters_only(),
-        faults,
-    );
-    let summary = out.trace.summary;
-    debug_assert_eq!(summary.user_msgs(), out.counters.user_msgs);
-    debug_assert_eq!(summary.user_bytes(), out.counters.user_bytes);
-    debug_assert_eq!(summary.internode_sent, out.counters.internode_sent);
-    let elapsed = out.results.into_iter().max().unwrap_or(0);
-    (elapsed, summary, out.exec_stats)
+    let run = RunSpec::new(topo, flavor)
+        .algo(algo)
+        .region(region)
+        .intra(intra)
+        .run_sdde(variant, patterns);
+    (run.time_ns, run.trace.summary)
 }
 
 /// Like [`run_once`] but with full event recording: returns the complete
@@ -386,36 +348,13 @@ pub fn run_once_traced(
     variant: Variant,
     patterns: Rc<Vec<SpmvPattern>>,
 ) -> (Time, Trace) {
-    run_once_traced_faulted(topo, flavor, algo, region, intra, variant, patterns, None)
-}
-
-/// [`run_once_traced`] under an optional seeded fault plan — the trace
-/// then carries `EventKind::Fault` annotations, so `sdde trace` can
-/// attribute makespan inflation to the injected faults.
-#[allow(clippy::too_many_arguments)]
-pub fn run_once_traced_faulted(
-    topo: Topology,
-    flavor: MpiFlavor,
-    algo: SddeAlgorithm,
-    region: RegionKind,
-    intra: IntraAlgo,
-    variant: Variant,
-    patterns: Rc<Vec<SpmvPattern>>,
-    faults: Option<FaultPlan>,
-) -> (Time, Trace) {
-    let out = run_world(
-        topo,
-        flavor,
-        algo,
-        region,
-        intra,
-        variant,
-        patterns,
-        TraceConfig::full(),
-        faults,
-    );
-    let elapsed = out.results.into_iter().max().unwrap_or(0);
-    (elapsed, out.trace)
+    let run = RunSpec::new(topo, flavor)
+        .algo(algo)
+        .region(region)
+        .intra(intra)
+        .trace(TraceConfig::full())
+        .run_sdde(variant, patterns);
+    (run.time_ns, run.trace)
 }
 
 #[cfg(test)]
@@ -432,6 +371,9 @@ mod tests {
         assert_eq!(pts.len(), 2 * 2 * 4);
         for p in &pts {
             assert!(p.time_ns > 0, "{p:?}");
+            // No model loaded: the dispatch column is the heuristic pick,
+            // and small sparse worlds resolve to Personalized.
+            assert_eq!(p.dispatch, "personalized", "{p:?}");
         }
     }
 
@@ -504,6 +446,26 @@ mod tests {
         for (b, f) in base.iter().zip(&serial) {
             assert_eq!(b.max_internode, f.max_internode, "{}", b.algo);
             assert_eq!(b.total_msgs, f.total_msgs, "{}", b.algo);
+        }
+    }
+
+    #[test]
+    fn model_changes_the_dispatch_column_not_the_points() {
+        // Loading a model re-labels the dispatch column; the measured
+        // points for explicit algorithms are untouched.
+        let mut cfg = SweepConfig::quick(FigureId::Fig5, 400);
+        cfg.nodes = vec![2];
+        cfg.matrices.truncate(1);
+        let base = run_sweep(&cfg);
+        cfg.dispatch = Some(crate::mpix::DispatchModel::embedded().clone());
+        let modeled = run_sweep(&cfg);
+        assert_eq!(base.len(), modeled.len());
+        for (b, m) in base.iter().zip(&modeled) {
+            assert_eq!(b.time_ns, m.time_ns, "{}", b.algo);
+            assert_eq!(b.max_internode, m.max_internode, "{}", b.algo);
+            // Both columns carry *some* valid pick.
+            assert!(SddeAlgorithm::parse(b.dispatch).is_ok());
+            assert!(SddeAlgorithm::parse(m.dispatch).is_ok());
         }
     }
 

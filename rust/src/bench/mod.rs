@@ -1,26 +1,32 @@
 //! Figure-regeneration harness: sweeps node counts × matrices × algorithms
 //! × MPI flavors and reports the virtual SDDE time plus the paper's
-//! red-dot metric (max inter-node messages per rank). One [`figures`]
-//! sweep per paper figure (5–8); [`neighbor`] sweeps the steady-state
-//! persistent neighborhood collectives; [`report`] renders tables/CSV;
-//! [`par`] runs independent sweep cells on worker threads with
-//! bit-identical results and ordered progress output; [`chaos`] re-runs a
-//! figure sweep under seeded fault plans and reports makespan inflation.
+//! red-dot metric (max inter-node messages per rank). [`runspec`] is the
+//! single builder every harness run goes through (pattern × algorithm ×
+//! faults × trace × dispatch model); one [`figures`] sweep per paper
+//! figure (5–8); [`neighbor`] sweeps the steady-state persistent
+//! neighborhood collectives; [`report`] renders tables/CSV; [`par`] runs
+//! independent sweep cells on worker threads with bit-identical results
+//! and ordered progress output; [`chaos`] re-runs a figure sweep under
+//! seeded fault plans and reports makespan inflation; [`calibrate`]
+//! distills figure + chaos sweeps into a [`crate::mpix::DispatchModel`].
 
+pub mod calibrate;
 pub mod chaos;
 pub mod figures;
 pub mod neighbor;
 pub mod par;
 pub mod report;
+pub mod runspec;
 
-pub use chaos::{run_chaos, ChaosConfig, ChaosReport, ChaosRun};
+pub use calibrate::{run_calibrate, CalibrateConfig};
+pub use chaos::{profile_label, run_chaos, ChaosConfig, ChaosReport, ChaosRun};
 pub use figures::{
-    run_once, run_once_stats, run_once_stats_faulted, run_once_traced, run_once_traced_faulted,
-    run_sweep, run_sweep_bench, FigureId, Point, SweepConfig, Variant,
+    pattern_set_stats, run_once, run_once_traced, run_sweep, run_sweep_bench, FigureId, Point,
+    SweepConfig, Variant,
 };
 pub use neighbor::{
-    run_halo_once, run_halo_once_faulted, run_halo_once_stats, run_neighbor_sweep,
-    run_neighbor_sweep_bench, HaloMethod, NeighborPoint, NeighborSweepConfig,
+    run_halo_once, run_neighbor_sweep, run_neighbor_sweep_bench, HaloMethod, NeighborPoint,
+    NeighborSweepConfig,
 };
 pub use par::{
     resolve_jobs, run_cells, CellBench, Progress, ProgressSink, SweepBench,
@@ -28,3 +34,4 @@ pub use par::{
 pub use report::{
     render_figure, render_neighbor_figure, write_bench_json, write_csv, write_neighbor_csv,
 };
+pub use runspec::{HaloRun, RunSpec, SddeRun};

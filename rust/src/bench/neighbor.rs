@@ -12,12 +12,11 @@
 use std::rc::Rc;
 
 use super::par::{run_cells, timed, CellBench, ProgressSink, SweepBench};
-use crate::mpi::World;
-use crate::mpix::{MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
-use crate::simnet::{CostModel, FaultPlan, MpiFlavor, RegionKind, SimStats, Time, Topology};
-use crate::solver::DistMatrix;
-use crate::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
-use crate::trace::TraceConfig;
+use super::runspec::RunSpec;
+use crate::mpix::dispatch;
+use crate::mpix::{DispatchModel, SddeAlgorithm};
+use crate::simnet::{FaultPlan, MpiFlavor, RegionKind, Time, Topology};
+use crate::sparse::{MatrixPreset, Partition, SpmvPattern};
 
 /// Halo-exchange engine under measurement.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -76,6 +75,11 @@ pub struct NeighborSweepConfig {
     /// cell derives a child plan from its index, so any `jobs` value
     /// yields byte-identical output. `None` = fault-free.
     pub faults: Option<FaultPlan>,
+    /// Evidence model for the per-point `dispatch` column and for
+    /// model-driven formation when `algo == Dispatch`.
+    pub dispatch: Option<DispatchModel>,
+    /// Noise regime handed to model-driven dispatch decisions.
+    pub noise: Option<String>,
 }
 
 impl NeighborSweepConfig {
@@ -98,6 +102,8 @@ impl NeighborSweepConfig {
             progress: ProgressSink::Silent,
             jobs: 1,
             faults: None,
+            dispatch: None,
+            noise: None,
         }
     }
 }
@@ -120,10 +126,15 @@ pub struct NeighborPoint {
     /// Max over ranks of inter-node user messages sent during the loop,
     /// divided by `iters` (steady-state red dots).
     pub internode_per_iter: f64,
+    /// What the dispatch layer picks for this cell's formation pattern
+    /// (rank 0's variable-size SDDE regime).
+    pub dispatch: &'static str,
 }
 
 /// Run one steady-state measurement; returns
 /// (max setup ns, max loop ns, max per-rank inter-node sends in the loop).
+/// Thin wrapper over [`RunSpec::run_halo`] kept for external callers.
+#[allow(clippy::too_many_arguments)]
 pub fn run_halo_once(
     topo: Topology,
     flavor: MpiFlavor,
@@ -134,93 +145,12 @@ pub fn run_halo_once(
     preset: Rc<MatrixPreset>,
     seed: u64,
 ) -> (Time, Time, u64) {
-    let (setup, loop_t, sent, _) =
-        run_halo_once_stats(topo, flavor, algo, region, method, iters, preset, seed);
-    (setup, loop_t, sent)
-}
-
-/// [`run_halo_once`] plus the executor's host-side stats.
-#[allow(clippy::too_many_arguments)]
-pub fn run_halo_once_stats(
-    topo: Topology,
-    flavor: MpiFlavor,
-    algo: SddeAlgorithm,
-    region: RegionKind,
-    method: HaloMethod,
-    iters: usize,
-    preset: Rc<MatrixPreset>,
-    seed: u64,
-) -> (Time, Time, u64, SimStats) {
-    run_halo_once_faulted(topo, flavor, algo, region, method, iters, preset, seed, None)
-}
-
-/// [`run_halo_once_stats`] under an optional seeded fault plan (`None` is
-/// bit-identical to the unfaulted path).
-#[allow(clippy::too_many_arguments)]
-pub fn run_halo_once_faulted(
-    topo: Topology,
-    flavor: MpiFlavor,
-    algo: SddeAlgorithm,
-    region: RegionKind,
-    method: HaloMethod,
-    iters: usize,
-    preset: Rc<MatrixPreset>,
-    seed: u64,
-    faults: Option<FaultPlan>,
-) -> (Time, Time, u64, SimStats) {
-    let part = Partition::new(preset.n, topo.nranks());
-    let world = World::builder(topo, CostModel::preset(flavor))
-        .trace(TraceConfig::counters_only())
-        .faults(faults)
-        .build();
-    let out = world.run(move |c| {
-        let preset = preset.clone();
-        async move {
-            let rank = c.rank();
-            let mx = MpixComm::new(c.clone(), region);
-            let info = MpixInfo {
-                algorithm: algo,
-                region,
-                ..MpixInfo::default()
-            };
-            let pat = SpmvPattern::build(&preset, part, rank, seed);
-            let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
-            let mut a = DistMatrix::build(&preset, part, rank, seed, pkg);
-
-            // Engine setup, timed separately from the steady state.
-            c.barrier().await;
-            let t0 = c.now();
-            match method {
-                HaloMethod::P2p => {}
-                HaloMethod::Persistent => a.init_halo(&mx, NeighborMethod::Standard).await,
-                HaloMethod::LocalityPersistent => {
-                    a.init_halo(&mx, NeighborMethod::Locality).await
-                }
-            }
-            let setup = c.now() - t0;
-
-            // Steady state: `iters` halo exchanges of a fixed vector.
-            c.barrier().await;
-            let sent0 = c.traced_internode_sent(rank);
-            let t1 = c.now();
-            let (s, e) = part.range(rank);
-            let x: Vec<f64> = (s..e).map(|i| (i % 23) as f64 - 11.0).collect();
-            let mut sink = 0.0;
-            for _ in 0..iters {
-                let x_ext = a.halo_exchange(&c, &x).await;
-                sink += x_ext.last().copied().unwrap_or(0.0);
-            }
-            let loop_t = c.now() - t1;
-            c.barrier().await;
-            let sent1 = c.traced_internode_sent(rank);
-            std::hint::black_box(sink);
-            (setup, loop_t, sent1 - sent0)
-        }
-    });
-    let setup = out.results.iter().map(|r| r.0).max().unwrap_or(0);
-    let loop_t = out.results.iter().map(|r| r.1).max().unwrap_or(0);
-    let sent = out.results.iter().map(|r| r.2).max().unwrap_or(0);
-    (setup, loop_t, sent, out.exec_stats)
+    let run = RunSpec::new(topo, flavor)
+        .algo(algo)
+        .region(region)
+        .seed(seed)
+        .run_halo(method, iters, preset);
+    (run.setup_ns, run.loop_ns, run.internode_sent)
 }
 
 /// Run the full sweep and return every measured point.
@@ -253,24 +183,28 @@ pub fn run_neighbor_sweep_bench(
             let topo = Topology::quartz(nodes, cfg.ppn);
             let ranks = topo.nranks();
             let faults = cfg.faults.map(|p| p.for_cell(i as u64));
-            let (setup_ns, loop_ns, sent, stats) = run_halo_once_faulted(
-                topo,
-                cfg.flavor,
-                cfg.algo,
-                cfg.region,
-                method,
-                iters,
-                preset.clone(),
-                cfg.seed,
-                faults,
-            );
+            // The dispatch column: rank 0's formation-pattern regime
+            // (variable-size — form_commpkg rides MPIX_Alltoallv_crs).
+            let part = Partition::new(preset.n, ranks);
+            let stats = SpmvPattern::build(&preset, part, 0, cfg.seed)
+                .dispatch_stats(&topo, cfg.region, false);
+            let pick =
+                dispatch::select(cfg.dispatch.as_ref(), &stats, cfg.noise.as_deref());
+            let run = RunSpec::new(topo, cfg.flavor)
+                .algo(cfg.algo)
+                .region(cfg.region)
+                .seed(cfg.seed)
+                .faults(faults)
+                .dispatch(cfg.dispatch.clone())
+                .noise(cfg.noise.clone())
+                .run_halo(method, iters, preset.clone());
             pr.line(format!(
                 "[neighbor] {} nodes={nodes} {:>14} iters={iters:>5}: \
                  {}/iter (setup {})",
                 preset.name,
                 method.name(),
-                crate::util::fmt::ns((loop_ns as f64 / iters as f64) as u64),
-                crate::util::fmt::ns(setup_ns),
+                crate::util::fmt::ns((run.loop_ns as f64 / iters as f64) as u64),
+                crate::util::fmt::ns(run.setup_ns),
             ));
             let point = NeighborPoint {
                 matrix: preset.name.clone(),
@@ -279,10 +213,11 @@ pub fn run_neighbor_sweep_bench(
                 nodes,
                 ranks,
                 iters,
-                setup_ns,
-                loop_ns,
-                per_iter_ns: loop_ns as f64 / iters as f64,
-                internode_per_iter: sent as f64 / iters as f64,
+                setup_ns: run.setup_ns,
+                loop_ns: run.loop_ns,
+                per_iter_ns: run.loop_ns as f64 / iters as f64,
+                internode_per_iter: run.internode_sent as f64 / iters as f64,
+                dispatch: pick.algo.name(),
             };
             let cell = CellBench {
                 label: format!(
@@ -290,9 +225,9 @@ pub fn run_neighbor_sweep_bench(
                     preset.name,
                     method.name()
                 ),
-                host_ns: stats.host_ns,
-                events_run: stats.events_run,
-                polls: stats.polls,
+                host_ns: run.stats.host_ns,
+                events_run: run.stats.events_run,
+                polls: run.stats.polls,
             };
             (point, cell)
         })
@@ -325,6 +260,8 @@ mod tests {
             if p.method == "p2p" {
                 assert_eq!(p.setup_ns, 0, "legacy path has no setup: {p:?}");
             }
+            // No model loaded: the column is the heuristic's crsv pick.
+            assert!(SddeAlgorithm::parse(p.dispatch).is_ok(), "{p:?}");
         }
     }
 

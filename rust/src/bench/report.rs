@@ -221,12 +221,12 @@ pub fn write_neighbor_csv(path: &Path, points: &[NeighborPoint]) -> Result<()> {
         std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
     writeln!(
         f,
-        "matrix,method,mpi,nodes,ranks,iters,setup_ns,loop_ns,per_iter_ns,internode_per_iter"
+        "matrix,method,mpi,nodes,ranks,iters,setup_ns,loop_ns,per_iter_ns,internode_per_iter,dispatch"
     )?;
     for p in points {
         writeln!(
             f,
-            "{},{},{},{},{},{},{},{},{:.2},{:.2}",
+            "{},{},{},{},{},{},{},{},{:.2},{:.2},{}",
             p.matrix,
             p.method,
             p.flavor,
@@ -236,7 +236,8 @@ pub fn write_neighbor_csv(path: &Path, points: &[NeighborPoint]) -> Result<()> {
             p.setup_ns,
             p.loop_ns,
             p.per_iter_ns,
-            p.internode_per_iter
+            p.internode_per_iter,
+            p.dispatch
         )?;
     }
     Ok(())
@@ -305,14 +306,14 @@ pub fn write_csv(path: &Path, points: &[Point]) -> Result<()> {
         std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
     writeln!(
         f,
-        "matrix,algo,nodes,ranks,time_ns,max_internode_msgs,total_msgs,mean_send_nnz"
+        "matrix,algo,nodes,ranks,time_ns,max_internode_msgs,total_msgs,mean_send_nnz,dispatch"
     )?;
     for p in points {
         writeln!(
             f,
-            "{},{},{},{},{},{},{},{:.2}",
+            "{},{},{},{},{},{},{},{:.2},{}",
             p.matrix, p.algo, p.nodes, p.ranks, p.time_ns, p.max_internode, p.total_msgs,
-            p.mean_send_nnz
+            p.mean_send_nnz, p.dispatch
         )?;
     }
     Ok(())
@@ -332,6 +333,7 @@ mod tests {
             max_internode: msgs,
             total_msgs: msgs * 10,
             mean_send_nnz: 3.0,
+            dispatch: "personalized",
         }
     }
 
@@ -359,6 +361,7 @@ mod tests {
             loop_ns: (per_iter * iters as f64) as u64,
             per_iter_ns: per_iter,
             internode_per_iter: 4.0,
+            dispatch: "loc-nonblocking",
         }
     }
 
@@ -419,7 +422,7 @@ mod tests {
         write_csv(&path, &pts).unwrap();
         let content = std::fs::read_to_string(&path).unwrap();
         assert!(content.starts_with("matrix,algo"));
-        assert!(content.contains("m,rma,4,32,5,2,20,3.00"));
+        assert!(content.contains("m,rma,4,32,5,2,20,3.00,personalized"));
         std::fs::remove_file(path).ok();
     }
 }

@@ -1,0 +1,376 @@
+//! One builder for every single-world bench run.
+//!
+//! The bench layer used to grow a new free function per axis combination
+//! (`run_once`, `run_once_stats`, `run_once_stats_faulted`,
+//! `run_once_traced_faulted`, `run_halo_once_faulted`, ...). [`RunSpec`]
+//! collapses the axes — pattern × algorithm × faults × trace × dispatch
+//! model — into one value with two executors:
+//!
+//! * [`RunSpec::run_sdde`] — one timed SDDE on a fresh world → [`SddeRun`]
+//!   (max per-rank time, trace rollup and optional events, host stats).
+//! * [`RunSpec::run_halo`] — pattern formation + steady-state halo loop →
+//!   [`HaloRun`] (setup/loop times, inter-node sends, host stats).
+//!
+//! Figures, neighbor, chaos and calibrate sweeps all build their cells
+//! from specs; the legacy `run_once` / `run_once_traced` /
+//! `run_halo_once` entry points survive as thin wrappers for external
+//! callers (tests, benches, examples).
+//!
+//! Every world a spec builds arms the virtual-time quiescence watchdog
+//! when the `SDDE_WATCHDOG` environment variable is set (a horizon in
+//! virtual ns): a CI hang then dies with a rendered
+//! [`crate::mpi::WaitGraph`] in the log instead of a dead timeout — the
+//! ROADMAP's watchdog-guided triage.
+
+use std::rc::Rc;
+
+use super::figures::Variant;
+use super::neighbor::HaloMethod;
+use crate::mpi::World;
+use crate::mpix::{
+    alltoall_crs, alltoallv_crs, DispatchModel, IntraAlgo, MpixComm, MpixInfo,
+    NeighborMethod, SddeAlgorithm,
+};
+use crate::simnet::{CostModel, FaultPlan, MpiFlavor, RegionKind, SimStats, Time, Topology};
+use crate::solver::DistMatrix;
+use crate::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
+use crate::trace::{Trace, TraceConfig, TraceSummary};
+
+/// Watchdog horizon from `SDDE_WATCHDOG` (virtual ns); unset/invalid = no
+/// watchdog, matching behavior before the variable existed.
+fn watchdog_from_env() -> Option<Time> {
+    std::env::var("SDDE_WATCHDOG")
+        .ok()
+        .and_then(|s| s.trim().parse::<Time>().ok())
+        .filter(|&h| h > 0)
+}
+
+/// Everything that parameterizes one simulated bench run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub topo: Topology,
+    pub flavor: MpiFlavor,
+    pub algo: SddeAlgorithm,
+    pub region: RegionKind,
+    pub intra: IntraAlgo,
+    /// Pattern seed (halo runs build their patterns internally).
+    pub seed: u64,
+    pub faults: Option<FaultPlan>,
+    pub trace: TraceConfig,
+    /// Evidence model for `SddeAlgorithm::Dispatch`; `None` = legacy
+    /// heuristic (bit-identical picks).
+    pub dispatch: Option<DispatchModel>,
+    /// Noise regime handed to model-driven dispatch (fault-profile name).
+    pub noise: Option<String>,
+    /// Virtual-time quiescence horizon; defaults from `SDDE_WATCHDOG`.
+    pub watchdog: Option<Time>,
+}
+
+impl RunSpec {
+    pub fn new(topo: Topology, flavor: MpiFlavor) -> RunSpec {
+        RunSpec {
+            topo,
+            flavor,
+            algo: SddeAlgorithm::Dispatch,
+            region: RegionKind::Node,
+            intra: IntraAlgo::Personalized,
+            seed: 2023,
+            faults: None,
+            trace: TraceConfig::counters_only(),
+            dispatch: None,
+            noise: None,
+            watchdog: watchdog_from_env(),
+        }
+    }
+
+    pub fn algo(mut self, algo: SddeAlgorithm) -> RunSpec {
+        self.algo = algo;
+        self
+    }
+
+    pub fn region(mut self, region: RegionKind) -> RunSpec {
+        self.region = region;
+        self
+    }
+
+    pub fn intra(mut self, intra: IntraAlgo) -> RunSpec {
+        self.intra = intra;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> RunSpec {
+        self.seed = seed;
+        self
+    }
+
+    pub fn faults(mut self, faults: Option<FaultPlan>) -> RunSpec {
+        self.faults = faults;
+        self
+    }
+
+    pub fn trace(mut self, trace: TraceConfig) -> RunSpec {
+        self.trace = trace;
+        self
+    }
+
+    pub fn dispatch(mut self, model: Option<DispatchModel>) -> RunSpec {
+        self.dispatch = model;
+        self
+    }
+
+    pub fn noise(mut self, noise: Option<String>) -> RunSpec {
+        self.noise = noise;
+        self
+    }
+
+    pub fn watchdog(mut self, horizon: Option<Time>) -> RunSpec {
+        self.watchdog = horizon;
+        self
+    }
+
+    /// The `MpixInfo` every rank of this spec's worlds uses.
+    fn info(&self, model: Option<Rc<DispatchModel>>) -> MpixInfo {
+        MpixInfo {
+            algorithm: self.algo,
+            region: self.region,
+            intra: self.intra,
+            dispatch_model: model,
+            dispatch_noise: self.noise.clone(),
+            ..MpixInfo::default()
+        }
+    }
+
+    fn build_world(&self, trace: TraceConfig) -> World {
+        let mut b = World::builder(self.topo.clone(), CostModel::preset(self.flavor))
+            .trace(trace)
+            .faults(self.faults);
+        if let Some(h) = self.watchdog {
+            b = b.watchdog(h);
+        }
+        b.build()
+    }
+
+    /// Run one timed SDDE (all ranks aligned by a barrier; only the
+    /// exchange is on the clock).
+    pub fn run_sdde(&self, variant: Variant, patterns: Rc<Vec<SpmvPattern>>) -> SddeRun {
+        let trace = self.trace;
+        let world = self.build_world(trace);
+        let region = self.region;
+        let model = self.dispatch.clone().map(Rc::new);
+        let spec_info = self.info(model);
+        let out = world.run(move |c| {
+            let patterns = patterns.clone();
+            let info = spec_info.clone();
+            async move {
+                let mx = MpixComm::new(c.clone(), region);
+                let pat = &patterns[c.rank()];
+                // Align all ranks, then time only the exchange itself.
+                c.barrier().await;
+                let t0 = c.now();
+                match variant {
+                    Variant::ConstSize => {
+                        let args = pat.crs_size_args();
+                        let r = alltoall_crs(&mx, &info, &args).await.unwrap();
+                        std::hint::black_box(&r);
+                    }
+                    Variant::Variable => {
+                        let args = pat.crsv_args();
+                        let r = alltoallv_crs(&mx, &info, &args).await.unwrap();
+                        std::hint::black_box(&r);
+                    }
+                }
+                c.now() - t0
+            }
+        });
+        if trace.counters {
+            // The rollup must mirror the legacy counters bit-for-bit
+            // (invariant 5; also proven by tests/trace_conservation.rs).
+            debug_assert_eq!(out.trace.summary.user_msgs(), out.counters.user_msgs);
+            debug_assert_eq!(out.trace.summary.user_bytes(), out.counters.user_bytes);
+            debug_assert_eq!(out.trace.summary.internode_sent, out.counters.internode_sent);
+        }
+        SddeRun {
+            time_ns: out.results.into_iter().max().unwrap_or(0),
+            trace: out.trace,
+            stats: out.exec_stats,
+        }
+    }
+
+    /// Run pattern formation plus a steady-state halo-exchange loop.
+    /// Counters are always on (the inter-node metric needs them); pass
+    /// `TraceConfig::full()` to also keep events.
+    pub fn run_halo(&self, method: HaloMethod, iters: usize, preset: Rc<MatrixPreset>) -> HaloRun {
+        let trace = if self.trace.is_enabled() {
+            self.trace
+        } else {
+            TraceConfig::counters_only()
+        };
+        let part = Partition::new(preset.n, self.topo.nranks());
+        let world = self.build_world(trace);
+        let region = self.region;
+        let seed = self.seed;
+        let model = self.dispatch.clone().map(Rc::new);
+        let spec_info = self.info(model);
+        let out = world.run(move |c| {
+            let preset = preset.clone();
+            let info = spec_info.clone();
+            async move {
+                let rank = c.rank();
+                let mx = MpixComm::new(c.clone(), region);
+                let pat = SpmvPattern::build(&preset, part, rank, seed);
+                let pkg = form_commpkg(&mx, &info, &pat).await.unwrap();
+                let mut a = DistMatrix::build(&preset, part, rank, seed, pkg);
+
+                // Engine setup, timed separately from the steady state.
+                c.barrier().await;
+                let t0 = c.now();
+                match method {
+                    HaloMethod::P2p => {}
+                    HaloMethod::Persistent => a.init_halo(&mx, NeighborMethod::Standard).await,
+                    HaloMethod::LocalityPersistent => {
+                        a.init_halo(&mx, NeighborMethod::Locality).await
+                    }
+                }
+                let setup = c.now() - t0;
+
+                // Steady state: `iters` halo exchanges of a fixed vector.
+                c.barrier().await;
+                let sent0 = c.traced_internode_sent(rank);
+                let t1 = c.now();
+                let (s, e) = part.range(rank);
+                let x: Vec<f64> = (s..e).map(|i| (i % 23) as f64 - 11.0).collect();
+                let mut sink = 0.0;
+                for _ in 0..iters {
+                    let x_ext = a.halo_exchange(&c, &x).await;
+                    sink += x_ext.last().copied().unwrap_or(0.0);
+                }
+                let loop_t = c.now() - t1;
+                c.barrier().await;
+                let sent1 = c.traced_internode_sent(rank);
+                std::hint::black_box(sink);
+                (setup, loop_t, sent1 - sent0)
+            }
+        });
+        HaloRun {
+            setup_ns: out.results.iter().map(|r| r.0).max().unwrap_or(0),
+            loop_ns: out.results.iter().map(|r| r.1).max().unwrap_or(0),
+            internode_sent: out.results.iter().map(|r| r.2).max().unwrap_or(0),
+            stats: out.exec_stats,
+        }
+    }
+}
+
+/// What one [`RunSpec::run_sdde`] measured.
+#[derive(Clone, Debug)]
+pub struct SddeRun {
+    /// Max per-rank virtual time of the SDDE call (ns).
+    pub time_ns: Time,
+    /// Rollup summary always; events only under `TraceConfig::full`.
+    pub trace: Trace,
+    /// Executor host-side stats (wall ns, events, polls).
+    pub stats: SimStats,
+}
+
+impl SddeRun {
+    pub fn summary(&self) -> &TraceSummary {
+        &self.trace.summary
+    }
+}
+
+/// What one [`RunSpec::run_halo`] measured.
+#[derive(Clone, Debug)]
+pub struct HaloRun {
+    /// Max per-rank virtual time of the engine setup (0 for legacy p2p).
+    pub setup_ns: Time,
+    /// Max per-rank virtual time of the whole iteration loop.
+    pub loop_ns: Time,
+    /// Max per-rank inter-node user messages sent during the loop.
+    pub internode_sent: u64,
+    pub stats: SimStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::figures::FigureId;
+
+    fn small_patterns(topo: &Topology, seed: u64) -> Rc<Vec<SpmvPattern>> {
+        let preset = MatrixPreset::cage14_like().scaled(400);
+        let part = Partition::new(preset.n, topo.nranks());
+        Rc::new(
+            (0..topo.nranks())
+                .map(|r| SpmvPattern::build(&preset, part, r, seed))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn spec_matches_legacy_wrapper_bit_for_bit() {
+        let topo = Topology::quartz(2, 4);
+        let patterns = small_patterns(&topo, 2023);
+        let fig = FigureId::Fig7;
+        let spec = RunSpec::new(topo.clone(), fig.flavor())
+            .algo(SddeAlgorithm::LocalityNonBlocking)
+            .watchdog(None);
+        let a = spec.run_sdde(fig.variant(), patterns.clone());
+        let (t, summary) = super::super::figures::run_once(
+            topo,
+            fig.flavor(),
+            SddeAlgorithm::LocalityNonBlocking,
+            RegionKind::Node,
+            IntraAlgo::Personalized,
+            fig.variant(),
+            patterns,
+        );
+        assert_eq!(a.time_ns, t);
+        assert_eq!(a.summary().user_msgs(), summary.user_msgs());
+    }
+
+    #[test]
+    fn trace_mode_keeps_events_without_moving_time() {
+        let topo = Topology::quartz(2, 4);
+        let patterns = small_patterns(&topo, 2023);
+        let spec = RunSpec::new(topo, MpiFlavor::Mvapich2)
+            .algo(SddeAlgorithm::NonBlocking)
+            .watchdog(None);
+        let counters = spec.clone().run_sdde(Variant::Variable, patterns.clone());
+        let full = spec
+            .trace(TraceConfig::full())
+            .run_sdde(Variant::Variable, patterns);
+        assert_eq!(counters.time_ns, full.time_ns);
+        assert!(counters.trace.events.is_empty());
+        assert!(!full.trace.events.is_empty());
+    }
+
+    #[test]
+    fn halo_spec_runs_all_methods() {
+        let topo = Topology::quartz(2, 4);
+        let preset = Rc::new(MatrixPreset::cage14_like().scaled(400));
+        let spec = RunSpec::new(topo, MpiFlavor::Mvapich2)
+            .algo(SddeAlgorithm::LocalityNonBlocking)
+            .watchdog(None);
+        for method in HaloMethod::ALL {
+            let r = spec.run_halo(method, 2, preset.clone());
+            assert!(r.loop_ns > 0, "{method:?}");
+            if method == HaloMethod::P2p {
+                assert_eq!(r.setup_ns, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn watchdog_horizon_leaves_results_unchanged() {
+        // Arming a generous watchdog must be observationally invisible.
+        let topo = Topology::quartz(2, 4);
+        let patterns = small_patterns(&topo, 7);
+        let base = RunSpec::new(topo.clone(), MpiFlavor::Mvapich2)
+            .algo(SddeAlgorithm::Personalized)
+            .watchdog(None)
+            .run_sdde(Variant::Variable, patterns.clone());
+        let dogged = RunSpec::new(topo, MpiFlavor::Mvapich2)
+            .algo(SddeAlgorithm::Personalized)
+            .watchdog(Some(10_000_000_000))
+            .run_sdde(Variant::Variable, patterns);
+        assert_eq!(base.time_ns, dogged.time_ns);
+    }
+}

@@ -22,6 +22,11 @@
 //!   unexpected messages, wait-cycle detection).
 //! * [`mpix`] — **the paper's contribution**: the MPI Advance-style SDDE
 //!   API and all five algorithms.
+//! * [`mpix::dispatch`] — evidence-driven algorithm selection: typed
+//!   [`mpix::PatternStats`] → [`mpix::Selection`] decisions, scored by a
+//!   calibrated [`mpix::DispatchModel`] (fault-inflation + critical-path
+//!   wait evidence) with a bit-identical heuristic fallback when no model
+//!   is loaded.
 //! * [`mpix::neighbor`] — the consumer side: distributed-graph topology
 //!   communicators ([`mpix::NeighborComm`]) and persistent (standard +
 //!   locality-aware) neighbor alltoallv built from SDDE-formed patterns.
@@ -53,8 +58,9 @@ pub mod util;
 pub mod prelude {
     pub use crate::mpi::{Comm, Payload, Tag, WaitGraph, World, ANY_SOURCE, ANY_TAG};
     pub use crate::mpix::{
-        alltoall_crs, alltoallv_crs, CrsArgs, CrsResult, CrsvArgs, CrsvResult, MpixComm,
-        MpixInfo, NeighborAlltoallv, NeighborComm, NeighborMethod, SddeAlgorithm,
+        alltoall_crs, alltoallv_crs, select_algorithm, CrsArgs, CrsResult, CrsvArgs,
+        CrsvResult, DispatchModel, MpixComm, MpixInfo, NeighborAlltoallv, NeighborComm,
+        NeighborMethod, PatternStats, SddeAlgorithm, Selection, SelectionSource,
     };
     pub use crate::simnet::{
         CostModel, FaultPlan, FaultProfile, MpiFlavor, RegionKind, Tier, Time, Topology,

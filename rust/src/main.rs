@@ -10,12 +10,20 @@
 //! * `solve`    — distributed CG/Jacobi solve over an SDDE-formed pattern.
 //! * `chaos`    — re-run a figure sweep under a battery of seeded fault
 //!   plans; report makespan inflation and check traffic invariance.
+//! * `dispatch` — print the evidence model's decision table for a pattern
+//!   regime (which algorithm wins per noise profile, and why).
+//! * `calibrate`— run figure + chaos sweeps and distill a dispatch model
+//!   (JSON) from the measured base costs, fault inflation and
+//!   critical-path wait shares.
 //! * `info`     — list matrix presets, algorithms and cost-model presets.
 //!
 //! `figures`, `neighbor`, `sdde` and `trace` accept
 //! `--faults SEED[:PROFILE]` to inject seeded network perturbation
 //! (jitter, stragglers, forced rendezvous, duplicate delivery); results
-//! must not change, only virtual time may.
+//! must not change, only virtual time may. All sweep commands accept
+//! `--dispatch-model embedded|none|PATH` (+ `--noise PROFILE`) to drive
+//! the dispatch layer from calibrated evidence instead of the legacy
+//! heuristic.
 //!
 //! Examples:
 //! ```text
@@ -27,23 +35,26 @@
 //! sdde trace --matrix cage14 --div 16 --nodes 4 --ppn 8 --out trace.json
 //! sdde solve --nx 48 --ny 48 --nodes 2 --ppn 4 --solver cg --halo loc
 //! sdde chaos --fig 5 --div 400 --nseeds 8 --profile heavy
+//! sdde dispatch --nodes 4 --ppn 8 --variant v
+//! sdde calibrate --div 400 --nodes 2,4 --profiles heavy,jitter --out model.json
 //! ```
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use sdde::bench::{
-    render_figure, render_neighbor_figure, resolve_jobs, run_chaos, run_neighbor_sweep_bench,
-    run_sweep_bench, write_bench_json, write_csv, write_neighbor_csv, ChaosConfig, FigureId,
-    HaloMethod, NeighborSweepConfig, ProgressSink, SweepBench, SweepConfig,
+    pattern_set_stats, render_figure, render_neighbor_figure, resolve_jobs, run_calibrate,
+    run_chaos, run_neighbor_sweep_bench, run_sweep_bench, write_bench_json, write_csv,
+    write_neighbor_csv, CalibrateConfig, ChaosConfig, FigureId, HaloMethod,
+    NeighborSweepConfig, ProgressSink, RunSpec, SweepBench, SweepConfig, Variant,
 };
 use sdde::mpi::World;
-use sdde::mpix::{IntraAlgo, MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
+use sdde::mpix::{dispatch, DispatchModel, MpixComm, MpixInfo, NeighborMethod, SddeAlgorithm};
 use sdde::simnet::{CostModel, FaultPlan, FaultProfile, MpiFlavor, RegionKind, Topology};
 use sdde::solver::{cg, jacobi, CsrLocal, DistMatrix};
 use sdde::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
-use sdde::trace::{critical_path, write_chrome_trace, write_trace_csv};
+use sdde::trace::{critical_path, write_chrome_trace, write_trace_csv, TraceConfig};
 use sdde::util::{fmt, Args};
 use std::rc::Rc;
 
@@ -57,6 +68,8 @@ fn main() {
         "trace" => cmd_trace(&args),
         "solve" => cmd_solve(&args),
         "chaos" => cmd_chaos(&args),
+        "dispatch" => cmd_dispatch(&args),
+        "calibrate" => cmd_calibrate(&args),
         "info" => cmd_info(),
         _ => {
             print_help();
@@ -72,19 +85,22 @@ fn main() {
 fn print_help() {
     println!(
         "sdde — A More Scalable Sparse Dynamic Data Exchange (reproduction)\n\n\
-         USAGE: sdde <figures|neighbor|sdde|trace|solve|chaos|info> [flags]\n\n\
+         USAGE: sdde <figures|neighbor|sdde|trace|solve|chaos|dispatch|calibrate|info> [flags]\n\n\
          figures --fig <5|6|7|8|all> [--quick] [--div N] [--out DIR]\n\
                  [--nodes 2,4,..] [--ppn N] [--matrices a,b] [--algos x,y]\n\
                  [--region node|socket] [--seed N] [--jobs N]\n\
                  [--faults SEED[:PROFILE]] [--bench-json FILE]\n\
+                 [--dispatch-model embedded|none|PATH] [--noise PROFILE]\n\
          neighbor [--nodes 2,4,..] [--ppn N] [--iters 1,16,256] [--div N]\n\
                  [--matrices a,b] [--methods p2p,persistent,loc-persistent]\n\
                  [--mpi openmpi|mvapich2|both] [--region node|socket]\n\
                  [--out DIR] [--seed N] [--jobs N]\n\
                  [--faults SEED[:PROFILE]] [--bench-json FILE]\n\
+                 [--dispatch-model embedded|none|PATH] [--noise PROFILE]\n\
          sdde    --matrix <preset> --nodes N [--ppn N] [--algo NAME]\n\
                  [--variant crs|v] [--mpi openmpi|mvapich2] [--div N]\n\
                  [--faults SEED[:PROFILE]]\n\
+                 [--dispatch-model embedded|none|PATH] [--noise PROFILE]\n\
          trace   [--matrix <preset>] [--div N] [--nodes N] [--ppn N]\n\
                  [--algo NAME] [--variant crs|v] [--mpi openmpi|mvapich2]\n\
                  [--seed N] [--faults SEED[:PROFILE]]\n\
@@ -94,7 +110,14 @@ fn print_help() {
          chaos   [--fig 5|6|7|8] [--div N] [--nodes 2,4,..] [--ppn N]\n\
                  [--matrices a,b] [--nseeds N | --seeds 1,2,..]\n\
                  [--profile light|heavy|jitter|straggler|rendezvous|duplicate]\n\
-                 [--jobs N]\n\
+                 [--jobs N] [--dispatch-model embedded|none|PATH]\n\
+         dispatch [--matrix <preset>] [--div N] [--nodes N] [--ppn N]\n\
+                 [--variant crs|v] [--region node|socket] [--seed N]\n\
+                 [--dispatch-model embedded|none|PATH]\n\
+         calibrate [--figs 5,7|all] [--div N] [--nodes 2,4] [--ppn N]\n\
+                 [--matrices a,b] [--profiles light,heavy,jitter,straggler]\n\
+                 [--nseeds N | --seeds 1,2,..] [--robustness W]\n\
+                 [--jobs N] [--out FILE.json] [--quiet]\n\
          info\n\n\
          fault profiles: light heavy jitter straggler rendezvous duplicate"
     );
@@ -107,14 +130,50 @@ fn parse_faults(args: &Args) -> Result<Option<FaultPlan>> {
         None => Ok(None),
         Some(s) => FaultPlan::parse(s)
             .map(Some)
-            .map_err(|e| anyhow::anyhow!("bad --faults {s}: {e}")),
+            .map_err(|e| anyhow!("bad --faults {s}: {e}")),
+    }
+}
+
+/// Shared `--dispatch-model embedded|none|PATH` parser. The flag being
+/// absent yields the embedded model only when `default_embedded` is set
+/// (`sdde dispatch`); everywhere else absence means "no model" — the
+/// legacy heuristic, bit-identical to the pre-model CLI.
+fn parse_dispatch(args: &Args, default_embedded: bool) -> Result<Option<DispatchModel>> {
+    match args.get("dispatch-model") {
+        None => Ok(default_embedded.then(|| DispatchModel::embedded().clone())),
+        Some("none") | Some("heuristic") => Ok(None),
+        Some("embedded") | Some("default") => Ok(Some(DispatchModel::embedded().clone())),
+        Some(path) => DispatchModel::load(Path::new(path)).map(Some),
+    }
+}
+
+fn parse_noise(args: &Args) -> Option<String> {
+    args.get("noise").map(|s| s.to_string())
+}
+
+fn parse_count(s: &str) -> Result<usize, String> {
+    s.parse::<usize>()
+        .ok()
+        .filter(|&v| v > 0)
+        .ok_or_else(|| "want a positive integer".to_string())
+}
+
+fn parse_algo(s: &str) -> Result<SddeAlgorithm, String> {
+    SddeAlgorithm::parse(s)
+}
+
+fn parse_variant(args: &Args, default: &str) -> Result<Variant> {
+    match args.get_or("variant", default) {
+        "v" | "alltoallv" => Ok(Variant::Variable),
+        "crs" | "alltoall" => Ok(Variant::ConstSize),
+        v => bail!("unknown variant {v} (want crs|v)"),
     }
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
     let figs: Vec<FigureId> = match args.get_or("fig", "all") {
         "all" => vec![FigureId::Fig5, FigureId::Fig6, FigureId::Fig7, FigureId::Fig8],
-        s => vec![FigureId::parse(s).ok_or_else(|| anyhow::anyhow!("unknown figure {s}"))?],
+        s => vec![FigureId::parse(s).ok_or_else(|| anyhow!("unknown figure {s}"))?],
     };
     let quick = args.has("quick");
     let div = args.get_parsed("div", if quick { 64 } else { 1 });
@@ -122,6 +181,8 @@ fn cmd_figures(args: &Args) -> Result<()> {
     // --jobs beats SDDE_JOBS beats serial; results are identical either way.
     let jobs = resolve_jobs(args.get("jobs").and_then(|s| s.parse().ok()));
     let faults = parse_faults(args)?;
+    let dispatch_model = parse_dispatch(args, false)?;
+    let noise = parse_noise(args);
     let mut benches: Vec<(String, SweepBench)> = Vec::new();
 
     for fig in figs {
@@ -133,14 +194,13 @@ fn cmd_figures(args: &Args) -> Result<()> {
         if !quick && div > 1 {
             cfg.matrices = cfg.matrices.iter().map(|m| m.scaled(div)).collect();
         }
-        if let Some(nodes) = args.get_list("nodes") {
-            cfg.nodes = nodes.iter().map(|s| s.parse().unwrap_or(2)).collect();
-        }
+        cfg.nodes = args
+            .get_list_with("nodes", cfg.nodes, parse_count)
+            .map_err(|e| anyhow!(e))?;
         cfg.ppn = args.get_parsed("ppn", cfg.ppn);
         cfg.seed = args.get_parsed("seed", cfg.seed);
         if let Some(r) = args.get("region") {
-            cfg.region = RegionKind::parse(r)
-                .ok_or_else(|| anyhow::anyhow!("unknown region {r}"))?;
+            cfg.region = RegionKind::parse(r).ok_or_else(|| anyhow!("unknown region {r}"))?;
         }
         if let Some(ms) = args.get_list("matrices") {
             cfg.matrices = ms
@@ -148,20 +208,17 @@ fn cmd_figures(args: &Args) -> Result<()> {
                 .map(|m| {
                     MatrixPreset::parse(m)
                         .map(|p| if div > 1 { p.scaled(div) } else { p })
-                        .ok_or_else(|| anyhow::anyhow!("unknown matrix {m}"))
+                        .ok_or_else(|| anyhow!("unknown matrix {m}"))
                 })
                 .collect::<Result<_>>()?;
         }
-        if let Some(al) = args.get_list("algos") {
-            cfg.algos = al
-                .iter()
-                .map(|a| {
-                    SddeAlgorithm::parse(a).ok_or_else(|| anyhow::anyhow!("unknown algo {a}"))
-                })
-                .collect::<Result<_>>()?;
-        }
+        cfg.algos = args
+            .get_list_with("algos", cfg.algos, parse_algo)
+            .map_err(|e| anyhow!(e))?;
         cfg.jobs = jobs;
         cfg.faults = faults;
+        cfg.dispatch = dispatch_model.clone();
+        cfg.noise = noise.clone();
         let fig_no = match fig {
             FigureId::Fig5 => 5,
             FigureId::Fig6 => 6,
@@ -191,41 +248,26 @@ fn cmd_neighbor(args: &Args) -> Result<()> {
     let div = args.get_parsed("div", 16usize);
     let flavors: Vec<MpiFlavor> = match args.get_or("mpi", "both") {
         "both" | "all" => vec![MpiFlavor::Mvapich2, MpiFlavor::OpenMpi],
-        s => vec![MpiFlavor::parse(s).ok_or_else(|| anyhow::anyhow!("unknown mpi flavor {s}"))?],
+        s => vec![MpiFlavor::parse(s).ok_or_else(|| anyhow!("unknown mpi flavor {s}"))?],
     };
     let out_dir = args.get("out").map(PathBuf::from);
     let jobs = resolve_jobs(args.get("jobs").and_then(|s| s.parse().ok()));
     let faults = parse_faults(args)?;
+    let dispatch_model = parse_dispatch(args, false)?;
+    let noise = parse_noise(args);
     let mut benches: Vec<(String, SweepBench)> = Vec::new();
     for flavor in flavors {
         let mut cfg = NeighborSweepConfig::quick(flavor, div);
-        if let Some(nodes) = args.get_list("nodes") {
-            cfg.nodes = nodes
-                .iter()
-                .map(|s| {
-                    s.parse::<usize>()
-                        .ok()
-                        .filter(|&v| v > 0)
-                        .ok_or_else(|| anyhow::anyhow!("bad node count {s}"))
-                })
-                .collect::<Result<_>>()?;
-        }
+        cfg.nodes = args
+            .get_list_with("nodes", cfg.nodes, parse_count)
+            .map_err(|e| anyhow!(e))?;
         cfg.ppn = args.get_parsed("ppn", cfg.ppn);
         cfg.seed = args.get_parsed("seed", cfg.seed);
-        if let Some(it) = args.get_list("iters") {
-            cfg.iters = it
-                .iter()
-                .map(|s| {
-                    s.parse::<usize>()
-                        .ok()
-                        .filter(|&v| v > 0)
-                        .ok_or_else(|| anyhow::anyhow!("bad iteration count {s}"))
-                })
-                .collect::<Result<_>>()?;
-        }
+        cfg.iters = args
+            .get_list_with("iters", cfg.iters, parse_count)
+            .map_err(|e| anyhow!(e))?;
         if let Some(r) = args.get("region") {
-            cfg.region =
-                RegionKind::parse(r).ok_or_else(|| anyhow::anyhow!("unknown region {r}"))?;
+            cfg.region = RegionKind::parse(r).ok_or_else(|| anyhow!("unknown region {r}"))?;
         }
         if let Some(ms) = args.get_list("matrices") {
             cfg.matrices = ms
@@ -233,7 +275,7 @@ fn cmd_neighbor(args: &Args) -> Result<()> {
                 .map(|m| {
                     MatrixPreset::parse(m)
                         .map(|p| if div > 1 { p.scaled(div) } else { p })
-                        .ok_or_else(|| anyhow::anyhow!("unknown matrix {m}"))
+                        .ok_or_else(|| anyhow!("unknown matrix {m}"))
                 })
                 .collect::<Result<_>>()?;
         }
@@ -241,13 +283,18 @@ fn cmd_neighbor(args: &Args) -> Result<()> {
             cfg.methods = mm
                 .iter()
                 .map(|m| {
-                    HaloMethod::parse(m).ok_or_else(|| anyhow::anyhow!("unknown halo method {m}"))
+                    HaloMethod::parse(m).ok_or_else(|| anyhow!("unknown halo method {m}"))
                 })
                 .collect::<Result<_>>()?;
         }
+        cfg.algo = args
+            .get_with("algo", cfg.algo, parse_algo)
+            .map_err(|e| anyhow!(e))?;
         cfg.progress = ProgressSink::Stderr;
         cfg.jobs = jobs;
         cfg.faults = faults;
+        cfg.dispatch = dispatch_model.clone();
+        cfg.noise = noise.clone();
         let (points, bench) = run_neighbor_sweep_bench(&cfg);
         eprintln!("{}", bench.render(&format!("neighbor-{}", flavor.name())));
         benches.push((format!("neighbor-{}", flavor.name()), bench));
@@ -275,20 +322,19 @@ fn cmd_sdde(args: &Args) -> Result<()> {
     let div = args.get_parsed("div", 1usize);
     let preset = MatrixPreset::parse(matrix)
         .map(|p| if div > 1 { p.scaled(div) } else { p })
-        .ok_or_else(|| anyhow::anyhow!("unknown matrix preset {matrix}"))?;
+        .ok_or_else(|| anyhow!("unknown matrix preset {matrix}"))?;
     let nodes = args.get_parsed("nodes", 4usize);
     let ppn = args.get_parsed("ppn", 32usize);
-    let algo = SddeAlgorithm::parse(args.get_or("algo", "dispatch"))
-        .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+    let algo = args
+        .get_with("algo", SddeAlgorithm::Dispatch, parse_algo)
+        .map_err(|e| anyhow!(e))?;
     let flavor = MpiFlavor::parse(args.get_or("mpi", "mvapich2"))
-        .ok_or_else(|| anyhow::anyhow!("unknown mpi flavor"))?;
-    let variant = match args.get_or("variant", "v") {
-        "v" | "alltoallv" => sdde::bench::Variant::Variable,
-        "crs" | "alltoall" => sdde::bench::Variant::ConstSize,
-        v => bail!("unknown variant {v}"),
-    };
+        .ok_or_else(|| anyhow!("unknown mpi flavor"))?;
+    let variant = parse_variant(args, "v")?;
     let seed = args.get_parsed("seed", 2023u64);
     let faults = parse_faults(args)?;
+    let dispatch_model = parse_dispatch(args, false)?;
+    let noise = parse_noise(args);
 
     let topo = Topology::quartz(nodes, ppn);
     let nranks = topo.nranks();
@@ -314,17 +360,21 @@ fn cmd_sdde(args: &Args) -> Result<()> {
         send_nnz.iter().sum::<usize>() as f64 / nranks as f64,
         send_nnz.iter().max().unwrap()
     );
-    let (t, summary, _) = sdde::bench::run_once_stats_faulted(
-        topo,
-        flavor,
-        algo,
-        RegionKind::Node,
-        IntraAlgo::Personalized,
-        variant,
-        patterns,
-        faults,
-    );
-    println!("SDDE time (max over ranks): {}", fmt::ns(t));
+    if algo == SddeAlgorithm::Dispatch {
+        // Show the decision before the run (aggregate pattern regime).
+        let stats = pattern_set_stats(&topo, RegionKind::Node, variant, &patterns);
+        let sel = dispatch::select(dispatch_model.as_ref(), &stats, noise.as_deref());
+        eprintln!("dispatch: {} — {}", sel.algo.name(), sel.rationale);
+    }
+    let run = RunSpec::new(topo, flavor)
+        .algo(algo)
+        .seed(seed)
+        .faults(faults)
+        .dispatch(dispatch_model)
+        .noise(noise)
+        .run_sdde(variant, patterns);
+    let summary = run.summary();
+    println!("SDDE time (max over ranks): {}", fmt::ns(run.time_ns));
     println!(
         "max inter-node msgs/rank: {}   total user msgs: {}",
         summary.max_internode_per_rank(),
@@ -351,18 +401,15 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let div = args.get_parsed("div", 16usize);
     let preset = MatrixPreset::parse(matrix)
         .map(|p| if div > 1 { p.scaled(div) } else { p })
-        .ok_or_else(|| anyhow::anyhow!("unknown matrix preset {matrix}"))?;
+        .ok_or_else(|| anyhow!("unknown matrix preset {matrix}"))?;
     let nodes = args.get_parsed("nodes", 4usize);
     let ppn = args.get_parsed("ppn", 8usize);
-    let algo = SddeAlgorithm::parse(args.get_or("algo", "loc-nonblocking"))
-        .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+    let algo = args
+        .get_with("algo", SddeAlgorithm::LocalityNonBlocking, parse_algo)
+        .map_err(|e| anyhow!(e))?;
     let flavor = MpiFlavor::parse(args.get_or("mpi", "mvapich2"))
-        .ok_or_else(|| anyhow::anyhow!("unknown mpi flavor"))?;
-    let variant = match args.get_or("variant", "v") {
-        "v" | "alltoallv" => sdde::bench::Variant::Variable,
-        "crs" | "alltoall" => sdde::bench::Variant::ConstSize,
-        v => bail!("unknown variant {v}"),
-    };
+        .ok_or_else(|| anyhow!("unknown mpi flavor"))?;
+    let variant = parse_variant(args, "v")?;
     let seed = args.get_parsed("seed", 2023u64);
     let faults = parse_faults(args)?;
     let out_path = PathBuf::from(args.get_or("out", "trace.json"));
@@ -385,16 +432,13 @@ fn cmd_trace(args: &Args) -> Result<()> {
             .map(|r| SpmvPattern::build(&preset, part, r, seed))
             .collect(),
     );
-    let (t, trace) = sdde::bench::run_once_traced_faulted(
-        topo,
-        flavor,
-        algo,
-        RegionKind::Node,
-        IntraAlgo::Personalized,
-        variant,
-        patterns,
-        faults,
-    );
+    let run = RunSpec::new(topo, flavor)
+        .algo(algo)
+        .seed(seed)
+        .faults(faults)
+        .trace(TraceConfig::full())
+        .run_sdde(variant, patterns);
+    let (t, trace) = (run.time_ns, run.trace);
     if trace.events.is_empty() {
         bail!("trace recorded no events (tracing disabled?)");
     }
@@ -431,14 +475,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let ppn = args.get_parsed("ppn", 4usize);
     let iters = args.get_parsed("iters", 300usize);
     let solver = args.get_or("solver", "cg").to_string();
-    let algo = SddeAlgorithm::parse(args.get_or("algo", "loc-nonblocking"))
-        .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+    let algo = args
+        .get_with("algo", SddeAlgorithm::LocalityNonBlocking, parse_algo)
+        .map_err(|e| anyhow!(e))?;
     // Steady-state halo engine: persistent locality-aware by default; the
     // legacy per-message p2p path stays available as `--halo p2p`.
     let halo_method: Option<NeighborMethod> = match args.get_or("halo", "loc") {
         "p2p" | "legacy" => None,
         s => Some(
-            NeighborMethod::parse(s).ok_or_else(|| anyhow::anyhow!("unknown halo method {s}"))?,
+            NeighborMethod::parse(s).ok_or_else(|| anyhow!("unknown halo method {s}"))?,
         ),
     };
 
@@ -498,13 +543,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
 fn cmd_chaos(args: &Args) -> Result<()> {
     let fig = {
         let s = args.get_or("fig", "5");
-        FigureId::parse(s).ok_or_else(|| anyhow::anyhow!("unknown figure {s}"))?
+        FigureId::parse(s).ok_or_else(|| anyhow!("unknown figure {s}"))?
     };
     let div = args.get_parsed("div", 64usize);
     let mut base = SweepConfig::quick(fig, div);
-    if let Some(nodes) = args.get_list("nodes") {
-        base.nodes = nodes.iter().map(|s| s.parse().unwrap_or(2)).collect();
-    }
+    base.nodes = args
+        .get_list_with("nodes", base.nodes, parse_count)
+        .map_err(|e| anyhow!(e))?;
     base.ppn = args.get_parsed("ppn", base.ppn);
     base.seed = args.get_parsed("seed", base.seed);
     if let Some(ms) = args.get_list("matrices") {
@@ -513,15 +558,18 @@ fn cmd_chaos(args: &Args) -> Result<()> {
             .map(|m| {
                 MatrixPreset::parse(m)
                     .map(|p| if div > 1 { p.scaled(div) } else { p })
-                    .ok_or_else(|| anyhow::anyhow!("unknown matrix {m}"))
+                    .ok_or_else(|| anyhow!("unknown matrix {m}"))
             })
             .collect::<Result<_>>()?;
     }
     base.jobs = resolve_jobs(args.get("jobs").and_then(|s| s.parse().ok()));
+    // With a model loaded, run_chaos dispatches faulted re-runs under
+    // this profile's noise regime and reports the resulting pick flips.
+    base.dispatch = parse_dispatch(args, false)?;
     let seeds: Vec<u64> = match args.get_list("seeds") {
         Some(v) => v
             .iter()
-            .map(|s| s.parse::<u64>().map_err(|_| anyhow::anyhow!("bad seed {s}")))
+            .map(|s| s.parse::<u64>().map_err(|_| anyhow!("bad seed {s}")))
             .collect::<Result<_>>()?,
         None => {
             let n = args.get_parsed("nseeds", 8u64);
@@ -531,12 +579,133 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     };
     let profile = {
         let s = args.get_or("profile", "heavy");
-        FaultProfile::parse(s).map_err(|e| anyhow::anyhow!("bad --profile {s}: {e}"))?
+        FaultProfile::parse(s).map_err(|e| anyhow!("bad --profile {s}: {e}"))?
     };
     let rep = run_chaos(&ChaosConfig::new(base, seeds, profile));
     println!("{}", rep.render());
     if !rep.traffic_invariant() {
         bail!("traffic invariance violated under faults");
+    }
+    Ok(())
+}
+
+/// Print the dispatch layer's decision table for one pattern regime: the
+/// calibrated model's pick per noise profile (with rationale and the full
+/// score matrix), or the heuristic's pick when run with
+/// `--dispatch-model none`.
+fn cmd_dispatch(args: &Args) -> Result<()> {
+    let matrix = args.get_or("matrix", "cage14");
+    let div = args.get_parsed("div", 16usize);
+    let preset = MatrixPreset::parse(matrix)
+        .map(|p| if div > 1 { p.scaled(div) } else { p })
+        .ok_or_else(|| anyhow!("unknown matrix preset {matrix}"))?;
+    let nodes = args.get_parsed("nodes", 4usize);
+    let ppn = args.get_parsed("ppn", 8usize);
+    let variant = parse_variant(args, "v")?;
+    let seed = args.get_parsed("seed", 2023u64);
+    let region = match args.get("region") {
+        None => RegionKind::Node,
+        Some(r) => RegionKind::parse(r).ok_or_else(|| anyhow!("unknown region {r}"))?,
+    };
+    let model = parse_dispatch(args, true)?;
+
+    let topo = Topology::quartz(nodes, ppn);
+    let nranks = topo.nranks();
+    let part = Partition::new(preset.n, nranks);
+    let patterns: Vec<SpmvPattern> = (0..nranks)
+        .map(|r| SpmvPattern::build(&preset, part, r, seed))
+        .collect();
+    let stats = pattern_set_stats(&topo, region, variant, &patterns);
+    println!(
+        "pattern: {} on {} ranks ({} nodes x {} ppn) — mean dests/rank {}, \
+         local frac {:.2}, bucket {}",
+        preset.name,
+        nranks,
+        nodes,
+        ppn,
+        stats.send_nnz,
+        stats.local_frac,
+        stats.bucket()
+    );
+    match &model {
+        Some(m) => {
+            println!("{}", m.summary_table());
+            println!("{}", m.decision_table(&stats));
+        }
+        None => {
+            let sel = dispatch::select(None, &stats, parse_noise(args).as_deref());
+            println!("no model loaded; {}", sel.rationale);
+            println!("pick: {}", sel.algo.name());
+        }
+    }
+    Ok(())
+}
+
+/// Calibrate a dispatch model from figure + chaos sweeps and print it.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let mut cfg = CalibrateConfig::quick();
+    cfg.figs = match args.get_or("figs", "5,7") {
+        "all" => vec![FigureId::Fig5, FigureId::Fig6, FigureId::Fig7, FigureId::Fig8],
+        _ => args
+            .get_list("figs")
+            .unwrap_or_else(|| vec!["5".into(), "7".into()])
+            .iter()
+            .map(|s| FigureId::parse(s).ok_or_else(|| anyhow!("unknown figure {s}")))
+            .collect::<Result<_>>()?,
+    };
+    cfg.div = args.get_parsed("div", cfg.div);
+    cfg.nodes = args
+        .get_list_with("nodes", cfg.nodes, parse_count)
+        .map_err(|e| anyhow!(e))?;
+    cfg.ppn = args.get_parsed("ppn", cfg.ppn);
+    if let Some(ms) = args.get_list("matrices") {
+        let div = cfg.div;
+        cfg.matrices = Some(
+            ms.iter()
+                .map(|m| {
+                    MatrixPreset::parse(m)
+                        .map(|p| if div > 1 { p.scaled(div) } else { p })
+                        .ok_or_else(|| anyhow!("unknown matrix {m}"))
+                })
+                .collect::<Result<_>>()?,
+        );
+    }
+    if let Some(ps) = args.get_list("profiles") {
+        cfg.profiles = ps;
+    }
+    cfg.seeds = match args.get_list("seeds") {
+        Some(v) => v
+            .iter()
+            .map(|s| s.parse::<u64>().map_err(|_| anyhow!("bad seed {s}")))
+            .collect::<Result<_>>()?,
+        None => {
+            let n = args.get_parsed("nseeds", cfg.seeds.len() as u64);
+            let s0 = args.get_parsed("seed0", 1u64);
+            (s0..s0 + n).collect()
+        }
+    };
+    cfg.robustness = args.get_parsed("robustness", cfg.robustness);
+    cfg.jobs = resolve_jobs(args.get("jobs").and_then(|s| s.parse().ok()));
+    cfg.progress = if args.has("quiet") {
+        ProgressSink::Silent
+    } else {
+        ProgressSink::Stderr
+    };
+
+    eprintln!(
+        "calibrating over {} figure(s), nodes {:?}, ppn {}, {} profile(s) x {} seed(s)...",
+        cfg.figs.len(),
+        cfg.nodes,
+        cfg.ppn,
+        cfg.profiles.len(),
+        cfg.seeds.len()
+    );
+    let model = run_calibrate(&cfg)?;
+    println!("{}", model.summary_table());
+    if let Some(out) = args.get("out") {
+        let path = PathBuf::from(out);
+        model.save(&path)?;
+        println!("wrote {}", path.display());
     }
     Ok(())
 }
@@ -556,6 +725,7 @@ fn cmd_info() -> Result<()> {
     for a in SddeAlgorithm::CONST_SIZE {
         println!("  {}", a.name());
     }
+    println!("  dispatch (evidence-driven selection; see `sdde dispatch`)");
     println!("\nmpi flavors: openmpi, mvapich2");
     for f in [MpiFlavor::OpenMpi, MpiFlavor::Mvapich2] {
         let c = CostModel::preset(f);

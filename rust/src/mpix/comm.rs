@@ -5,6 +5,7 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use super::dispatch::DispatchModel;
 use super::SddeAlgorithm;
 use crate::mpi::{Comm, Window};
 use crate::simnet::RegionKind;
@@ -36,6 +37,14 @@ pub struct MpixInfo {
     /// Reuse the RMA window across calls (paper: window creation "can be
     /// amortized over the cost of the application").
     pub reuse_rma_window: bool,
+    /// Calibrated evidence model consulted when `algorithm == Dispatch`.
+    /// `None` (the default) falls back to the legacy threshold heuristic —
+    /// bit-identical picks to the pre-model `resolve()` (DESIGN.md
+    /// invariant 9).
+    pub dispatch_model: Option<Rc<DispatchModel>>,
+    /// Expected noise regime for model-driven dispatch: a fault-profile
+    /// name from the model's calibration. `None` ranks fault-free.
+    pub dispatch_noise: Option<String>,
 }
 
 impl Default for MpixInfo {
@@ -46,6 +55,8 @@ impl Default for MpixInfo {
             intra: IntraAlgo::Personalized,
             known_recv_nnz: None,
             reuse_rma_window: true,
+            dispatch_model: None,
+            dispatch_noise: None,
         }
     }
 }

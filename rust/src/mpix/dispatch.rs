@@ -1,0 +1,721 @@
+//! Evidence-driven SDDE algorithm selection (the paper's §VI future-work
+//! hook, grown into a subsystem).
+//!
+//! [`select`] maps measured pattern statistics ([`PatternStats`]) to a
+//! [`Selection`] — the chosen [`SddeAlgorithm`] plus a human-readable
+//! rationale and, when a calibrated [`DispatchModel`] is loaded, the full
+//! per-algorithm score breakdown. Three sources, in priority order:
+//!
+//! 1. **Explicit** — `MpixInfo::algorithm != Dispatch`: no decision to make
+//!    (validation of RMA-on-variable still applies, in `mpix::select_algorithm`).
+//! 2. **Model** — a [`DispatchModel`] calibrated by `sdde calibrate` from
+//!    figure sweeps (fault-free makespan), chaos sweeps (per-fault-profile
+//!    makespan inflation) and traced critical paths (wait share by event
+//!    kind). Scores are robustness-weighted:
+//!    `score = base × (1 + w·(inflation − 1))`, so an algorithm that wins
+//!    fault-free but collapses under jitter loses the pick on a noisy
+//!    machine. A default model ships embedded in the binary
+//!    ([`DispatchModel::embedded`]); `--dispatch-model PATH` overrides it.
+//! 3. **Heuristic** — no model loaded: the legacy three-branch thresholds,
+//!    reproduced bit-for-bit (invariant 9 in DESIGN.md; enforced by the
+//!    grid-equivalence test in `tests/dispatch.rs`).
+//!
+//! The model file is handwritten JSON (parsed with [`crate::util::json`];
+//! the build is offline, no serde). Buckets discretize the stats space
+//! along the same axes the legacy heuristic used — scale (`small` < 64
+//! ranks ≤ `mid` < 256 ≤ `large`), density (`dense` iff
+//! `send_nnz > 2·region_size`), and API variant (`crs`/`crsv`) — so the
+//! calibrated table refines the threshold space instead of reinventing it.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{MpixComm, SddeAlgorithm};
+use crate::util::{fmt, json};
+
+/// Measured statistics of one rank's SDDE call — the model's feature
+/// vector. Cheap to compute from the send side alone (the receive side is,
+/// by definition of the problem, unknown).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PatternStats {
+    /// World size.
+    pub nranks: usize,
+    /// Ranks in this rank's aggregation region (PPN for node regions).
+    pub region_size: usize,
+    /// Number of destination ranks (`dest.len()`; the paper's send nnz).
+    pub send_nnz: usize,
+    /// Fraction of destinations inside this rank's own region — how much
+    /// traffic locality-aware aggregation can keep off the network.
+    pub local_frac: f64,
+    /// `true` for `MPIX_Alltoall_crs`, `false` for `MPIX_Alltoallv_crs`
+    /// (the RMA algorithms only exist for the former — paper §IV-C).
+    pub constant: bool,
+}
+
+impl PatternStats {
+    /// Measure the stats of an SDDE call about to run on `mx`.
+    pub fn measure(mx: &MpixComm, dest: &[usize], constant: bool) -> PatternStats {
+        let me = mx.my_region();
+        let local = dest.iter().filter(|&&d| mx.region(d) == me).count();
+        PatternStats {
+            nranks: mx.comm.nranks(),
+            region_size: mx.region_size_of(mx.comm.rank()),
+            send_nnz: dest.len(),
+            local_frac: if dest.is_empty() {
+                0.0
+            } else {
+                local as f64 / dest.len() as f64
+            },
+            constant,
+        }
+    }
+
+    /// The model bucket these stats fall into.
+    pub fn bucket(&self) -> String {
+        bucket_key(self)
+    }
+}
+
+/// Discretize stats into a model bucket: `scale/density/variant`.
+pub fn bucket_key(stats: &PatternStats) -> String {
+    let scale = if stats.nranks >= 256 {
+        "large"
+    } else if stats.nranks >= 64 {
+        "mid"
+    } else {
+        "small"
+    };
+    let density = if stats.send_nnz > 2 * stats.region_size {
+        "dense"
+    } else {
+        "sparse"
+    };
+    let variant = if stats.constant { "crs" } else { "crsv" };
+    format!("{scale}/{density}/{variant}")
+}
+
+/// Where a [`Selection`] came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionSource {
+    /// The caller named a concrete algorithm; no decision was made.
+    Explicit,
+    /// Legacy threshold heuristic (no model loaded, or bucket uncovered).
+    Heuristic,
+    /// Robustness-weighted score from a calibrated [`DispatchModel`].
+    Model,
+}
+
+/// One algorithm's scored row in a selection.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlgoScore {
+    pub algo: SddeAlgorithm,
+    /// Fault-free makespan relative to the bucket's best (1.0 = fastest).
+    pub base: f64,
+    /// Makespan inflation under the requested noise regime (1.0 = none).
+    pub inflation: f64,
+    /// Critical-path wait share (fraction of the covered makespan spent in
+    /// `Wait` events) — a tiebreaker: equal scores prefer less waiting.
+    pub cp_wait: f64,
+    /// `base × (1 + w·(inflation − 1))` — lower is better.
+    pub score: f64,
+}
+
+/// The outcome of a dispatch decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Selection {
+    pub algo: SddeAlgorithm,
+    /// Human-readable justification (printed by `sdde dispatch` and the
+    /// sweep tables).
+    pub rationale: String,
+    /// Full scored ranking, best first (empty for explicit/heuristic
+    /// selections — they don't score).
+    pub scores: Vec<AlgoScore>,
+    pub source: SelectionSource,
+}
+
+impl Selection {
+    /// A selection that was never in question.
+    pub fn explicit(algo: SddeAlgorithm) -> Selection {
+        Selection {
+            algo,
+            rationale: "explicitly requested via MpixInfo::algorithm".to_string(),
+            scores: Vec::new(),
+            source: SelectionSource::Explicit,
+        }
+    }
+}
+
+/// One calibrated table row: an algorithm's evidence within one bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelEntry {
+    /// Bucket key (see [`bucket_key`]).
+    pub bucket: String,
+    pub algo: SddeAlgorithm,
+    /// Mean fault-free makespan relative to the bucket's per-cell best.
+    pub base: f64,
+    /// Critical-path wait share measured from a traced run.
+    pub cp_wait: f64,
+    /// Mean makespan inflation per fault profile, `(profile name, ratio)`.
+    pub inflation: Vec<(String, f64)>,
+}
+
+/// A calibrated selection model: the score table `sdde calibrate` emits
+/// and [`select`] consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DispatchModel {
+    /// Robustness weight `w` in `score = base × (1 + w·(inflation − 1))`.
+    /// 0 ranks purely fault-free; 1 weighs inflation at face value.
+    pub robustness: f64,
+    /// Fault-profile names the entries were calibrated against, in
+    /// presentation order.
+    pub profiles: Vec<String>,
+    pub entries: Vec<ModelEntry>,
+}
+
+/// Deterministic tie-break order for algorithms (table order of the
+/// paper's listing; also the order score tables print in).
+fn algo_rank(a: SddeAlgorithm) -> usize {
+    SddeAlgorithm::CONST_SIZE
+        .iter()
+        .position(|&x| x == a)
+        .unwrap_or(SddeAlgorithm::CONST_SIZE.len())
+}
+
+impl DispatchModel {
+    /// The calibrated model shipped in the binary. Regenerate with
+    /// `sdde calibrate --out rust/src/mpix/dispatch_default.json`.
+    pub fn embedded() -> &'static DispatchModel {
+        static EMBEDDED: OnceLock<DispatchModel> = OnceLock::new();
+        EMBEDDED.get_or_init(|| {
+            DispatchModel::from_json(include_str!("dispatch_default.json"))
+                .expect("embedded dispatch model must parse")
+        })
+    }
+
+    /// Parse a model from its JSON serialization.
+    pub fn from_json(text: &str) -> Result<DispatchModel> {
+        let doc = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        if let Some(v) = doc.get("version").and_then(|v| v.as_f64()) {
+            if v != 1.0 {
+                anyhow::bail!("unsupported dispatch-model version {v}");
+            }
+        }
+        let robustness = doc
+            .get("robustness")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(1.0);
+        let profiles: Vec<String> = doc
+            .get("profiles")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_str().map(|s| s.to_string()))
+            .collect();
+        let mut entries = Vec::new();
+        for e in doc
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .context("dispatch model has no 'entries' array")?
+        {
+            let bucket = e
+                .get("bucket")
+                .and_then(|v| v.as_str())
+                .context("entry missing 'bucket'")?
+                .to_string();
+            let algo_name = e
+                .get("algo")
+                .and_then(|v| v.as_str())
+                .context("entry missing 'algo'")?;
+            let algo = SddeAlgorithm::parse(algo_name).map_err(|e| anyhow!("{e}"))?;
+            let base = e
+                .get("base")
+                .and_then(|v| v.as_f64())
+                .context("entry missing 'base'")?;
+            let cp_wait = e.get("cp_wait").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let mut inflation = Vec::new();
+            if let Some(fields) = e.get("inflation").and_then(|v| v.as_obj()) {
+                for (name, v) in fields {
+                    inflation.push((
+                        name.clone(),
+                        v.as_f64()
+                            .with_context(|| format!("inflation '{name}' not a number"))?,
+                    ));
+                }
+            }
+            entries.push(ModelEntry {
+                bucket,
+                algo,
+                base,
+                cp_wait,
+                inflation,
+            });
+        }
+        Ok(DispatchModel {
+            robustness,
+            profiles,
+            entries,
+        })
+    }
+
+    /// Serialize (stable field order; reparsing yields an equal model).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"version\": 1,\n");
+        out.push_str(&format!("  \"robustness\": {},\n", self.robustness));
+        out.push_str("  \"profiles\": [");
+        for (i, p) in self.profiles.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\"", json::escape(p)));
+        }
+        out.push_str("],\n  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"bucket\": \"{}\", \"algo\": \"{}\", \"base\": {}, \"cp_wait\": {}, \"inflation\": {{",
+                json::escape(&e.bucket),
+                e.algo.name(),
+                e.base,
+                e.cp_wait
+            ));
+            for (j, (name, v)) in e.inflation.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("\"{}\": {}", json::escape(name), v));
+            }
+            out.push_str("}}");
+            out.push_str(if i + 1 < self.entries.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Load a model from a JSON file.
+    pub fn load(path: &Path) -> Result<DispatchModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::from_json(&text).with_context(|| format!("parse {}", path.display()))
+    }
+
+    /// Write the model as JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    /// Inflation ratio of one entry under a noise regime (`None`/"none" =
+    /// fault-free = 1.0; a profile the entry was not calibrated against
+    /// also scores 1.0).
+    fn inflation_of(entry: &ModelEntry, noise: Option<&str>) -> f64 {
+        match noise {
+            None | Some("none") | Some("off") => 1.0,
+            Some(n) => entry
+                .inflation
+                .iter()
+                .find(|(p, _)| p == n)
+                .map(|(_, v)| *v)
+                .unwrap_or(1.0),
+        }
+    }
+
+    /// Scored ranking for one bucket (best first; deterministic order).
+    /// `constant = false` filters the RMA algorithms even if the table
+    /// carries them.
+    fn scores_for_bucket(
+        &self,
+        bucket: &str,
+        constant: bool,
+        noise: Option<&str>,
+    ) -> Vec<AlgoScore> {
+        let mut v: Vec<AlgoScore> = self
+            .entries
+            .iter()
+            .filter(|e| e.bucket == bucket)
+            .filter(|e| {
+                constant
+                    || !matches!(
+                        e.algo,
+                        SddeAlgorithm::Rma | SddeAlgorithm::LocalityRma
+                    )
+            })
+            .map(|e| {
+                let inflation = Self::inflation_of(e, noise);
+                AlgoScore {
+                    algo: e.algo,
+                    base: e.base,
+                    inflation,
+                    cp_wait: e.cp_wait,
+                    score: e.base * (1.0 + self.robustness * (inflation - 1.0)),
+                }
+            })
+            .collect();
+        v.sort_by(|a, b| {
+            a.score
+                .total_cmp(&b.score)
+                .then(a.cp_wait.total_cmp(&b.cp_wait))
+                .then(algo_rank(a.algo).cmp(&algo_rank(b.algo)))
+        });
+        v
+    }
+
+    /// Scored ranking for a pattern (best first), or empty when the
+    /// bucket is uncovered.
+    pub fn scores(&self, stats: &PatternStats, noise: Option<&str>) -> Vec<AlgoScore> {
+        self.scores_for_bucket(&bucket_key(stats), stats.constant, noise)
+    }
+
+    /// Model-driven selection; `None` when the bucket has no entries
+    /// (callers fall back to the heuristic — see [`select`]).
+    pub fn select(&self, stats: &PatternStats, noise: Option<&str>) -> Option<Selection> {
+        let bucket = bucket_key(stats);
+        let scores = self.scores(stats, noise);
+        let best = scores.first()?.clone();
+        let regime = noise.unwrap_or("none");
+        let mut rationale = format!(
+            "model: bucket {bucket} under '{regime}' noise -> {} \
+             (base {:.3}, inflation {:.3}, score {:.3}, cp-wait {:.0}%)",
+            best.algo.name(),
+            best.base,
+            best.inflation,
+            best.score,
+            best.cp_wait * 100.0
+        );
+        if let Some(second) = scores.get(1) {
+            rationale.push_str(&format!(
+                "; runner-up {} (score {:.3})",
+                second.algo.name(),
+                second.score
+            ));
+        }
+        Some(Selection {
+            algo: best.algo,
+            rationale,
+            scores,
+            source: SelectionSource::Model,
+        })
+    }
+
+    /// Buckets the model carries entries for, in first-seen order.
+    pub fn buckets(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for e in &self.entries {
+            if !out.contains(&e.bucket) {
+                out.push(e.bucket.clone());
+            }
+        }
+        out
+    }
+
+    /// Decision table for one pattern: the robust pick per noise regime
+    /// ("none" plus every calibrated profile), then the full score matrix.
+    /// The `sdde dispatch` payload.
+    pub fn decision_table(&self, stats: &PatternStats) -> String {
+        let bucket = bucket_key(stats);
+        let mut out = format!(
+            "-- dispatch decision table: bucket {bucket} (robustness w={}) --\n",
+            self.robustness
+        );
+        let none = self.select(stats, None);
+        let Some(none) = none else {
+            let fallback = heuristic(stats);
+            out.push_str("(no calibrated entries for this bucket)\n");
+            out.push_str(&format!(
+                "heuristic fallback rationale: {} -> {}\n",
+                fallback.rationale,
+                fallback.algo.name()
+            ));
+            return out;
+        };
+        let mut rows = vec![vec![
+            "noise".to_string(),
+            "pick".to_string(),
+            "score".to_string(),
+            "note".to_string(),
+        ]];
+        rows.push(vec![
+            "none".to_string(),
+            none.algo.name().to_string(),
+            format!("{:.3}", none.scores[0].score),
+            String::new(),
+        ]);
+        let mut flipped: Vec<String> = Vec::new();
+        for profile in &self.profiles {
+            if let Some(sel) = self.select(stats, Some(profile)) {
+                let note = if sel.algo != none.algo {
+                    flipped.push(profile.clone());
+                    format!("<- differs from fault-free ({})", none.algo.name())
+                } else {
+                    String::new()
+                };
+                rows.push(vec![
+                    profile.clone(),
+                    sel.algo.name().to_string(),
+                    format!("{:.3}", sel.scores[0].score),
+                    note,
+                ]);
+            }
+        }
+        out.push_str(&fmt::table(&rows));
+        // Score matrix: one row per algorithm, one column per regime.
+        out.push_str("\n-- calibrated scores: base x (1 + w*(inflation-1)), lower wins --\n");
+        let mut matrix = vec![{
+            let mut h = vec![
+                "algo".to_string(),
+                "base".to_string(),
+                "cp-wait".to_string(),
+                "none".to_string(),
+            ];
+            h.extend(self.profiles.iter().cloned());
+            h
+        }];
+        let mut ranked = self.scores(stats, None);
+        ranked.sort_by_key(|s| algo_rank(s.algo));
+        for s in &ranked {
+            let mut row = vec![
+                s.algo.name().to_string(),
+                format!("{:.3}", s.base),
+                format!("{:.0}%", s.cp_wait * 100.0),
+                format!("{:.3}", s.score),
+            ];
+            for profile in &self.profiles {
+                let v = self
+                    .scores(stats, Some(profile))
+                    .into_iter()
+                    .find(|x| x.algo == s.algo)
+                    .map(|x| x.score)
+                    .unwrap_or(f64::NAN);
+                row.push(format!("{v:.3}"));
+            }
+            matrix.push(row);
+        }
+        out.push_str(&fmt::table(&matrix));
+        out.push_str(&format!("rationale (fault-free): {}\n", none.rationale));
+        for profile in &flipped {
+            if let Some(sel) = self.select(stats, Some(profile)) {
+                out.push_str(&format!("rationale ({profile}): {}\n", sel.rationale));
+            }
+        }
+        out
+    }
+
+    /// One row per calibrated bucket: the fault-free pick and each
+    /// profile's robust pick (`*` marks a flip). The `sdde calibrate`
+    /// summary.
+    pub fn summary_table(&self) -> String {
+        let buckets = self.buckets();
+        let mut out = format!(
+            "-- calibrated dispatch model: {} bucket(s), {} profile(s), {} entries --\n",
+            buckets.len(),
+            self.profiles.len(),
+            self.entries.len()
+        );
+        let mut rows = vec![{
+            let mut h = vec!["bucket".to_string(), "none".to_string()];
+            h.extend(self.profiles.iter().cloned());
+            h
+        }];
+        for bucket in &buckets {
+            let constant = bucket.ends_with("/crs");
+            let none_pick = self
+                .scores_for_bucket(bucket, constant, None)
+                .first()
+                .map(|s| s.algo);
+            let mut row = vec![
+                bucket.clone(),
+                none_pick.map(|a| a.name().to_string()).unwrap_or_default(),
+            ];
+            for profile in &self.profiles {
+                let pick = self
+                    .scores_for_bucket(bucket, constant, Some(profile))
+                    .first()
+                    .map(|s| s.algo);
+                row.push(match pick {
+                    Some(a) if Some(a) != none_pick => format!("{}*", a.name()),
+                    Some(a) => a.name().to_string(),
+                    None => String::new(),
+                });
+            }
+            rows.push(row);
+        }
+        out.push_str(&fmt::table(&rows));
+        out.push_str("(* = robustness-weighted pick differs from fault-free ranking)\n");
+        out
+    }
+}
+
+/// The legacy three-branch heuristic, bit-for-bit (DESIGN.md invariant 9):
+/// aggregation pays once per-rank sends exceed 2× the region size at 64+
+/// ranks; otherwise NBX at 256+ ranks; otherwise personalized.
+pub fn heuristic(stats: &PatternStats) -> Selection {
+    let p = stats.nranks;
+    let region = stats.region_size;
+    let nnz = stats.send_nnz;
+    let (algo, why) = if nnz > 2 * region && p >= 64 {
+        (
+            SddeAlgorithm::LocalityNonBlocking,
+            format!("send_nnz {nnz} > 2x region {region} at {p} >= 64 ranks: aggregation pays"),
+        )
+    } else if p >= 256 {
+        (
+            SddeAlgorithm::NonBlocking,
+            format!("{p} >= 256 ranks: the counts-allreduce dominates"),
+        )
+    } else {
+        (
+            SddeAlgorithm::Personalized,
+            format!("{p} ranks, {nnz} destinations: the counts-allreduce is cheap"),
+        )
+    };
+    Selection {
+        algo,
+        rationale: format!("heuristic: {why}"),
+        scores: Vec::new(),
+        source: SelectionSource::Heuristic,
+    }
+}
+
+/// Resolve a `Dispatch` request: consult the model when one is loaded,
+/// fall back to the legacy heuristic otherwise (also when the model has
+/// no entries for the pattern's bucket).
+pub fn select(
+    model: Option<&DispatchModel>,
+    stats: &PatternStats,
+    noise: Option<&str>,
+) -> Selection {
+    if let Some(m) = model {
+        if let Some(sel) = m.select(stats, noise) {
+            return sel;
+        }
+        let mut sel = heuristic(stats);
+        sel.rationale = format!(
+            "no calibrated entries for bucket {}; {}",
+            bucket_key(stats),
+            sel.rationale
+        );
+        return sel;
+    }
+    heuristic(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(nranks: usize, region: usize, nnz: usize, constant: bool) -> PatternStats {
+        PatternStats {
+            nranks,
+            region_size: region,
+            send_nnz: nnz,
+            local_frac: 0.0,
+            constant,
+        }
+    }
+
+    #[test]
+    fn buckets_follow_the_heuristic_axes() {
+        assert_eq!(bucket_key(&stats(8, 8, 3, true)), "small/sparse/crs");
+        assert_eq!(bucket_key(&stats(63, 8, 17, false)), "small/dense/crsv");
+        assert_eq!(bucket_key(&stats(64, 8, 16, true)), "mid/sparse/crs");
+        assert_eq!(bucket_key(&stats(256, 8, 17, true)), "large/dense/crs");
+    }
+
+    #[test]
+    fn heuristic_reproduces_legacy_thresholds() {
+        // The three branches, including both strict boundaries.
+        assert_eq!(heuristic(&stats(8, 4, 3, true)).algo, SddeAlgorithm::Personalized);
+        assert_eq!(
+            heuristic(&stats(64, 8, 17, true)).algo,
+            SddeAlgorithm::LocalityNonBlocking
+        );
+        assert_eq!(heuristic(&stats(64, 8, 16, true)).algo, SddeAlgorithm::Personalized);
+        assert_eq!(heuristic(&stats(256, 8, 4, true)).algo, SddeAlgorithm::NonBlocking);
+        assert_eq!(heuristic(&stats(255, 8, 16, true)).algo, SddeAlgorithm::Personalized);
+        let sel = heuristic(&stats(8, 4, 3, true));
+        assert_eq!(sel.source, SelectionSource::Heuristic);
+        assert!(sel.rationale.contains("heuristic"), "{}", sel.rationale);
+    }
+
+    #[test]
+    fn embedded_model_parses_and_covers_all_buckets() {
+        let m = DispatchModel::embedded();
+        assert!(m.robustness > 0.0);
+        assert!(m.profiles.len() >= 2);
+        let buckets = m.buckets();
+        for scale in ["small", "mid", "large"] {
+            for density in ["sparse", "dense"] {
+                for variant in ["crs", "crsv"] {
+                    let key = format!("{scale}/{density}/{variant}");
+                    assert!(buckets.contains(&key), "missing bucket {key}");
+                }
+            }
+        }
+        // crsv buckets must not carry RMA rows (paper §IV-C).
+        for e in &m.entries {
+            if e.bucket.ends_with("/crsv") {
+                assert!(
+                    !matches!(e.algo, SddeAlgorithm::Rma | SddeAlgorithm::LocalityRma),
+                    "RMA entry in {}",
+                    e.bucket
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn variable_size_filters_rma_from_scores() {
+        let m = DispatchModel::embedded();
+        // Same scale/density, crs vs crsv: the crs ranking may contain
+        // RMA, the crsv ranking never does.
+        let sel = m.select(&stats(128, 8, 4, false), None).unwrap();
+        for s in &sel.scores {
+            assert!(
+                !matches!(s.algo, SddeAlgorithm::Rma | SddeAlgorithm::LocalityRma),
+                "{:?}",
+                s.algo
+            );
+        }
+    }
+
+    #[test]
+    fn uncovered_bucket_falls_back_to_heuristic() {
+        let empty = DispatchModel {
+            robustness: 1.0,
+            profiles: vec!["heavy".into()],
+            entries: vec![],
+        };
+        let st = stats(8, 4, 3, true);
+        let sel = select(Some(&empty), &st, None);
+        assert_eq!(sel.source, SelectionSource::Heuristic);
+        assert_eq!(sel.algo, heuristic(&st).algo);
+        assert!(sel.rationale.contains("no calibrated entries"), "{}", sel.rationale);
+        // And the decision table still renders something grep-able.
+        let table = empty.decision_table(&st);
+        assert!(table.contains("decision table"), "{table}");
+        assert!(table.contains("rationale"), "{table}");
+    }
+
+    #[test]
+    fn decision_table_lists_all_regimes() {
+        let m = DispatchModel::embedded();
+        let table = m.decision_table(&stats(32, 8, 4, false));
+        assert!(table.contains("decision table"), "{table}");
+        for p in &m.profiles {
+            assert!(table.contains(p.as_str()), "missing profile {p}:\n{table}");
+        }
+        assert!(table.contains("rationale (fault-free)"), "{table}");
+    }
+
+    #[test]
+    fn summary_table_marks_flips() {
+        let m = DispatchModel::embedded();
+        let s = m.summary_table();
+        assert!(s.contains("calibrated dispatch model"), "{s}");
+        assert!(s.contains('*'), "expected at least one flip marker:\n{s}");
+    }
+}

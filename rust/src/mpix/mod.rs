@@ -25,10 +25,14 @@
 pub mod algos;
 mod comm;
 mod crs;
+pub mod dispatch;
 pub mod neighbor;
 
 pub use comm::{IntraAlgo, MpixComm, MpixInfo};
 pub use crs::{CrsArgs, CrsResult, CrsvArgs, CrsvResult};
+pub use dispatch::{
+    DispatchModel, ModelEntry, PatternStats, Selection, SelectionSource,
+};
 pub use neighbor::{NeighborAlltoallv, NeighborComm, NeighborExchange, NeighborMethod};
 
 use anyhow::{bail, Result};
@@ -95,20 +99,27 @@ impl SddeAlgorithm {
         }
     }
 
-    pub fn parse(s: &str) -> Option<SddeAlgorithm> {
+    /// Parse a CLI spelling. The error message lists every valid name and
+    /// alias — callers surface it verbatim instead of silently dropping
+    /// unknown names.
+    pub fn parse(s: &str) -> Result<SddeAlgorithm, String> {
         match s.to_ascii_lowercase().as_str() {
-            "personalized" | "pers" => Some(SddeAlgorithm::Personalized),
-            "nonblocking" | "nbx" => Some(SddeAlgorithm::NonBlocking),
-            "rma" => Some(SddeAlgorithm::Rma),
+            "personalized" | "pers" => Ok(SddeAlgorithm::Personalized),
+            "nonblocking" | "nbx" => Ok(SddeAlgorithm::NonBlocking),
+            "rma" => Ok(SddeAlgorithm::Rma),
             "loc-personalized" | "locality-personalized" | "loc-pers" => {
-                Some(SddeAlgorithm::LocalityPersonalized)
+                Ok(SddeAlgorithm::LocalityPersonalized)
             }
             "loc-nonblocking" | "locality-nonblocking" | "loc-nbx" => {
-                Some(SddeAlgorithm::LocalityNonBlocking)
+                Ok(SddeAlgorithm::LocalityNonBlocking)
             }
-            "loc-rma" | "locality-rma" => Some(SddeAlgorithm::LocalityRma),
-            "dispatch" | "auto" => Some(SddeAlgorithm::Dispatch),
-            _ => None,
+            "loc-rma" | "locality-rma" => Ok(SddeAlgorithm::LocalityRma),
+            "dispatch" | "auto" => Ok(SddeAlgorithm::Dispatch),
+            _ => Err(format!(
+                "unknown SDDE algorithm '{s}' (valid: personalized|pers, \
+                 nonblocking|nbx, rma, loc-personalized|loc-pers, \
+                 loc-nonblocking|loc-nbx, loc-rma, dispatch|auto)"
+            )),
         }
     }
 }
@@ -120,7 +131,7 @@ impl SddeAlgorithm {
 /// which ranks sent to it and their values.
 pub async fn alltoall_crs(mx: &MpixComm, info: &MpixInfo, args: &CrsArgs) -> Result<CrsResult> {
     args.validate()?;
-    let algo = resolve(info, mx, args.dest.len(), true)?;
+    let algo = select_algorithm(info, mx, &args.dest, true)?.algo;
     let mut out = match algo {
         SddeAlgorithm::Personalized => algos::personalized::alltoall_crs(mx, info, args).await,
         SddeAlgorithm::NonBlocking => algos::nonblocking::alltoall_crs(mx, info, args).await,
@@ -141,7 +152,7 @@ pub async fn alltoall_crs(mx: &MpixComm, info: &MpixInfo, args: &CrsArgs) -> Res
 /// `MPIX_Alltoallv_crs`: variable-size sparse dynamic data exchange.
 pub async fn alltoallv_crs(mx: &MpixComm, info: &MpixInfo, args: &CrsvArgs) -> Result<CrsvResult> {
     args.validate()?;
-    let algo = resolve(info, mx, args.dest.len(), false)?;
+    let algo = select_algorithm(info, mx, &args.dest, false)?.algo;
     let mut out = match algo {
         SddeAlgorithm::Personalized => algos::personalized::alltoallv_crs(mx, info, args).await,
         SddeAlgorithm::NonBlocking => algos::nonblocking::alltoallv_crs(mx, info, args).await,
@@ -161,32 +172,30 @@ pub async fn alltoallv_crs(mx: &MpixComm, info: &MpixInfo, args: &CrsvArgs) -> R
     Ok(out)
 }
 
-/// Resolve `Dispatch` to a concrete algorithm using the paper's observed
-/// trade-offs: message aggregation pays once per-rank message counts exceed
-/// the region size at scale; otherwise NBX at large worlds, personalized at
-/// small ones.
-fn resolve(
+/// Resolve the algorithm for one SDDE call: validates RMA-on-variable for
+/// explicit requests and resolves `Dispatch` through [`dispatch::select`]
+/// — the evidence model when `info.dispatch_model` is loaded, the legacy
+/// threshold heuristic (bit-identical picks) otherwise. Public so the
+/// CLI, bench sweeps, and tests can report the pick *and its rationale*.
+pub fn select_algorithm(
     info: &MpixInfo,
     mx: &MpixComm,
-    send_nnz: usize,
+    dest: &[usize],
     constant: bool,
-) -> Result<SddeAlgorithm> {
+) -> Result<Selection> {
     let algo = info.algorithm;
     if algo != SddeAlgorithm::Dispatch {
         if (algo == SddeAlgorithm::Rma || algo == SddeAlgorithm::LocalityRma) && !constant {
             bail!("RMA SDDE applies only to MPIX_Alltoall_crs (paper §IV-C)");
         }
-        return Ok(algo);
+        return Ok(Selection::explicit(algo));
     }
-    let p = mx.comm.nranks();
-    let region = mx.region_size_of(mx.comm.rank());
-    Ok(if send_nnz > 2 * region && p >= 64 {
-        SddeAlgorithm::LocalityNonBlocking
-    } else if p >= 256 {
-        SddeAlgorithm::NonBlocking
-    } else {
-        SddeAlgorithm::Personalized
-    })
+    let stats = PatternStats::measure(mx, dest, constant);
+    Ok(dispatch::select(
+        info.dispatch_model.as_deref(),
+        &stats,
+        info.dispatch_noise.as_deref(),
+    ))
 }
 
 #[cfg(test)]
@@ -204,7 +213,12 @@ mod tests {
     }
 
     fn dispatch(mx: &MpixComm, send_nnz: usize) -> SddeAlgorithm {
-        resolve(&MpixInfo::default(), mx, send_nnz, true).unwrap()
+        // MpixInfo::default() carries no model, so Dispatch resolves
+        // through the legacy-equivalent heuristic.
+        let dest: Vec<usize> = (0..send_nnz).map(|i| i % mx.comm.nranks()).collect();
+        select_algorithm(&MpixInfo::default(), mx, &dest, true)
+            .unwrap()
+            .algo
     }
 
     #[test]
@@ -243,10 +257,44 @@ mod tests {
         let mx = mx_for(2, 4);
         for algo in [SddeAlgorithm::Rma, SddeAlgorithm::LocalityRma] {
             let info = MpixInfo::with_algorithm(algo);
-            let err = resolve(&info, &mx, 2, false).unwrap_err();
+            let err = select_algorithm(&info, &mx, &[0, 1], false).unwrap_err();
             assert!(err.to_string().contains("MPIX_Alltoall_crs"), "{err}");
             // The constant-size path accepts the same request.
-            assert_eq!(resolve(&info, &mx, 2, true).unwrap(), algo);
+            let sel = select_algorithm(&info, &mx, &[0, 1], true).unwrap();
+            assert_eq!(sel.algo, algo);
+            assert_eq!(sel.source, SelectionSource::Explicit);
         }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_names_with_the_valid_list() {
+        assert_eq!(SddeAlgorithm::parse("auto"), Ok(SddeAlgorithm::Dispatch));
+        assert_eq!(
+            SddeAlgorithm::parse("LOC-NBX"),
+            Ok(SddeAlgorithm::LocalityNonBlocking)
+        );
+        let err = SddeAlgorithm::parse("gremlin").unwrap_err();
+        for name in ["personalized", "nbx", "rma", "loc-nonblocking", "dispatch"] {
+            assert!(err.contains(name), "missing '{name}' in: {err}");
+        }
+    }
+
+    #[test]
+    fn model_driven_dispatch_uses_the_loaded_evidence() {
+        // 128 ranks, sparse, constant-size: the heuristic would say
+        // Personalized (128 < 256, sends below 2x region), but the
+        // embedded model knows RMA wins this bucket fault-free — and that
+        // it collapses under jitter, flipping the pick to NBX.
+        let mx = mx_for(16, 8);
+        let mut info = MpixInfo::default();
+        info.dispatch_model = Some(std::rc::Rc::new(DispatchModel::embedded().clone()));
+        let dest = vec![0usize, 9, 17, 33];
+        let sel = select_algorithm(&info, &mx, &dest, true).unwrap();
+        assert_eq!(sel.source, SelectionSource::Model);
+        assert_eq!(sel.algo, SddeAlgorithm::Rma);
+        assert!(!sel.scores.is_empty());
+        info.dispatch_noise = Some("jitter".to_string());
+        let noisy = select_algorithm(&info, &mx, &dest, true).unwrap();
+        assert_eq!(noisy.algo, SddeAlgorithm::NonBlocking);
     }
 }

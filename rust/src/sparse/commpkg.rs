@@ -12,7 +12,9 @@ use super::gen::MatrixPreset;
 use super::partition::Partition;
 use crate::mpix::{
     alltoall_crs, alltoallv_crs, CrsArgs, CrsvArgs, MpixComm, MpixInfo, NeighborComm,
+    PatternStats,
 };
+use crate::simnet::{RegionKind, Topology};
 
 /// Per-rank receive requirements: for each owner rank, the sorted global
 /// columns this rank needs from it. This is the *known* half of the
@@ -97,6 +99,35 @@ impl SpmvPattern {
                 .iter()
                 .flat_map(|(_, c)| c.iter().map(|&x| x as u64))
                 .collect(),
+        }
+    }
+
+    /// The dispatch-layer view of this rank's SDDE regime: exactly what
+    /// [`PatternStats::measure`] computes inside `alltoall(v)_crs`, but
+    /// available before any world exists — so sweeps and the CLI can
+    /// report (or pre-compute) the pick for a pattern without running it.
+    pub fn dispatch_stats(
+        &self,
+        topo: &Topology,
+        region: RegionKind,
+        constant: bool,
+    ) -> PatternStats {
+        let me = topo.region_of(self.rank, region);
+        let local = self
+            .needed
+            .iter()
+            .filter(|(o, _)| topo.region_of(*o, region) == me)
+            .count();
+        PatternStats {
+            nranks: topo.nranks(),
+            region_size: topo.region_size(self.rank, region),
+            send_nnz: self.needed.len(),
+            local_frac: if self.needed.is_empty() {
+                0.0
+            } else {
+                local as f64 / self.needed.len() as f64
+            },
+            constant,
         }
     }
 
@@ -288,6 +319,34 @@ mod tests {
                 assert_eq!(total_sends, expected, "algo {algo:?} rank {p}");
             }
         }
+    }
+
+    #[test]
+    fn dispatch_stats_match_in_world_measurement() {
+        // The offline (no-world) stats must be exactly what the dispatch
+        // layer measures inside the SDDE call — same pick, same bucket.
+        let preset = MatrixPreset::cage14_like().scaled(2000);
+        let topo = Topology::quartz(2, 4);
+        let n = topo.nranks();
+        let part = Partition::new(preset.n, n);
+        let pats: Vec<SpmvPattern> = (0..n)
+            .map(|p| SpmvPattern::build(&preset, part, p, 5))
+            .collect();
+        let offline: Vec<PatternStats> = pats
+            .iter()
+            .map(|p| p.dispatch_stats(&topo, RegionKind::Node, false))
+            .collect();
+        let pats = Rc::new(pats);
+        let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
+        let out = world.run(move |c| {
+            let pats = pats.clone();
+            async move {
+                let mx = MpixComm::new(c.clone(), RegionKind::Node);
+                let dest = pats[c.rank()].crsv_args().dest;
+                PatternStats::measure(&mx, &dest, false)
+            }
+        });
+        assert_eq!(out.results, offline);
     }
 
     #[test]

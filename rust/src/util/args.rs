@@ -61,6 +61,40 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Parse `--key` through `parser`. Absent (or empty) flags yield
+    /// `default`; a present-but-invalid value is a hard error carrying the
+    /// parser's message (which should list the valid spellings) — never a
+    /// silent fallback.
+    pub fn get_with<T>(
+        &self,
+        key: &str,
+        default: T,
+        parser: impl Fn(&str) -> Result<T, String>,
+    ) -> Result<T, String> {
+        match self.get(key).filter(|s| !s.is_empty()) {
+            None => Ok(default),
+            Some(s) => parser(s).map_err(|e| format!("bad --{key} '{s}': {e}")),
+        }
+    }
+
+    /// Parse every element of the comma-separated `--key` list through
+    /// `parser` (same error contract as [`Args::get_with`]). The flag being
+    /// absent yields `default`.
+    pub fn get_list_with<T>(
+        &self,
+        key: &str,
+        default: Vec<T>,
+        parser: impl Fn(&str) -> Result<T, String>,
+    ) -> Result<Vec<T>, String> {
+        match self.get_list(key) {
+            None => Ok(default),
+            Some(items) => items
+                .iter()
+                .map(|s| parser(s).map_err(|e| format!("bad --{key} '{s}': {e}")))
+                .collect(),
+        }
+    }
+
     /// Comma-separated list value.
     pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
         self.get(key).map(|s| {
@@ -99,6 +133,25 @@ mod tests {
         assert_eq!(a.get_parsed("ppn", 32usize), 16);
         assert_eq!(a.get_parsed("seed", 42u64), 42);
         assert_eq!(a.get_or("mpi", "mvapich2"), "mvapich2");
+    }
+
+    #[test]
+    fn get_with_rejects_bad_values_loudly() {
+        let parse_pos = |s: &str| {
+            s.parse::<usize>()
+                .ok()
+                .filter(|&v| v > 0)
+                .ok_or_else(|| "want a positive integer".to_string())
+        };
+        let a = parse("--nodes 2,x,8 --ppn 4");
+        assert_eq!(a.get_with("ppn", 32, parse_pos).unwrap(), 4);
+        assert_eq!(a.get_with("seed", 7, parse_pos).unwrap(), 7); // absent
+        let err = a.get_list_with("nodes", vec![], parse_pos).unwrap_err();
+        assert!(err.contains("--nodes 'x'"), "{err}");
+        assert_eq!(
+            a.get_list_with("iters", vec![1, 16], parse_pos).unwrap(),
+            vec![1, 16]
+        );
     }
 
     #[test]

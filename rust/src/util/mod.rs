@@ -3,6 +3,7 @@
 pub mod args;
 pub mod fmt;
 pub mod hash;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;

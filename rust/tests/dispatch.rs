@@ -1,0 +1,192 @@
+//! Integration tests for the evidence-driven dispatch layer.
+//!
+//! The load-bearing invariant (DESIGN.md invariant 9): with no model
+//! loaded, `Dispatch` must select exactly what the legacy threshold
+//! heuristic selected — same algorithm, same virtual time, bit for bit.
+//! On top of that: model JSON round-trips losslessly, the robustness
+//! weight actually changes picks, and the embedded model disagrees with
+//! its own fault-free ranking somewhere (otherwise shipping fault
+//! evidence would be pointless).
+
+use std::rc::Rc;
+
+use sdde::bench::{pattern_set_stats, RunSpec, Variant};
+use sdde::mpix::{dispatch, DispatchModel, ModelEntry, SddeAlgorithm, SelectionSource};
+use sdde::simnet::{MpiFlavor, RegionKind, Topology};
+use sdde::sparse::{MatrixPreset, Partition, SpmvPattern};
+
+fn stats(nranks: usize, region: usize, nnz: usize, constant: bool) -> sdde::mpix::PatternStats {
+    sdde::mpix::PatternStats {
+        nranks,
+        region_size: region,
+        send_nnz: nnz,
+        local_frac: 0.0,
+        constant,
+    }
+}
+
+/// The pre-redesign `resolve()` logic, transcribed verbatim as the oracle.
+fn legacy_resolve(nranks: usize, region: usize, nnz: usize) -> SddeAlgorithm {
+    if nnz > 2 * region && nranks >= 64 {
+        SddeAlgorithm::LocalityNonBlocking
+    } else if nranks >= 256 {
+        SddeAlgorithm::NonBlocking
+    } else {
+        SddeAlgorithm::Personalized
+    }
+}
+
+#[test]
+fn no_model_dispatch_matches_legacy_resolve_over_the_grid() {
+    // Grid straddles every threshold boundary: 63/64/65 ranks, 255/256/257
+    // ranks, and send_nnz at exactly 2×region vs one past it.
+    for &p in &[1, 2, 8, 16, 63, 64, 65, 128, 255, 256, 257, 1024] {
+        for &region in &[1, 4, 8, 32] {
+            for &nnz in &[0, 1, 2 * region, 2 * region + 1, 10 * region] {
+                for &constant in &[true, false] {
+                    let s = stats(p, region, nnz, constant);
+                    let sel = dispatch::select(None, &s, None);
+                    assert_eq!(
+                        sel.algo,
+                        legacy_resolve(p, region, nnz),
+                        "heuristic diverged from legacy resolve at p={p} region={region} nnz={nnz}"
+                    );
+                    assert_eq!(sel.source, SelectionSource::Heuristic);
+                    assert!(!sel.rationale.is_empty());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn embedded_model_round_trips_through_json() {
+    let m = DispatchModel::embedded();
+    let back = DispatchModel::from_json(&m.to_json()).expect("re-parse embedded model");
+    assert_eq!(&back, m);
+    assert!(!m.entries.is_empty());
+    assert!(!m.profiles.is_empty());
+}
+
+/// Two algorithms, one bucket: `pers` is fastest fault-free but degrades
+/// 2× under `heavy`; `nbx` is 20% slower but nearly flat. The robustness
+/// weight alone must flip the pick.
+fn synthetic_model(robustness: f64) -> DispatchModel {
+    let entry = |algo, base: f64, infl: f64| ModelEntry {
+        bucket: "small/sparse/crs".to_string(),
+        algo,
+        base,
+        cp_wait: 0.0,
+        inflation: vec![("heavy".to_string(), infl)],
+    };
+    DispatchModel {
+        robustness,
+        profiles: vec!["heavy".to_string()],
+        entries: vec![
+            entry(SddeAlgorithm::Personalized, 1.0, 2.0),
+            entry(SddeAlgorithm::NonBlocking, 1.2, 1.05),
+        ],
+    }
+}
+
+#[test]
+fn robustness_weight_flips_the_pick_under_noise() {
+    let s = stats(16, 8, 4, true);
+    assert_eq!(s.bucket(), "small/sparse/crs");
+
+    // Fault-free regime: base cost alone decides, regardless of weight.
+    for w in [0.0, 1.0] {
+        let sel = dispatch::select(Some(&synthetic_model(w)), &s, None);
+        assert_eq!(sel.algo, SddeAlgorithm::Personalized);
+        assert_eq!(sel.source, SelectionSource::Model);
+    }
+
+    // Under heavy noise: w=0 ignores the evidence (pers: 1.0 beats 1.2),
+    // w=1 weighs it at face value (pers: 2.0 loses to nbx: 1.26).
+    let flat = dispatch::select(Some(&synthetic_model(0.0)), &s, Some("heavy"));
+    assert_eq!(flat.algo, SddeAlgorithm::Personalized);
+    let robust = dispatch::select(Some(&synthetic_model(1.0)), &s, Some("heavy"));
+    assert_eq!(robust.algo, SddeAlgorithm::NonBlocking);
+    assert!(
+        robust.rationale.contains("heavy"),
+        "rationale should name the noise regime: {}",
+        robust.rationale
+    );
+    // The full score matrix rides along for the decision table.
+    assert_eq!(robust.scores.len(), 2);
+    assert!(robust.scores[0].score <= robust.scores[1].score);
+}
+
+#[test]
+fn embedded_model_disagrees_with_fault_free_ranking_somewhere() {
+    let m = DispatchModel::embedded();
+    // One representative PatternStats per bucket axis combination.
+    let mut flips = 0;
+    for &(p, region) in &[(16, 8), (128, 8), (512, 8)] {
+        for &nnz in &[4, 17] {
+            for &constant in &[true, false] {
+                let s = stats(p, region, nnz, constant);
+                let base = dispatch::select(Some(m), &s, None).algo;
+                for prof in &m.profiles {
+                    if dispatch::select(Some(m), &s, Some(prof.as_str())).algo != base {
+                        flips += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        flips > 0,
+        "embedded model never changes its pick under any noise profile — \
+         the fault evidence is dead weight"
+    );
+}
+
+/// End-to-end through a real world: `Dispatch` with no model must produce
+/// the identical virtual time as explicitly running the heuristic's pick,
+/// and with the embedded model loaded, the identical time as explicitly
+/// running the model's pick.
+#[test]
+fn dispatch_is_bit_identical_to_its_resolved_algorithm_in_world() {
+    let topo = Topology::quartz(2, 4);
+    let nranks = topo.nranks();
+    let preset = MatrixPreset::parse("cage14").unwrap().scaled(2000);
+    let part = Partition::new(preset.n, nranks);
+    let patterns: Rc<Vec<SpmvPattern>> = Rc::new(
+        (0..nranks)
+            .map(|r| SpmvPattern::build(&preset, part, r, 7))
+            .collect(),
+    );
+    let s = pattern_set_stats(&topo, RegionKind::Node, Variant::Variable, &patterns);
+    let spec = RunSpec::new(topo, MpiFlavor::Mvapich2).seed(7);
+
+    // No model: fallback must be bit-identical to the legacy pick.
+    let picked = dispatch::select(None, &s, None).algo;
+    let auto = spec
+        .clone()
+        .algo(SddeAlgorithm::Dispatch)
+        .run_sdde(Variant::Variable, patterns.clone());
+    let explicit = spec
+        .clone()
+        .algo(picked)
+        .run_sdde(Variant::Variable, patterns.clone());
+    assert_eq!(auto.time_ns, explicit.time_ns);
+    assert_eq!(
+        auto.summary().user_msgs(),
+        explicit.summary().user_msgs()
+    );
+
+    // Embedded model: same contract against the model's pick.
+    let m = DispatchModel::embedded();
+    let model_pick = dispatch::select(Some(m), &s, None).algo;
+    let modeled = spec
+        .clone()
+        .algo(SddeAlgorithm::Dispatch)
+        .dispatch(Some(m.clone()))
+        .run_sdde(Variant::Variable, patterns.clone());
+    let model_explicit = spec
+        .clone()
+        .algo(model_pick)
+        .run_sdde(Variant::Variable, patterns);
+    assert_eq!(modeled.time_ns, model_explicit.time_ns);
+}
