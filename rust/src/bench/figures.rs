@@ -202,6 +202,42 @@ pub fn pattern_set_stats(
     }
 }
 
+/// Comm-local analog of [`pattern_set_stats`]: region membership comes
+/// from the communicator's own (group-aware, densely re-indexed) region
+/// map instead of raw machine topology, so it is meaningful on split and
+/// dup'd communicators; `patterns` are indexed by comm-local rank. On the
+/// world communicator this agrees with [`pattern_set_stats`] exactly.
+pub fn pattern_set_stats_for(
+    mx: &crate::mpix::MpixComm,
+    variant: Variant,
+    patterns: &[SpmvPattern],
+) -> PatternStats {
+    let n = patterns.len().max(1);
+    let mean_nnz =
+        patterns.iter().map(|p| p.recv_nnz()).sum::<usize>() as f64 / n as f64;
+    let (mut local, mut total) = (0usize, 0usize);
+    for p in patterns {
+        let me = mx.region(p.rank);
+        local += p
+            .needed
+            .iter()
+            .filter(|(o, _)| mx.region(*o) == me)
+            .count();
+        total += p.needed.len();
+    }
+    PatternStats {
+        nranks: mx.comm.nranks(),
+        region_size: mx.region_ranks(0).len(),
+        send_nnz: mean_nnz.round() as usize,
+        local_frac: if total == 0 {
+            0.0
+        } else {
+            local as f64 / total as f64
+        },
+        constant: variant == Variant::ConstSize,
+    }
+}
+
 /// Run a sweep and return every measured point.
 pub fn run_sweep(cfg: &SweepConfig) -> Vec<Point> {
     run_sweep_bench(cfg).0

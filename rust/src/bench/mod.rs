@@ -8,11 +8,14 @@
 //! independent sweep cells on worker threads with bit-identical results
 //! and ordered progress output; [`chaos`] re-runs a figure sweep under
 //! seeded fault plans and reports makespan inflation; [`calibrate`]
-//! distills figure + chaos sweeps into a [`crate::mpix::DispatchModel`].
+//! distills figure + chaos sweeps into a [`crate::mpix::DispatchModel`];
+//! [`multi`] drives K concurrent SDDEs in one faulted world, one derived
+//! communicator per pattern, and checks them against serial oracles.
 
 pub mod calibrate;
 pub mod chaos;
 pub mod figures;
+pub mod multi;
 pub mod neighbor;
 pub mod par;
 pub mod report;
@@ -21,9 +24,10 @@ pub mod runspec;
 pub use calibrate::{run_calibrate, CalibrateConfig};
 pub use chaos::{profile_label, run_chaos, ChaosConfig, ChaosReport, ChaosRun};
 pub use figures::{
-    pattern_set_stats, run_once, run_once_traced, run_sweep, run_sweep_bench, FigureId, Point,
-    SweepConfig, Variant,
+    pattern_set_stats, pattern_set_stats_for, run_once, run_once_traced, run_sweep,
+    run_sweep_bench, FigureId, Point, SweepConfig, Variant,
 };
+pub use multi::{oracle_digests, run_multi, MultiConfig, MultiRun};
 pub use neighbor::{
     run_halo_once, run_neighbor_sweep, run_neighbor_sweep_bench, HaloMethod, NeighborPoint,
     NeighborSweepConfig,

@@ -38,7 +38,7 @@ use crate::trace::{Trace, TraceConfig, TraceSummary};
 
 /// Watchdog horizon from `SDDE_WATCHDOG` (virtual ns); unset/invalid = no
 /// watchdog, matching behavior before the variable existed.
-fn watchdog_from_env() -> Option<Time> {
+pub(crate) fn watchdog_from_env() -> Option<Time> {
     std::env::var("SDDE_WATCHDOG")
         .ok()
         .and_then(|s| s.trim().parse::<Time>().ok())

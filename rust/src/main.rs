@@ -9,9 +9,14 @@
 //!   critical path, Chrome-trace JSON (+ optional CSV) export.
 //! * `solve`    — distributed CG/Jacobi solve over an SDDE-formed pattern.
 //! * `chaos`    — re-run a figure sweep under a battery of seeded fault
-//!   plans; report makespan inflation and check traffic invariance.
+//!   plans; report makespan inflation and check traffic invariance. With
+//!   `--patterns K`, run K *concurrent* SDDEs in one faulted world (one
+//!   derived communicator per pattern) and check per-context send↔recv
+//!   conservation, zero cross-context deliveries, and agreement with
+//!   serial single-pattern oracles.
 //! * `dispatch` — print the evidence model's decision table for a pattern
-//!   regime (which algorithm wins per noise profile, and why).
+//!   regime (which algorithm wins per noise profile, and why); `--split`
+//!   re-runs the decision on a node-parity split communicator.
 //! * `calibrate`— run figure + chaos sweeps and distill a dispatch model
 //!   (JSON) from the measured base costs, fault inflation and
 //!   critical-path wait shares.
@@ -44,9 +49,10 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Result};
 
 use sdde::bench::{
-    pattern_set_stats, render_figure, render_neighbor_figure, resolve_jobs, run_calibrate,
-    run_chaos, run_neighbor_sweep_bench, run_sweep_bench, write_bench_json, write_csv,
-    write_neighbor_csv, CalibrateConfig, ChaosConfig, FigureId, HaloMethod,
+    oracle_digests, pattern_set_stats, pattern_set_stats_for, profile_label, render_figure,
+    render_neighbor_figure, resolve_jobs, run_calibrate, run_chaos, run_multi,
+    run_neighbor_sweep_bench, run_sweep_bench, write_bench_json, write_csv,
+    write_neighbor_csv, CalibrateConfig, ChaosConfig, FigureId, HaloMethod, MultiConfig,
     NeighborSweepConfig, ProgressSink, RunSpec, SweepBench, SweepConfig, Variant,
 };
 use sdde::mpi::World;
@@ -54,7 +60,9 @@ use sdde::mpix::{dispatch, DispatchModel, MpixComm, MpixInfo, NeighborMethod, Sd
 use sdde::simnet::{CostModel, FaultPlan, FaultProfile, MpiFlavor, RegionKind, Topology};
 use sdde::solver::{cg, jacobi, CsrLocal, DistMatrix};
 use sdde::sparse::{form_commpkg, MatrixPreset, Partition, SpmvPattern};
-use sdde::trace::{critical_path, write_chrome_trace, write_trace_csv, TraceConfig};
+use sdde::trace::{
+    critical_path, write_chrome_trace, write_trace_csv, write_trace_csv_opts, TraceConfig,
+};
 use sdde::util::{fmt, Args};
 use std::rc::Rc;
 
@@ -103,7 +111,7 @@ fn print_help() {
                  [--dispatch-model embedded|none|PATH] [--noise PROFILE]\n\
          trace   [--matrix <preset>] [--div N] [--nodes N] [--ppn N]\n\
                  [--algo NAME] [--variant crs|v] [--mpi openmpi|mvapich2]\n\
-                 [--seed N] [--faults SEED[:PROFILE]]\n\
+                 [--seed N] [--faults SEED[:PROFILE]] [--per-ctx]\n\
                  [--out FILE.json] [--csv FILE.csv]\n\
          solve   [--nx N --ny N] [--nodes N --ppn N] [--solver cg|jacobi]\n\
                  [--algo NAME] [--iters N] [--halo p2p|standard|loc]\n\
@@ -111,9 +119,12 @@ fn print_help() {
                  [--matrices a,b] [--nseeds N | --seeds 1,2,..]\n\
                  [--profile light|heavy|jitter|straggler|rendezvous|duplicate]\n\
                  [--jobs N] [--dispatch-model embedded|none|PATH]\n\
+                 [--patterns K] (multi-pattern mode; then also:\n\
+                 [--matrix <preset>] [--algo NAME] [--variant crs|v]\n\
+                 [--faults SEED[:PROFILE]] [--per-ctx] [--csv FILE.csv])\n\
          dispatch [--matrix <preset>] [--div N] [--nodes N] [--ppn N]\n\
                  [--variant crs|v] [--region node|socket] [--seed N]\n\
-                 [--dispatch-model embedded|none|PATH]\n\
+                 [--dispatch-model embedded|none|PATH] [--split]\n\
          calibrate [--figs 5,7|all] [--div N] [--nodes 2,4] [--ppn N]\n\
                  [--matrices a,b] [--profiles light,heavy,jitter,straggler]\n\
                  [--nseeds N | --seeds 1,2,..] [--robustness W]\n\
@@ -451,6 +462,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
         flavor.name()
     );
     println!("{}", trace.summary.render(&title));
+    // --per-ctx (or any non-world traffic): per-context rollup with the
+    // conservation verdict and cross-context delivery audit.
+    let per_ctx = args.has("per-ctx");
+    if per_ctx || trace.summary.has_multiple_ctx() {
+        println!("{}", trace.summary.render_per_ctx());
+    }
     println!();
     println!("{}", critical_path(&trace.events).render());
     println!("SDDE time (max over ranks): {}", fmt::ns(t));
@@ -462,7 +479,14 @@ fn cmd_trace(args: &Args) -> Result<()> {
     );
     if let Some(csv) = args.get("csv") {
         let csv_path = PathBuf::from(csv);
-        write_trace_csv(&csv_path, &trace.events)?;
+        // --per-ctx forces the trailing ctx column even for world-only
+        // traffic; otherwise it appears only when a derived context shows
+        // up (single-comm exports stay byte-identical).
+        if per_ctx {
+            write_trace_csv_opts(&csv_path, &trace.events, true)?;
+        } else {
+            write_trace_csv(&csv_path, &trace.events)?;
+        }
         println!("wrote {}", csv_path.display());
     }
     Ok(())
@@ -537,10 +561,99 @@ fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Multi-pattern chaos (`chaos --patterns K`): K concurrent SDDEs in one
+/// faulted world, each exchange on its own derived communicator. Checks
+/// three things and fails loudly on each: every pattern's result matches
+/// its serial single-pattern oracle, zero cross-context deliveries
+/// occurred, and send↔recv conservation holds per context.
+fn cmd_chaos_multi(args: &Args, patterns: usize) -> Result<()> {
+    let matrix = args.get_or("matrix", "cage14");
+    let div = args.get_parsed("div", 64usize);
+    let preset = MatrixPreset::parse(matrix)
+        .map(|p| if div > 1 { p.scaled(div) } else { p })
+        .ok_or_else(|| anyhow!("unknown matrix preset {matrix}"))?;
+    let nodes = args.get_parsed("nodes", 2usize);
+    let ppn = args.get_parsed("ppn", 4usize);
+    let algo = args
+        .get_with("algo", SddeAlgorithm::Dispatch, parse_algo)
+        .map_err(|e| anyhow!(e))?;
+    let variant = parse_variant(args, "v")?;
+    let seed = args.get_parsed("seed", 2023u64);
+    let faults = parse_faults(args)?;
+    let per_ctx = args.has("per-ctx");
+    let csv = args.get("csv").map(PathBuf::from);
+    let trace_cfg = if csv.is_some() {
+        TraceConfig::full()
+    } else {
+        TraceConfig::counters_only()
+    };
+
+    let topo = Topology::quartz(nodes, ppn);
+    let nranks = topo.nranks();
+    let cfg = MultiConfig::new(topo, MpiFlavor::Mvapich2, patterns, preset)
+        .algo(algo)
+        .variant(variant)
+        .seed(seed)
+        .faults(faults)
+        .trace(trace_cfg);
+    eprintln!(
+        "multi-pattern chaos: {} concurrent SDDEs on {} ranks ({} nodes x {} ppn), \
+         algo {}, faults {}",
+        patterns,
+        nranks,
+        nodes,
+        ppn,
+        algo.name(),
+        match &faults {
+            Some(p) => format!("seed {} ({})", p.seed, profile_label(&p.profile)),
+            None => "off".to_string(),
+        },
+    );
+    let run = run_multi(&cfg);
+    let oracle = oracle_digests(&cfg);
+    let agree = run.digests == oracle;
+    println!(
+        "-- multi-pattern chaos: {} pattern(s) x {} ranks --",
+        patterns, nranks
+    );
+    println!("SDDE time (max over ranks): {}", fmt::ns(run.time_ns));
+    println!("{}", run.trace.summary.render_per_ctx());
+    println!(
+        "oracle agreement: {}",
+        if agree {
+            "OK (every pattern matches its serial single-pattern run)"
+        } else {
+            "VIOLATED"
+        }
+    );
+    if let Some(csv_path) = csv {
+        write_trace_csv_opts(&csv_path, &run.trace.events, true)?;
+        println!("wrote {}", csv_path.display());
+    }
+    let _ = per_ctx; // breakdown is always printed in multi-pattern mode
+    if !agree {
+        bail!("multi-pattern results diverged from serial oracles");
+    }
+    if run.trace.summary.cross_ctx_matches != 0 {
+        bail!(
+            "{} cross-context deliveries detected",
+            run.trace.summary.cross_ctx_matches
+        );
+    }
+    if !run.trace.summary.conservation_ok() {
+        bail!("per-context send<->recv conservation violated");
+    }
+    Ok(())
+}
+
 /// Chaos sweep: one fault-free baseline plus one faulted re-run per seed,
 /// reporting makespan inflation and enforcing the traffic invariant
 /// (faults may move virtual time, never message counts).
 fn cmd_chaos(args: &Args) -> Result<()> {
+    if let Some(k) = args.get("patterns") {
+        let k = parse_count(k).map_err(|e| anyhow!("bad --patterns {k}: {e}"))?;
+        return cmd_chaos_multi(args, k);
+    }
     let fig = {
         let s = args.get_or("fig", "5");
         FigureId::parse(s).ok_or_else(|| anyhow!("unknown figure {s}"))?
@@ -636,6 +749,54 @@ fn cmd_dispatch(args: &Args) -> Result<()> {
             let sel = dispatch::select(None, &stats, parse_noise(args).as_deref());
             println!("no model loaded; {}", sel.rationale);
             println!("pick: {}", sel.algo.name());
+        }
+    }
+
+    if args.has("split") {
+        // Same decision re-run on a node-parity split communicator: the
+        // region map, pattern stats, and dispatch pick are all computed
+        // comm-locally, proving the dispatch layer works on derived
+        // communicators (and exercising Comm::split end to end).
+        let topo = Topology::quartz(nodes, ppn);
+        let preset2 = preset.clone();
+        let world = World::new(topo, CostModel::preset(MpiFlavor::Mvapich2));
+        let out = world.run(move |c| {
+            let preset = preset2.clone();
+            async move {
+                let color = (c.rank() / ppn) % 2;
+                let sub = c.split(color as u64, c.rank() as i64).await;
+                if color != 0 || sub.rank() != 0 {
+                    return None;
+                }
+                let n = sub.nranks();
+                let ctx = sub.ctx().0;
+                let mx = MpixComm::new(sub, region);
+                let part = Partition::new(preset.n, n);
+                let pats: Vec<SpmvPattern> = (0..n)
+                    .map(|r| SpmvPattern::build(&preset, part, r, seed))
+                    .collect();
+                Some((pattern_set_stats_for(&mx, variant, &pats), ctx, n))
+            }
+        });
+        let (split_stats, ctx, sub_n) = out
+            .results
+            .into_iter()
+            .flatten()
+            .next()
+            .expect("color 0 is never empty");
+        println!(
+            "split comm: {} of {} ranks on ctx {} — bucket {}",
+            sub_n,
+            nranks,
+            ctx,
+            split_stats.bucket()
+        );
+        match &model {
+            Some(m) => println!("{}", m.decision_table(&split_stats)),
+            None => {
+                let sel = dispatch::select(None, &split_stats, parse_noise(args).as_deref());
+                println!("pick on split comm: {}", sel.algo.name());
+            }
         }
     }
     Ok(())

@@ -27,6 +27,26 @@ pub use world::{
 /// MPI-style message tag.
 pub type Tag = u32;
 
+/// Communicator context id — the invisible third component of the message
+/// envelope. Matching keys on `(ctx, src, tag)`, so traffic on one
+/// communicator can never satisfy a receive posted on another even when
+/// `(src, tag)` collide. `CtxId::WORLD` (0) is reserved for the world
+/// communicator: single-communicator runs never mint another context and
+/// stay bit-identical with the pre-context stack (DESIGN.md invariant 10).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CtxId(pub u32);
+
+impl CtxId {
+    /// The world communicator's reserved context.
+    pub const WORLD: CtxId = CtxId(0);
+}
+
+impl std::fmt::Display for CtxId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
 /// Wildcard source for receives/probes.
 pub const ANY_SOURCE: usize = usize::MAX;
 /// Wildcard tag for receives/probes.
@@ -42,3 +62,7 @@ pub(crate) const TAG_IBARRIER: Tag = TAG_INTERNAL_BASE + 0x0200_0000;
 pub(crate) const TAG_BCAST: Tag = TAG_INTERNAL_BASE + 0x0300_0000;
 pub(crate) const TAG_GATHER: Tag = TAG_INTERNAL_BASE + 0x0400_0000;
 pub(crate) const TAG_ALLTOALL: Tag = TAG_INTERNAL_BASE + 0x0500_0000;
+/// Pseudo-family: per-communicator RMA window sequence numbers. Never put
+/// on the wire — used only as a `next_seq` key so collective window
+/// allocation order identifies windows across ranks (see [`rma`]).
+pub(crate) const TAG_WIN: Tag = TAG_INTERNAL_BASE + 0x0600_0000;

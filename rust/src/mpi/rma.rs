@@ -10,6 +10,7 @@ use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 use super::world::Comm;
+use super::TAG_WIN;
 use crate::simnet::Tier;
 use crate::trace::{Event, EventKind};
 
@@ -19,10 +20,13 @@ pub(crate) struct WinState {
 }
 
 /// Handle to a window allocated by [`Comm::win_allocate`]. Windows are
-/// identified by index; each rank holds `words` u64 slots.
+/// identified by (context, per-communicator allocation seq) — collective
+/// allocation order *on the owning communicator* — so windows line up
+/// across ranks even when several communicators allocate concurrently.
+/// Each rank holds `words` u64 slots.
 pub struct Window {
     comm: Comm,
-    id: usize,
+    id: (u32, u32),
     words: usize,
     /// Puts issued by this rank not yet delivered (epoch-local).
     outstanding: Rc<Cell<u64>>,
@@ -32,15 +36,20 @@ pub struct Window {
 
 impl Comm {
     /// Collectively allocate a window with `words` u64 slots per rank,
-    /// zero-initialized. All ranks must call it in the same order.
+    /// zero-initialized. All ranks must call it in the same order (per
+    /// communicator — other communicators' allocations don't interfere).
     pub async fn win_allocate(&self, words: usize) -> Window {
-        let id = {
-            let mut r = self.state.ranks[self.rank].borrow_mut();
-            r.windows.push(WinState {
-                data: vec![0; words],
-            });
-            r.windows.len() - 1
-        };
+        let id = (self.ctx().0, self.next_seq(TAG_WIN));
+        {
+            let mut r = self.state.ranks[self.world_rank()].borrow_mut();
+            let prev = r.windows.insert(
+                id,
+                WinState {
+                    data: vec![0; words],
+                },
+            );
+            debug_assert!(prev.is_none(), "window id allocated twice");
+        }
         // Window creation synchronizes (and pays the fence overhead once).
         self.barrier().await;
         self.charge_cpu(self.cost().rma_fence_overhead).await;
@@ -59,14 +68,17 @@ impl Window {
         self.words
     }
 
-    /// `MPI_Put`: deposit `vals` into `dst`'s window at `offset` words.
-    /// Origin-side cost only; completion is deferred to the next fence.
-    /// `wire_bytes` models the datatype (4 for MPI_INT payloads).
+    /// `MPI_Put`: deposit `vals` into `dst`'s window at `offset` words
+    /// (`dst` is comm-local). Origin-side cost only; completion is
+    /// deferred to the next fence. `wire_bytes` models the datatype (4
+    /// for MPI_INT payloads).
     pub async fn put(&self, dst: usize, offset: usize, vals: &[u64], wire_bytes_per: usize) {
         let c = &self.comm;
         assert!(offset + vals.len() <= self.words, "put out of window bounds");
         let bytes = vals.len() * wire_bytes_per;
-        let tier = c.topo().tier(c.rank(), dst);
+        let me = c.world_rank();
+        let dst = c.to_world(dst);
+        let tier = c.topo().tier(me, dst);
 
         c.bump_counter(|ct| {
             ct.rma_puts += 1;
@@ -74,7 +86,7 @@ impl Window {
             ct.user_msgs[t] += 1;
             ct.user_bytes[t] += bytes as u64;
             if tier == Tier::InterNode {
-                ct.internode_sent[c.rank()] += 1;
+                ct.internode_sent[me] += 1;
             }
         });
 
@@ -84,11 +96,12 @@ impl Window {
         // NIC serialization + wire through the shared fabric path (same
         // contention as p2p), but no matching at the target.
         let t0 = c.now();
-        let (_inject_end, arrival) = c.state.transfer_times(c.rank(), dst, tier, bytes, bytes);
+        let (_inject_end, arrival) = c.state.transfer_times(me, dst, tier, bytes, bytes);
         if c.state.tracer.enabled() {
             c.state.tracer.record(Event {
                 kind: EventKind::RmaPut,
-                rank: c.rank(),
+                ctx: c.ctx(),
+                rank: me,
                 peer: dst,
                 tag: 0,
                 bytes,
@@ -107,7 +120,7 @@ impl Window {
         c.sim().schedule(arrival, move || {
             state.sim.note_progress();
             let mut r = state.ranks[dst].borrow_mut();
-            let win = &mut r.windows[id];
+            let win = r.windows.get_mut(&id).expect("put into unallocated window");
             win.data[offset..offset + vals.len()].copy_from_slice(&vals);
             drop(r);
             outstanding.set(outstanding.get() - 1);
@@ -132,14 +145,20 @@ impl Window {
 
     /// Read `len` words of the local window at `offset`.
     pub fn read_local(&self, offset: usize, len: usize) -> Vec<u64> {
-        let r = self.comm.state.ranks[self.comm.rank()].borrow();
-        r.windows[self.id].data[offset..offset + len].to_vec()
+        let r = self.comm.state.ranks[self.comm.world_rank()].borrow();
+        r.windows[&self.id].data[offset..offset + len].to_vec()
     }
 
     /// Overwrite the local window contents (e.g. reset between epochs).
     pub fn fill_local(&self, value: u64) {
-        let mut r = self.comm.state.ranks[self.comm.rank()].borrow_mut();
-        for w in r.windows[self.id].data.iter_mut() {
+        let mut r = self.comm.state.ranks[self.comm.world_rank()].borrow_mut();
+        for w in r
+            .windows
+            .get_mut(&self.id)
+            .expect("window not allocated on this rank")
+            .data
+            .iter_mut()
+        {
             *w = value;
         }
     }

@@ -121,8 +121,9 @@ impl WaitAny<'_> {
         if now > self.t0 && st.tracer.enabled() {
             st.tracer.record(Event {
                 kind: EventKind::Wait,
-                rank: self.comm.rank(),
-                peer: self.comm.rank(),
+                ctx: self.comm.ctx(),
+                rank: self.comm.world_rank(),
+                peer: self.comm.world_rank(),
                 tag: 0,
                 bytes: 0,
                 tier: Tier::SelfMsg,

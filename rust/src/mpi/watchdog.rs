@@ -5,9 +5,10 @@
 //! assembles a [`WaitGraph`] from per-rank state instead of hanging or
 //! panicking bare: every blocked operation with the envelope it waits
 //! for, the *nearest-miss* unexpected messages sitting in that rank's
-//! queue (same source but wrong tag, or same tag but wrong source — the
-//! classic mismatched-tag bug), and a wait-for cycle if one exists
-//! (send/send deadlocks).
+//! queue (same source but wrong tag, same tag but wrong source — the
+//! classic mismatched-tag bug — or a matching `(src, tag)` on a
+//! *different communicator context*, the classic cross-communicator
+//! bug), and a wait-for cycle if one exists (send/send deadlocks).
 //!
 //! Blocked receives are read straight off the posted-receive queues.
 //! Operations with no queue footprint — synchronous/rendezvous sends
@@ -20,7 +21,7 @@
 use std::rc::{Rc, Weak};
 
 use super::world::WorldState;
-use super::{Tag, ANY_SOURCE, ANY_TAG};
+use super::{CtxId, Tag, ANY_SOURCE, ANY_TAG};
 use crate::simnet::{Stall, Time};
 
 /// What a blocked operation is.
@@ -51,8 +52,10 @@ impl OpKind {
 #[derive(Clone, Debug)]
 pub struct BlockedOp {
     pub kind: OpKind,
-    /// Peer rank (source for recv/probe, destination for sends); may be
-    /// [`ANY_SOURCE`] for wildcard receives/probes.
+    /// Communicator context the operation was issued on.
+    pub ctx: CtxId,
+    /// Peer *world* rank (source for recv/probe, destination for sends);
+    /// may be [`ANY_SOURCE`] for wildcard receives/probes.
     pub peer: usize,
     /// Tag; may be [`ANY_TAG`].
     pub tag: Tag,
@@ -68,6 +71,9 @@ pub enum MissReason {
     TagMismatch,
     /// Tag matches the spec, source does not.
     SrcMismatch,
+    /// `(src, tag)` match the spec but the message was sent on a
+    /// different communicator (cross-communicator bug).
+    CtxMismatch,
 }
 
 /// An unexpected message that nearly matches one of a rank's blocked
@@ -75,9 +81,11 @@ pub enum MissReason {
 #[derive(Clone, Debug)]
 pub struct NearMiss {
     /// Envelope of the unexpected message.
+    pub ctx: CtxId,
     pub src: usize,
     pub tag: Tag,
     /// The blocked spec it nearly matched.
+    pub wanted_ctx: CtxId,
     pub wanted_peer: usize,
     pub wanted_tag: Tag,
     pub reason: MissReason,
@@ -164,20 +172,32 @@ impl WaitGraph {
                     .since
                     .map(|t| format!(" since t={t}"))
                     .unwrap_or_default();
+                // Name the communicator only off the world context, so
+                // single-communicator reports render exactly as before.
+                let on_ctx = if op.ctx == CtxId::WORLD {
+                    String::new()
+                } else {
+                    format!(" on ctx {}", op.ctx)
+                };
                 out.push_str(&format!(
-                    "  rank {}: blocked {} {} {} tag {}{}\n",
+                    "  rank {}: blocked {} {} {} tag {}{}{}\n",
                     b.rank,
                     op.kind.name(),
                     dir,
                     fmt_peer(op.peer),
                     fmt_tag(op.tag),
+                    on_ctx,
                     since
                 ));
             }
             for nm in &b.near_misses {
                 let why = match nm.reason {
-                    MissReason::TagMismatch => "tag mismatch",
-                    MissReason::SrcMismatch => "source mismatch",
+                    MissReason::TagMismatch => "tag mismatch".to_string(),
+                    MissReason::SrcMismatch => "source mismatch".to_string(),
+                    MissReason::CtxMismatch => format!(
+                        "context mismatch (msg on ctx {}, recv on ctx {})",
+                        nm.ctx, nm.wanted_ctx
+                    ),
                 };
                 out.push_str(&format!(
                     "    near miss: unexpected msg from {} tag {} \
@@ -244,8 +264,9 @@ pub(crate) fn collect_wait_graph(state: &WorldState, stall: Stall) -> WaitGraph 
         let mut ops: Vec<BlockedOp> = r
             .watchdog_recvs()
             .into_iter()
-            .map(|(src, tag)| BlockedOp {
+            .map(|(ctx, src, tag)| BlockedOp {
                 kind: OpKind::Recv,
+                ctx,
                 peer: src,
                 tag,
                 since: None,
@@ -258,19 +279,23 @@ pub(crate) fn collect_wait_graph(state: &WorldState, stall: Stall) -> WaitGraph 
         let unexpected_env = r.watchdog_unexpected();
         let mut near_misses = Vec::new();
         for op in ops.iter().filter(|o| matches!(o.kind, OpKind::Recv | OpKind::Probe)) {
-            for &(src, tag) in &unexpected_env {
+            for &(ctx, src, tag) in &unexpected_env {
+                let ctx_ok = op.ctx == ctx;
                 let src_ok = op.peer == ANY_SOURCE || op.peer == src;
                 let tag_ok = op.tag == ANY_TAG || op.tag == tag;
-                let reason = match (src_ok, tag_ok) {
-                    (true, false) => MissReason::TagMismatch,
-                    (false, true) => MissReason::SrcMismatch,
-                    // Full match (blocked elsewhere) or full mismatch:
-                    // neither is a *near* miss.
+                let reason = match (ctx_ok, src_ok, tag_ok) {
+                    (true, true, false) => MissReason::TagMismatch,
+                    (true, false, true) => MissReason::SrcMismatch,
+                    (false, true, true) => MissReason::CtxMismatch,
+                    // Full match (blocked elsewhere) or a ≥2-component
+                    // mismatch: neither is a *near* miss.
                     _ => continue,
                 };
                 near_misses.push(NearMiss {
+                    ctx,
                     src,
                     tag,
+                    wanted_ctx: op.ctx,
                     wanted_peer: op.peer,
                     wanted_tag: op.tag,
                     reason,

@@ -11,7 +11,7 @@ use std::rc::Rc;
 use std::task::{Context, Poll, Waker};
 
 use super::watchdog::{self, BlockedOp, OpGuard, OpKind, WaitGraph};
-use super::{Tag, ANY_SOURCE, ANY_TAG, TAG_INTERNAL_BASE};
+use super::{CtxId, Tag, ANY_SOURCE, ANY_TAG, TAG_INTERNAL_BASE};
 use crate::simnet::fault::{self, FaultState};
 use crate::simnet::{CostModel, FaultPlan, Sim, SimHandle, SimStats, Tier, Time, Topology};
 use crate::trace::{Event, EventKind, Trace, TraceConfig, TraceSummary, Tracer};
@@ -230,6 +230,9 @@ impl Counters {
 /// An arrived-but-unmatched message sitting in the unexpected queue, or the
 /// RTS of a rendezvous message.
 struct InMsg {
+    /// Communicator context the message was sent on (envelope component).
+    ctx: CtxId,
+    /// World rank of the sender (translated to comm-local on match).
     src: usize,
     tag: Tag,
     payload: Payload,
@@ -244,11 +247,27 @@ struct InMsg {
 }
 
 struct RecvSpec {
-    src: usize, // or ANY_SOURCE
+    /// Context of the communicator the receive was posted on. Matching
+    /// requires envelope ctx == spec ctx — no wildcard exists for it.
+    ctx: CtxId,
+    src: usize, // world rank, or ANY_SOURCE
     tag: Tag,   // or ANY_TAG
     req: Request,
     /// Post sequence number (strictly increasing per rank).
     seq: u64,
+    /// Rank translation of the posting communicator (`None` = world), so
+    /// the delivered [`Msg::src`] is comm-local for the caller.
+    group: Option<Rc<CommGroup>>,
+}
+
+impl RecvSpec {
+    /// Comm-local source rank for a message delivered into this spec.
+    fn local_src(&self, world_src: usize) -> usize {
+        match &self.group {
+            Some(g) => g.to_local(world_src),
+            None => world_src,
+        }
+    }
 }
 
 /// Remove `seq` from a bucket's seq list, dropping the bucket when empty
@@ -284,12 +303,16 @@ struct UnexpectedQueue {
     /// Bumped on every push/remove. A receive that charged its match cost
     /// can skip the authoritative post-charge re-lookup when unchanged.
     epoch: u64,
-    /// (src, tag) → seqs with exactly that envelope.
-    by_src_tag: FxHashMap<(usize, Tag), VecDeque<u64>>,
-    /// tag → seqs (serves `ANY_SOURCE` + concrete-tag specs — NBX probes).
-    by_tag: FxHashMap<Tag, VecDeque<u64>>,
-    /// src → seqs (serves concrete-src + `ANY_TAG` specs).
-    by_src: FxHashMap<usize, VecDeque<u64>>,
+    /// (ctx, src, tag) → seqs with exactly that envelope.
+    by_src_tag: FxHashMap<(CtxId, usize, Tag), VecDeque<u64>>,
+    /// (ctx, tag) → seqs (serves `ANY_SOURCE` + concrete-tag specs — NBX
+    /// probes).
+    by_tag: FxHashMap<(CtxId, Tag), VecDeque<u64>>,
+    /// (ctx, src) → seqs (serves concrete-src + `ANY_TAG` specs).
+    by_src: FxHashMap<(CtxId, usize), VecDeque<u64>>,
+    /// ctx → seqs (serves the double-wildcard spec, which still cannot
+    /// cross a communicator boundary).
+    by_ctx: FxHashMap<CtxId, VecDeque<u64>>,
 }
 
 impl UnexpectedQueue {
@@ -301,6 +324,7 @@ impl UnexpectedQueue {
             by_src_tag: FxHashMap::default(),
             by_tag: FxHashMap::default(),
             by_src: FxHashMap::default(),
+            by_ctx: FxHashMap::default(),
         }
     }
 
@@ -310,35 +334,37 @@ impl UnexpectedQueue {
         self.epoch += 1;
         m.seq = seq;
         self.by_src_tag
-            .entry((m.src, m.tag))
+            .entry((m.ctx, m.src, m.tag))
             .or_default()
             .push_back(seq);
-        self.by_tag.entry(m.tag).or_default().push_back(seq);
-        self.by_src.entry(m.src).or_default().push_back(seq);
+        self.by_tag.entry((m.ctx, m.tag)).or_default().push_back(seq);
+        self.by_src.entry((m.ctx, m.src)).or_default().push_back(seq);
+        self.by_ctx.entry(m.ctx).or_default().push_back(seq);
         self.queue.push_back(m);
     }
 
     /// Arrival-order position and seq of the first message matching the
-    /// receive spec (wildcards allowed), via the bucket indexes. Debug
-    /// builds cross-check the answer against the linear scan it replaces.
-    fn first_match(&self, src: usize, tag: Tag) -> Option<(usize, u64)> {
-        let hit = self.first_match_indexed(src, tag);
+    /// receive spec (wildcards allowed; ctx always concrete), via the
+    /// bucket indexes. Debug builds cross-check the answer against the
+    /// linear scan it replaces.
+    fn first_match(&self, ctx: CtxId, src: usize, tag: Tag) -> Option<(usize, u64)> {
+        let hit = self.first_match_indexed(ctx, src, tag);
         debug_assert_eq!(
             hit.map(|(pos, _)| pos),
             self.queue
                 .iter()
-                .position(|m| matches(src, tag, m.src, m.tag)),
-            "bucket index disagrees with linear scan for spec ({src}, {tag})"
+                .position(|m| matches(ctx, src, tag, m.ctx, m.src, m.tag)),
+            "bucket index disagrees with linear scan for spec (ctx {ctx}, {src}, {tag})"
         );
         hit
     }
 
-    fn first_match_indexed(&self, src: usize, tag: Tag) -> Option<(usize, u64)> {
+    fn first_match_indexed(&self, ctx: CtxId, src: usize, tag: Tag) -> Option<(usize, u64)> {
         let seq = match (src == ANY_SOURCE, tag == ANY_TAG) {
-            (false, false) => *self.by_src_tag.get(&(src, tag))?.front()?,
-            (true, false) => *self.by_tag.get(&tag)?.front()?,
-            (false, true) => *self.by_src.get(&src)?.front()?,
-            (true, true) => self.queue.front()?.seq,
+            (false, false) => *self.by_src_tag.get(&(ctx, src, tag))?.front()?,
+            (true, false) => *self.by_tag.get(&(ctx, tag))?.front()?,
+            (false, true) => *self.by_src.get(&(ctx, src))?.front()?,
+            (true, true) => *self.by_ctx.get(&ctx)?.front()?,
         };
         let pos = self.queue.partition_point(|m| m.seq < seq);
         debug_assert!(pos < self.queue.len() && self.queue[pos].seq == seq);
@@ -364,9 +390,10 @@ impl UnexpectedQueue {
             .remove(pos)
             .expect("unexpected-queue position out of range");
         self.epoch += 1;
-        bucket_remove(&mut self.by_src_tag, (m.src, m.tag), m.seq);
-        bucket_remove(&mut self.by_tag, m.tag, m.seq);
-        bucket_remove(&mut self.by_src, m.src, m.seq);
+        bucket_remove(&mut self.by_src_tag, (m.ctx, m.src, m.tag), m.seq);
+        bucket_remove(&mut self.by_tag, (m.ctx, m.tag), m.seq);
+        bucket_remove(&mut self.by_src, (m.ctx, m.src), m.seq);
+        bucket_remove(&mut self.by_ctx, m.ctx, m.seq);
         m
     }
 }
@@ -379,14 +406,15 @@ struct PostedQueue {
     /// Specs in post order; `seq` strictly increasing ⇒ sorted.
     queue: Vec<RecvSpec>,
     next_seq: u64,
-    /// Spec (src, tag), both concrete.
-    exact: FxHashMap<(usize, Tag), VecDeque<u64>>,
-    /// Spec (`ANY_SOURCE`, tag).
-    any_src: FxHashMap<Tag, VecDeque<u64>>,
-    /// Spec (src, `ANY_TAG`).
-    any_tag: FxHashMap<usize, VecDeque<u64>>,
-    /// Spec (`ANY_SOURCE`, `ANY_TAG`).
-    any_any: VecDeque<u64>,
+    /// Spec (ctx, src, tag), src and tag concrete.
+    exact: FxHashMap<(CtxId, usize, Tag), VecDeque<u64>>,
+    /// Spec (ctx, `ANY_SOURCE`, tag).
+    any_src: FxHashMap<(CtxId, Tag), VecDeque<u64>>,
+    /// Spec (ctx, src, `ANY_TAG`).
+    any_tag: FxHashMap<(CtxId, usize), VecDeque<u64>>,
+    /// Spec (ctx, `ANY_SOURCE`, `ANY_TAG`) — wildcards never cross a
+    /// communicator, so even the double wildcard is bucketed per ctx.
+    any_any: FxHashMap<CtxId, VecDeque<u64>>,
 }
 
 impl PostedQueue {
@@ -397,48 +425,62 @@ impl PostedQueue {
             exact: FxHashMap::default(),
             any_src: FxHashMap::default(),
             any_tag: FxHashMap::default(),
-            any_any: VecDeque::new(),
+            any_any: FxHashMap::default(),
         }
     }
 
-    fn push(&mut self, src: usize, tag: Tag, req: Request) {
+    fn push(
+        &mut self,
+        ctx: CtxId,
+        src: usize,
+        tag: Tag,
+        req: Request,
+        group: Option<Rc<CommGroup>>,
+    ) {
         let seq = self.next_seq;
         self.next_seq += 1;
         match (src == ANY_SOURCE, tag == ANY_TAG) {
-            (false, false) => self.exact.entry((src, tag)).or_default().push_back(seq),
-            (true, false) => self.any_src.entry(tag).or_default().push_back(seq),
-            (false, true) => self.any_tag.entry(src).or_default().push_back(seq),
-            (true, true) => self.any_any.push_back(seq),
+            (false, false) => self.exact.entry((ctx, src, tag)).or_default().push_back(seq),
+            (true, false) => self.any_src.entry((ctx, tag)).or_default().push_back(seq),
+            (false, true) => self.any_tag.entry((ctx, src)).or_default().push_back(seq),
+            (true, true) => self.any_any.entry(ctx).or_default().push_back(seq),
         }
-        self.queue.push(RecvSpec { src, tag, req, seq });
+        self.queue.push(RecvSpec {
+            ctx,
+            src,
+            tag,
+            req,
+            seq,
+            group,
+        });
     }
 
     /// Post-order position of the first spec matching an arrival with
-    /// envelope (src, tag) — src and tag are concrete here. Debug builds
+    /// envelope (ctx, src, tag) — all concrete here. Debug builds
     /// cross-check against the linear scan this replaces.
-    fn first_match(&self, src: usize, tag: Tag) -> Option<usize> {
-        let hit = self.first_match_indexed(src, tag);
+    fn first_match(&self, ctx: CtxId, src: usize, tag: Tag) -> Option<usize> {
+        let hit = self.first_match_indexed(ctx, src, tag);
         debug_assert_eq!(
             hit,
             self.queue
                 .iter()
-                .position(|p| matches(p.src, p.tag, src, tag)),
-            "posted index disagrees with linear scan for arrival ({src}, {tag})"
+                .position(|p| matches(p.ctx, p.src, p.tag, ctx, src, tag)),
+            "posted index disagrees with linear scan for arrival (ctx {ctx}, {src}, {tag})"
         );
         hit
     }
 
-    fn first_match_indexed(&self, src: usize, tag: Tag) -> Option<usize> {
+    fn first_match_indexed(&self, ctx: CtxId, src: usize, tag: Tag) -> Option<usize> {
         let mut best: Option<u64> = None;
         let mut consider = |cand: Option<u64>| {
             if let Some(s) = cand {
                 best = Some(best.map_or(s, |b| b.min(s)));
             }
         };
-        consider(self.exact.get(&(src, tag)).and_then(|d| d.front().copied()));
-        consider(self.any_src.get(&tag).and_then(|d| d.front().copied()));
-        consider(self.any_tag.get(&src).and_then(|d| d.front().copied()));
-        consider(self.any_any.front().copied());
+        consider(self.exact.get(&(ctx, src, tag)).and_then(|d| d.front().copied()));
+        consider(self.any_src.get(&(ctx, tag)).and_then(|d| d.front().copied()));
+        consider(self.any_tag.get(&(ctx, src)).and_then(|d| d.front().copied()));
+        consider(self.any_any.get(&ctx).and_then(|d| d.front().copied()));
         let seq = best?;
         let pos = self.queue.partition_point(|p| p.seq < seq);
         debug_assert!(pos < self.queue.len() && self.queue[pos].seq == seq);
@@ -448,14 +490,12 @@ impl PostedQueue {
     fn remove_at(&mut self, pos: usize) -> RecvSpec {
         let spec = self.queue.remove(pos);
         match (spec.src == ANY_SOURCE, spec.tag == ANY_TAG) {
-            (false, false) => bucket_remove(&mut self.exact, (spec.src, spec.tag), spec.seq),
-            (true, false) => bucket_remove(&mut self.any_src, spec.tag, spec.seq),
-            (false, true) => bucket_remove(&mut self.any_tag, spec.src, spec.seq),
-            (true, true) => {
-                let i = self.any_any.partition_point(|&s| s < spec.seq);
-                debug_assert!(i < self.any_any.len() && self.any_any[i] == spec.seq);
-                self.any_any.remove(i);
+            (false, false) => {
+                bucket_remove(&mut self.exact, (spec.ctx, spec.src, spec.tag), spec.seq)
             }
+            (true, false) => bucket_remove(&mut self.any_src, (spec.ctx, spec.tag), spec.seq),
+            (false, true) => bucket_remove(&mut self.any_tag, (spec.ctx, spec.src), spec.seq),
+            (true, true) => bucket_remove(&mut self.any_any, spec.ctx, spec.seq),
         }
         spec
     }
@@ -476,17 +516,18 @@ pub(crate) struct RankState {
     wakers_scratch: Vec<Waker>,
     /// FIFO guard: per-destination last scheduled arrival time.
     last_arrival_to: FxHashMap<usize, Time>,
-    /// Per-collective-kind sequence numbers (tag disambiguation).
-    pub(crate) coll_seq: FxHashMap<Tag, u32>,
-    /// RMA windows (indexed by window id).
-    pub(crate) windows: Vec<super::rma::WinState>,
+    /// RMA windows, keyed by (ctx, per-communicator window seq): collective
+    /// allocation order *on the owning communicator* identifies a window
+    /// across ranks even when other communicators allocate concurrently.
+    pub(crate) windows: FxHashMap<(u32, u32), super::rma::WinState>,
     /// Blocked ops with no queue footprint (sync/rendezvous sends awaiting
     /// a match, blocking probes) — hang-diagnosis registry, host-side only.
     pending_ops: FxHashMap<u64, BlockedOp>,
     next_op_id: u64,
     /// Duplicate-delivery keys already seen by the matching layer (fault
     /// injection retransmits eager data; the first copy to arrive wins).
-    seen_dups: FxHashSet<u64>,
+    /// Keyed by (ctx, dup key) — contexts never share a dedup slot.
+    seen_dups: FxHashSet<(CtxId, u64)>,
 }
 
 impl RankState {
@@ -500,22 +541,30 @@ impl RankState {
             arrival_wakers: Vec::new(),
             wakers_scratch: Vec::new(),
             last_arrival_to: FxHashMap::default(),
-            coll_seq: FxHashMap::default(),
-            windows: Vec::new(),
+            windows: FxHashMap::default(),
             pending_ops: FxHashMap::default(),
             next_op_id: 0,
             seen_dups: FxHashSet::default(),
         }
     }
 
-    /// Hang diagnosis: (src, tag) spec of every posted receive, post order.
-    pub(crate) fn watchdog_recvs(&self) -> Vec<(usize, Tag)> {
-        self.posted.queue.iter().map(|s| (s.src, s.tag)).collect()
+    /// Hang diagnosis: (ctx, src, tag) spec of every posted receive, post
+    /// order (src is a world rank or `ANY_SOURCE`).
+    pub(crate) fn watchdog_recvs(&self) -> Vec<(CtxId, usize, Tag)> {
+        self.posted
+            .queue
+            .iter()
+            .map(|s| (s.ctx, s.src, s.tag))
+            .collect()
     }
 
     /// Hang diagnosis: envelopes in the unexpected queue, arrival order.
-    pub(crate) fn watchdog_unexpected(&self) -> Vec<(usize, Tag)> {
-        self.unexpected.queue.iter().map(|m| (m.src, m.tag)).collect()
+    pub(crate) fn watchdog_unexpected(&self) -> Vec<(CtxId, usize, Tag)> {
+        self.unexpected
+            .queue
+            .iter()
+            .map(|m| (m.ctx, m.src, m.tag))
+            .collect()
     }
 
     /// Hang diagnosis: registered blocked ops in registration order.
@@ -526,12 +575,81 @@ impl RankState {
     }
 }
 
+/// Per-(rank, communicator) state shared by every clone of one `Comm`
+/// handle: tag-family sequence numbers and the collective-call counter
+/// used to pair up `dup`/`split` invocations across ranks.
+pub(crate) struct CommState {
+    /// Per-family tag sequence numbers — previously world-shared in
+    /// `RankState`; per-communicator so `dup()`ed comms never interleave.
+    seqs: RefCell<FxHashMap<Tag, u32>>,
+    /// Number of `dup`/`split` calls issued on this comm by this rank.
+    /// Collective call order is the MPI contract, so the counter agrees
+    /// across member ranks and pairs registrations without RNG.
+    split_seq: Cell<u32>,
+}
+
+impl CommState {
+    fn new() -> CommState {
+        CommState {
+            seqs: RefCell::new(FxHashMap::default()),
+            split_seq: Cell::new(0),
+        }
+    }
+}
+
+/// Rank translation for a split communicator: comm-local ↔ world.
+pub(crate) struct CommGroup {
+    /// comm-local rank → world rank, ascending by split (key, world rank).
+    world_of: Vec<usize>,
+    /// world rank → comm-local rank (`usize::MAX` for non-members).
+    local_of: Vec<usize>,
+}
+
+impl CommGroup {
+    fn new(world_of: Vec<usize>, nranks_world: usize) -> CommGroup {
+        let mut local_of = vec![usize::MAX; nranks_world];
+        for (local, &world) in world_of.iter().enumerate() {
+            local_of[world] = local;
+        }
+        CommGroup { world_of, local_of }
+    }
+
+    fn to_world(&self, local: usize) -> usize {
+        self.world_of[local]
+    }
+
+    fn to_local(&self, world: usize) -> usize {
+        self.local_of[world]
+    }
+}
+
+/// One in-flight (or completed) collective `dup`/`split`, keyed in
+/// `WorldState::splits` by (parent ctx, parent split seq). Members
+/// register before the parent-comm barrier; contexts are minted once, in
+/// ascending color order, after all registrations are visible.
+#[derive(Default)]
+struct SplitRecord {
+    /// (world rank, color, key) per registered member.
+    members: Vec<(usize, u64, i64)>,
+    /// color → minted child context.
+    minted: FxHashMap<u64, CtxId>,
+}
+
 pub(crate) struct WorldState {
     pub(crate) topo: Topology,
     pub(crate) cost: CostModel,
     pub(crate) sim: SimHandle,
     pub(crate) ranks: Vec<RefCell<RankState>>,
     pub(crate) counters: RefCell<Counters>,
+    /// Per-rank `CommState` of the world communicator, so separately
+    /// obtained `World::comm(rank)` handles share sequence numbers (the
+    /// pre-context behavior of the world-global `coll_seq`).
+    world_comms: Vec<Rc<CommState>>,
+    /// Context allocator: next fresh id (0 is reserved for the world, so
+    /// single-communicator runs never observe a minted context).
+    next_ctx: Cell<u32>,
+    /// Split/dup rendezvous registry (see [`SplitRecord`]).
+    splits: RefCell<FxHashMap<(u32, u32), SplitRecord>>,
     /// Shared per-node NIC: transmit-side busy-until (inter-node messages
     /// from all of a node's ranks serialize here — one HFI per node).
     pub(crate) node_tx_free: Vec<Cell<Time>>,
@@ -577,6 +695,9 @@ impl WorldState {
         if self.tracer.enabled() {
             self.tracer.record(Event {
                 kind: EventKind::Fault,
+                // Faults perturb the transport, which is context-blind:
+                // attribute them to the world context.
+                ctx: CtxId::WORLD,
                 rank,
                 peer,
                 tag: code,
@@ -718,6 +839,9 @@ impl WorldBuilder {
                 internode_sent: vec![0; n],
                 ..Counters::default()
             }),
+            world_comms: (0..n).map(|_| Rc::new(CommState::new())).collect(),
+            next_ctx: Cell::new(1),
+            splits: RefCell::new(FxHashMap::default()),
             node_tx_free: (0..nodes).map(|_| Cell::new(0)).collect(),
             node_rx_free: (0..nodes).map(|_| Cell::new(0)).collect(),
             tracer: Tracer::new(self.trace, n),
@@ -753,8 +877,11 @@ impl World {
     /// the argument it receives; exposed for custom spawning in tests).
     pub fn comm(&self, rank: usize) -> Comm {
         Comm {
+            comm_state: self.state.world_comms[rank].clone(),
             state: self.state.clone(),
             rank,
+            ctx: CtxId::WORLD,
+            group: None,
         }
     }
 
@@ -829,24 +956,146 @@ impl World {
 // ---------------------------------------------------------------------------
 
 /// Per-rank communicator handle — the `MPI_COMM_WORLD` analog passed to
-/// every simulated rank program.
+/// every simulated rank program. Derived communicators (from
+/// [`Comm::dup`] / [`Comm::split`]) carry their own context id and rank
+/// group; `rank()`, `nranks()`, and every src/dst argument are
+/// comm-local, exactly as in MPI.
 #[derive(Clone)]
 pub struct Comm {
     pub(crate) state: Rc<WorldState>,
+    /// World rank (indexes `WorldState::ranks`, counters, trace events).
     pub(crate) rank: usize,
+    /// Context id: the envelope component that isolates this comm's
+    /// traffic ([`CtxId::WORLD`] for the world communicator).
+    ctx: CtxId,
+    /// Per-(rank, comm) tag sequences + collective-call counter.
+    comm_state: Rc<CommState>,
+    /// Rank translation; `None` = world group (identity).
+    group: Option<Rc<CommGroup>>,
 }
 
-fn matches(spec_src: usize, spec_tag: Tag, src: usize, tag: Tag) -> bool {
-    (spec_src == ANY_SOURCE || spec_src == src) && (spec_tag == ANY_TAG || spec_tag == tag)
+/// Envelope match: ctx must be equal (no wildcard), src/tag admit
+/// `ANY_SOURCE`/`ANY_TAG`.
+fn matches(
+    spec_ctx: CtxId,
+    spec_src: usize,
+    spec_tag: Tag,
+    ctx: CtxId,
+    src: usize,
+    tag: Tag,
+) -> bool {
+    spec_ctx == ctx
+        && (spec_src == ANY_SOURCE || spec_src == src)
+        && (spec_tag == ANY_TAG || spec_tag == tag)
 }
 
 impl Comm {
+    /// Comm-local rank of this process.
     pub fn rank(&self) -> usize {
+        match &self.group {
+            Some(g) => g.to_local(self.rank),
+            None => self.rank,
+        }
+    }
+
+    /// Number of ranks in this communicator's group.
+    pub fn nranks(&self) -> usize {
+        match &self.group {
+            Some(g) => g.world_of.len(),
+            None => self.state.topo.nranks(),
+        }
+    }
+
+    /// World rank of this process (stable across splits; what topology,
+    /// counters, and trace events are keyed by).
+    pub fn world_rank(&self) -> usize {
         self.rank
     }
 
-    pub fn nranks(&self) -> usize {
-        self.state.topo.nranks()
+    /// This communicator's context id.
+    pub fn ctx(&self) -> CtxId {
+        self.ctx
+    }
+
+    /// World rank of comm-local rank `r` (wildcards pass through).
+    pub fn to_world(&self, r: usize) -> usize {
+        match &self.group {
+            Some(g) if r != ANY_SOURCE => g.to_world(r),
+            _ => r,
+        }
+    }
+
+    /// Comm-local rank of world rank `r` (`usize::MAX` for non-members;
+    /// wildcards pass through).
+    pub fn to_local(&self, r: usize) -> usize {
+        match &self.group {
+            Some(g) if r != ANY_SOURCE => g.to_local(r),
+            _ => r,
+        }
+    }
+
+    /// Duplicate this communicator: same group and rank order, fresh
+    /// context and tag sequences. Collective over the comm; deterministic
+    /// (no RNG — contexts are minted from call order).
+    pub async fn dup(&self) -> Comm {
+        let me = self.rank();
+        self.split(0, me as i64).await
+    }
+
+    /// MPI_Comm_split: ranks sharing `color` form a new communicator,
+    /// ordered by (`key`, world rank). Collective over the comm (every
+    /// member must call, in the same collective order); deterministic.
+    pub async fn split(&self, color: u64, key: i64) -> Comm {
+        // Pair this call with the peers' via the per-comm collective call
+        // counter, then make every registration visible before any read by
+        // running a barrier on the *parent* communicator.
+        let seq = self.comm_state.split_seq.get();
+        self.comm_state.split_seq.set(seq + 1);
+        let slot = (self.ctx.0, seq);
+        self.state
+            .splits
+            .borrow_mut()
+            .entry(slot)
+            .or_default()
+            .members
+            .push((self.rank, color, key));
+        self.barrier().await;
+
+        let (ctx, world_of) = {
+            let mut splits = self.state.splits.borrow_mut();
+            let rec = splits.get_mut(&slot).expect("split record vanished");
+            // Mint child contexts once, in ascending color order, so ids
+            // are a function of the registered set alone (not of which
+            // member rank happens to exit the barrier first).
+            if rec.minted.is_empty() {
+                let mut colors: Vec<u64> = rec.members.iter().map(|&(_, c, _)| c).collect();
+                colors.sort_unstable();
+                colors.dedup();
+                for c in colors {
+                    let id = self.state.next_ctx.get();
+                    self.state.next_ctx.set(id + 1);
+                    rec.minted.insert(c, CtxId(id));
+                }
+            }
+            let ctx = rec.minted[&color];
+            let mut members: Vec<(i64, usize)> = rec
+                .members
+                .iter()
+                .filter(|&&(_, c, _)| c == color)
+                .map(|&(r, _, k)| (k, r))
+                .collect();
+            members.sort_unstable();
+            (ctx, members.into_iter().map(|(_, r)| r).collect::<Vec<usize>>())
+        };
+        debug_assert!(world_of.contains(&self.rank));
+        let group = Rc::new(CommGroup::new(world_of, self.state.topo.nranks()));
+        Comm {
+            state: self.state.clone(),
+            rank: self.rank,
+            ctx,
+            comm_state: Rc::new(CommState::new()),
+            group: Some(group),
+        }
     }
 
     pub fn topo(&self) -> &Topology {
@@ -897,6 +1146,7 @@ impl Comm {
         if cost > 0 && self.state.tracer.enabled() {
             self.state.tracer.record(Event {
                 kind: EventKind::CpuCharge,
+                ctx: self.ctx,
                 rank: self.rank,
                 peer: self.rank,
                 tag: 0,
@@ -929,7 +1179,10 @@ impl Comm {
 
     async fn send_impl(&self, dst: usize, tag: Tag, payload: Payload, sync: bool) -> Request {
         let st = &self.state;
-        assert!(dst < st.topo.nranks(), "send to invalid rank {dst}");
+        assert!(dst < self.nranks(), "send to invalid rank {dst}");
+        // Everything below the translation works in world ranks.
+        let dst = self.to_world(dst);
+        let ctx = self.ctx;
         let tier = st.topo.tier(self.rank, dst);
         let bytes = payload.bytes;
         let mut rendezvous = st.cost.is_rendezvous(bytes) && tier != Tier::SelfMsg;
@@ -981,6 +1234,7 @@ impl Comm {
                 } else {
                     EventKind::EagerSend
                 },
+                ctx,
                 rank: self.rank,
                 peer: dst,
                 tag,
@@ -1018,6 +1272,7 @@ impl Comm {
                 src,
                 BlockedOp {
                     kind,
+                    ctx,
                     peer: dst,
                     tag,
                     since: Some(st.sim.now()),
@@ -1052,14 +1307,18 @@ impl Comm {
             let payload2 = payload.clone();
             let sync2 = sync_req.clone();
             st.sim.schedule(arrival + delay, move || {
-                deliver(&state, src, dst, tag, payload2, rendezvous, sync2, msg_id, Some(key));
+                deliver(
+                    &state, ctx, src, dst, tag, payload2, rendezvous, sync2, msg_id, Some(key),
+                );
             });
         }
 
         // Schedule the arrival at the destination.
         let state = st.clone();
         st.sim.schedule(arrival, move || {
-            deliver(&state, src, dst, tag, payload, rendezvous, sync_req, msg_id, dup_key);
+            deliver(
+                &state, ctx, src, dst, tag, payload, rendezvous, sync_req, msg_id, dup_key,
+            );
         });
         req
     }
@@ -1072,15 +1331,19 @@ impl Comm {
 
     // -- receives -----------------------------------------------------------
 
-    /// Non-blocking receive. `src`/`tag` accept [`ANY_SOURCE`]/[`ANY_TAG`].
+    /// Non-blocking receive. `src`/`tag` accept [`ANY_SOURCE`]/[`ANY_TAG`];
+    /// `src` is comm-local. Matching keys on (ctx, src, tag), so even a
+    /// double wildcard only sees this communicator's traffic.
     pub async fn irecv(&self, src: usize, tag: Tag) -> Request {
         let st = &self.state;
+        let src = self.to_world(src);
+        let ctx = self.ctx;
         // One indexed lookup yields both the candidate match and the
         // charged scan count (the arrival-order position a linear scan of
         // the queue would stop at — the modeled queue-search cost).
         let (cand, scanned, epoch) = {
             let r = st.ranks[self.rank].borrow();
-            let cand = r.unexpected.first_match(src, tag);
+            let cand = r.unexpected.first_match(ctx, src, tag);
             (cand, r.unexpected.scanned(cand), r.unexpected.epoch)
         };
         self.charge_cpu(st.cost.match_cost(scanned)).await;
@@ -1095,7 +1358,7 @@ impl Comm {
             let cand = if r.unexpected.epoch == epoch {
                 cand
             } else {
-                r.unexpected.first_match(src, tag)
+                r.unexpected.first_match(ctx, src, tag)
             };
             cand.map(|(pos, _)| r.unexpected.remove_at(pos))
         };
@@ -1108,7 +1371,7 @@ impl Comm {
         st.ranks[self.rank]
             .borrow_mut()
             .posted
-            .push(src, tag, req.clone());
+            .push(ctx, src, tag, req.clone(), self.group.clone());
         req
     }
 
@@ -1116,12 +1379,15 @@ impl Comm {
     /// completed request, honoring rendezvous data transfer and sync acks.
     async fn complete_match(&self, m: InMsg) -> Request {
         let st = &self.state;
+        debug_assert_eq!(m.ctx, self.ctx, "cross-context unexpected match");
+        st.tracer.note_ctx_match(m.ctx, self.ctx);
         let now = st.sim.now();
         let tier = st.topo.tier(m.src, self.rank);
+        let world_src = m.src;
         let req = Request::new();
         let (bytes, msg_id) = (m.payload.bytes, m.msg_id);
         let msg = Msg {
-            src: m.src,
+            src: self.to_local(m.src),
             tag: m.tag,
             payload: m.payload,
         };
@@ -1134,8 +1400,9 @@ impl Comm {
             if st.tracer.enabled() {
                 st.tracer.record(Event {
                     kind: EventKind::UnexpectedHit,
+                    ctx: m.ctx,
                     rank: self.rank,
-                    peer: msg.src,
+                    peer: world_src,
                     tag: msg.tag,
                     bytes,
                     tier,
@@ -1156,8 +1423,9 @@ impl Comm {
             if st.tracer.enabled() {
                 st.tracer.record(Event {
                     kind: EventKind::UnexpectedHit,
+                    ctx: m.ctx,
                     rank: self.rank,
-                    peer: msg.src,
+                    peer: world_src,
                     tag: msg.tag,
                     bytes,
                     tier,
@@ -1193,13 +1461,14 @@ impl Comm {
     /// whole-queue scan and touches no entries on the host.
     pub async fn iprobe(&self, src: usize, tag: Tag) -> Option<ProbeInfo> {
         let st = &self.state;
+        let src = self.to_world(src);
         let (info, scanned) = {
             let r = st.ranks[self.rank].borrow();
-            let cand = r.unexpected.first_match(src, tag);
+            let cand = r.unexpected.first_match(self.ctx, src, tag);
             let info = cand.map(|(pos, _)| {
                 let m = r.unexpected.peek(pos);
                 ProbeInfo {
-                    src: m.src,
+                    src: self.to_local(m.src),
                     tag: m.tag,
                     count: m.payload.len(),
                     bytes: m.payload.bytes,
@@ -1221,7 +1490,8 @@ impl Comm {
             self.rank,
             BlockedOp {
                 kind: OpKind::Probe,
-                peer: src,
+                ctx: self.ctx,
+                peer: self.to_world(src),
                 tag,
                 since: Some(self.now()),
             },
@@ -1245,10 +1515,12 @@ impl Comm {
 
     /// Reserve and return the next sequence number for an internal
     /// collective tag family (all ranks call collectives in the same
-    /// order, so sequence numbers agree).
+    /// order, so sequence numbers agree). Per-communicator state: comms
+    /// produced by [`Comm::dup`]/[`Comm::split`] start fresh and never
+    /// interleave with their parent's sequences.
     pub(crate) fn next_seq(&self, family: Tag) -> u32 {
-        let mut r = self.state.ranks[self.rank].borrow_mut();
-        let seq = r.coll_seq.entry(family).or_insert(0);
+        let mut seqs = self.comm_state.seqs.borrow_mut();
+        let seq = seqs.entry(family).or_insert(0);
         let s = *seq;
         *seq = seq.wrapping_add(1);
         s
@@ -1292,12 +1564,15 @@ impl Comm {
     }
 
     /// Trace helper for the collective layer: record one algorithm round
-    /// (partner exchange) spanning `[t_start, now]`. No-op when disabled.
+    /// (partner exchange) spanning `[t_start, now]`. `peer` is comm-local.
+    /// No-op when disabled.
     pub(crate) fn trace_coll_round(&self, peer: usize, tag: Tag, bytes: usize, t_start: Time) {
         if self.state.tracer.enabled() {
+            let peer = self.to_world(peer);
             let tier = self.state.topo.tier(self.rank, peer);
             self.state.tracer.record(Event {
                 kind: EventKind::CollRound,
+                ctx: self.ctx,
                 rank: self.rank,
                 peer,
                 tag,
@@ -1318,6 +1593,7 @@ impl Comm {
 #[allow(clippy::too_many_arguments)]
 fn deliver(
     state: &Rc<WorldState>,
+    ctx: CtxId,
     src: usize,
     dst: usize,
     tag: Tag,
@@ -1329,7 +1605,7 @@ fn deliver(
 ) {
     if let Some(key) = dup_key {
         let mut r = state.ranks[dst].borrow_mut();
-        if !r.seen_dups.insert(key) {
+        if !r.seen_dups.insert((ctx, key)) {
             // Retransmitted copy: already delivered once. Dropping here —
             // before the epoch bump, matching, and wakes — makes the
             // duplicate invisible to every observable queue state.
@@ -1347,9 +1623,13 @@ fn deliver(
     wakers.append(&mut r.arrival_wakers);
 
     // Match against posted receives, in post order (bucketed lookup; the
-    // charged cost below is the post-order position, as before).
-    if let Some(i) = r.posted.first_match(src, tag) {
+    // charged cost below is the post-order position, as before — the queue
+    // is shared across communicators, like a real MPI matching engine, so
+    // the charged scan depth is the *global* post-order position).
+    if let Some(i) = r.posted.first_match(ctx, src, tag) {
         let spec = r.posted.remove_at(i);
+        debug_assert_eq!(spec.ctx, ctx, "cross-context posted match");
+        state.tracer.note_ctx_match(ctx, spec.ctx);
         // Charge the receiver's CPU for the match.
         let now = state.sim.now();
         let scanned = i + 1;
@@ -1357,14 +1637,19 @@ fn deliver(
         r.cpu_free = r.cpu_free.max(now) + mcost;
         let tier = state.topo.tier(src, dst);
         let bytes = payload.bytes;
-        let msg = Msg { src, tag, payload };
+        // Msg.src is communicator-local; events below keep the world rank.
+        let msg = Msg {
+            src: spec.local_src(src),
+            tag,
+            payload,
+        };
         if rendezvous {
             let cts = state.cost.latency[tier as usize];
             let data = state.cost.inject_time(tier, msg.payload.bytes)
                 + state.cost.wire_time(tier, msg.payload.bytes);
             let done_at = now + mcost + cts + data;
             drop(r);
-            record_recv_match(state, dst, &msg, bytes, tier, now, done_at, msg_id);
+            record_recv_match(state, ctx, dst, src, tag, bytes, tier, now, done_at, msg_id);
             let req = spec.req;
             state.sim.schedule(done_at, move || {
                 if let Some(s) = &sync_req {
@@ -1382,11 +1667,12 @@ fn deliver(
                     });
             }
             drop(r);
-            record_recv_match(state, dst, &msg, bytes, tier, now, now + mcost, msg_id);
+            record_recv_match(state, ctx, dst, src, tag, bytes, tier, now, now + mcost, msg_id);
             spec.req.complete(Some(msg));
         }
     } else {
         r.unexpected.push(InMsg {
+            ctx,
             src,
             tag,
             payload,
@@ -1407,11 +1693,14 @@ fn deliver(
 }
 
 /// Trace helper: one posted-receive match event (no-op when disabled).
+/// `src` is the sender's world rank (events always use world ranks).
 #[allow(clippy::too_many_arguments)]
 fn record_recv_match(
     state: &Rc<WorldState>,
+    ctx: CtxId,
     dst: usize,
-    msg: &Msg,
+    src: usize,
+    tag: Tag,
     bytes: usize,
     tier: Tier,
     t_start: Time,
@@ -1421,9 +1710,10 @@ fn record_recv_match(
     if state.tracer.enabled() {
         state.tracer.record(Event {
             kind: EventKind::RecvMatch,
+            ctx,
             rank: dst,
-            peer: msg.src,
-            tag: msg.tag,
+            peer: src,
+            tag,
             bytes,
             tier,
             t_start,
@@ -1961,5 +2251,89 @@ mod tests {
                 c.recv(0, 1).await; // no matching send anywhere
             }
         });
+    }
+
+    #[test]
+    fn dup_comms_isolate_matching() {
+        // Same (src, tag) in flight on two communicators: each recv must
+        // match only its own communicator's message, even when the "wrong"
+        // one is already sitting in the unexpected queue.
+        let out = world(2, 1).run(|c| async move {
+            let a = c.dup().await;
+            let b = c.dup().await;
+            if c.rank() == 0 {
+                b.send(1, 7, Payload::ints(&[200])).await;
+                a.send(1, 7, Payload::ints(&[100])).await;
+                Vec::new()
+            } else {
+                let ma = a.recv(0, 7).await;
+                let mb = b.recv(0, 7).await;
+                vec![ma.payload.words[0], mb.payload.words[0]]
+            }
+        });
+        assert_eq!(out.results[1], vec![100, 200]);
+    }
+
+    #[test]
+    fn split_renumbers_and_translates_ranks() {
+        // Odd/even split ordered by *descending* world rank (key = -rank):
+        // rank translation must hold on both the send and recv paths, and
+        // Msg.src must come back comm-local.
+        let out = world(1, 4).run(|c| async move {
+            let sub = c.split((c.rank() % 2) as u64, -(c.rank() as i64)).await;
+            let peer = (sub.rank() + 1) % sub.nranks();
+            sub.send(peer, 3, Payload::ints(&[c.rank() as u64])).await;
+            let m = sub.recv(ANY_SOURCE, 3).await;
+            (sub.rank(), sub.nranks(), m.src, m.payload.words[0])
+        });
+        // Evens {0,2} become sub ranks {1,0}; odds {1,3} become {1,0}.
+        assert_eq!(out.results[0], (1, 2, 0, 2));
+        assert_eq!(out.results[2], (0, 2, 1, 0));
+        assert_eq!(out.results[1], (1, 2, 0, 3));
+        assert_eq!(out.results[3], (0, 2, 1, 1));
+    }
+
+    #[test]
+    fn next_seq_is_per_communicator() {
+        // Tag sequencing is per-(rank, communicator): dup'd comms start
+        // fresh and advance independently of their parent and each other.
+        let out = world(1, 1).run(|c| async move {
+            let a = c.dup().await;
+            let b = c.dup().await;
+            let s0 = (c.next_seq(42), c.next_seq(42));
+            let sa = (a.next_seq(42), a.next_seq(42));
+            let sb = (b.next_seq(42), b.next_seq(42));
+            (s0, sa, sb)
+        });
+        assert_eq!(out.results[0], ((0, 1), (0, 1), (0, 1)));
+    }
+
+    #[test]
+    fn run_checked_reports_ctx_mismatch() {
+        // The classic multi-communicator bug: right (src, tag), wrong
+        // communicator. The wait graph must name the context mismatch.
+        let res = world(2, 1).run_checked(|c| async move {
+            let a = c.dup().await;
+            let b = c.dup().await;
+            if c.rank() == 0 {
+                a.isend(1, 7, Payload::ints(&[1])).await;
+            } else {
+                b.recv(0, 7).await; // hangs: message lives on comm `a`
+            }
+        });
+        let wg = res.err().expect("expected a stalled world");
+        assert_eq!(wg.blocked_ranks(), vec![1]);
+        let b = &wg.blocked[0];
+        assert_eq!(b.near_misses.len(), 1);
+        let nm = &b.near_misses[0];
+        assert_eq!(
+            nm.reason,
+            super::super::watchdog::MissReason::CtxMismatch
+        );
+        assert_eq!((nm.src, nm.tag), (0, 7));
+        assert_eq!((nm.ctx, nm.wanted_ctx), (CtxId(1), CtxId(2)));
+        let rendered = wg.render();
+        assert!(rendered.contains("context mismatch"));
+        assert!(rendered.contains("on ctx 2"));
     }
 }

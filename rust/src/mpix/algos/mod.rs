@@ -30,9 +30,25 @@ pub(crate) struct SddeTags {
     pub intra: Tag,
 }
 
+/// How many SDDE calls one communicator can issue before its tag sequence
+/// would wrap back onto tags still potentially in flight. The sequence is
+/// per-context (each `dup`/`split` gets a fresh budget), so exhausting it
+/// means 2048 collective exchanges on a *single* communicator — beyond
+/// that, dup a new communicator rather than relying on wraparound.
+pub(crate) const SDDE_CALL_BUDGET: u32 = 0x800;
+
 pub(crate) fn alloc_tags(comm: &Comm) -> SddeTags {
     let seq = comm.next_seq(TAG_SDDE);
-    let base = TAG_SDDE + (seq % 0x800) * 4;
+    // The modulo is a release-mode last resort: a wrapped tag can alias an
+    // exchange from 2048 calls ago that is somehow still unmatched. Debug
+    // builds refuse instead of silently risking cross-talk.
+    debug_assert!(
+        seq < SDDE_CALL_BUDGET,
+        "SDDE tag budget exhausted on ctx {}: {seq} calls on one communicator \
+         (budget {SDDE_CALL_BUDGET}); dup() a fresh communicator",
+        comm.ctx(),
+    );
+    let base = TAG_SDDE + (seq % SDDE_CALL_BUDGET) * 4;
     SddeTags {
         data: base,
         intra: base + 1,
@@ -55,5 +71,61 @@ pub(crate) fn crsv_as_crs(out: CrsvResult, sendcount: usize) -> CrsResult {
     CrsResult {
         src: out.src,
         recvvals: out.recvvals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::World;
+    use crate::simnet::{CostModel, MpiFlavor, Topology};
+
+    fn world(ppn: usize) -> World {
+        World::new(
+            Topology::quartz(1, ppn),
+            CostModel::preset(MpiFlavor::Mvapich2),
+        )
+    }
+
+    #[test]
+    fn tag_budget_boundary_last_call_in_budget() {
+        // Call 0x7FF (the last within the budget) still gets a distinct
+        // tag block, 4 tags above call 0x7FE's.
+        let out = world(1).run(|c| async move {
+            for _ in 0..(SDDE_CALL_BUDGET - 1) {
+                c.next_seq(TAG_SDDE);
+            }
+            alloc_tags(&c).data
+        });
+        assert_eq!(out.results[0], TAG_SDDE + (SDDE_CALL_BUDGET - 1) * 4);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "SDDE tag budget exhausted")]
+    fn tag_budget_overflow_panics_in_debug() {
+        // Call 0x800 would wrap onto call 0's tags; debug builds refuse.
+        world(1).run(|c| async move {
+            for _ in 0..SDDE_CALL_BUDGET {
+                c.next_seq(TAG_SDDE);
+            }
+            alloc_tags(&c);
+        });
+    }
+
+    #[test]
+    fn dup_comms_have_independent_tag_sequences() {
+        let out = world(2).run(|c| async move {
+            let a = c.dup().await;
+            let b = c.dup().await;
+            // Burn tags on `a`; `b` and the parent start fresh, and the
+            // two dups hand out identical sequences independently.
+            for _ in 0..5 {
+                alloc_tags(&a);
+            }
+            (alloc_tags(&a).data, alloc_tags(&b).data, alloc_tags(&c).data)
+        });
+        assert_eq!(out.results[0], (TAG_SDDE + 5 * 4, TAG_SDDE, TAG_SDDE));
+        assert_eq!(out.results[1], out.results[0]);
     }
 }

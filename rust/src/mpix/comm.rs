@@ -9,6 +9,7 @@ use super::dispatch::DispatchModel;
 use super::SddeAlgorithm;
 use crate::mpi::{Comm, Window};
 use crate::simnet::RegionKind;
+use crate::util::FxHashMap;
 
 /// Intra-region redistribution strategy for the locality-aware algorithms
 /// (paper §IV-D discusses personalized vs. a dense alltoallv as future
@@ -88,16 +89,31 @@ pub struct MpixComm {
 }
 
 impl MpixComm {
-    /// Build from a world communicator at `region` granularity.
+    /// Build from any communicator at `region` granularity. All rank ids
+    /// here are comm-local; the machine topology is consulted through
+    /// `to_world`, and region ids are densely re-indexed by first
+    /// appearance among the members (a split communicator may touch only a
+    /// subset of the machine, but the algorithms want contiguous region
+    /// ids `0..nregions`). On the world communicator this reproduces the
+    /// topology's own numbering exactly — regions and local ranks are
+    /// assigned in ascending rank order.
     pub fn new(comm: Comm, region: RegionKind) -> MpixComm {
         let topo = comm.topo().clone();
-        let n = topo.nranks();
-        let region_of: Vec<usize> = (0..n).map(|r| topo.region_of(r, region)).collect();
-        let local_rank: Vec<usize> = (0..n).map(|r| topo.local_rank(r, region)).collect();
-        let nregions = topo.num_regions(region);
-        let mut region_ranks = vec![Vec::new(); nregions];
+        let n = comm.nranks();
+        let mut dense: FxHashMap<usize, usize> = FxHashMap::default();
+        let mut region_of = Vec::with_capacity(n);
+        let mut local_rank = Vec::with_capacity(n);
+        let mut region_ranks: Vec<Vec<usize>> = Vec::new();
         for r in 0..n {
-            region_ranks[region_of[r]].push(r);
+            let machine_region = topo.region_of(comm.to_world(r), region);
+            let next = region_ranks.len();
+            let id = *dense.entry(machine_region).or_insert(next);
+            if id == region_ranks.len() {
+                region_ranks.push(Vec::new());
+            }
+            region_of.push(id);
+            local_rank.push(region_ranks[id].len());
+            region_ranks[id].push(r);
         }
         MpixComm {
             comm,
@@ -189,6 +205,33 @@ mod tests {
         });
         assert_eq!(out.results[0], (2, 0, 4));
         assert_eq!(out.results[4], (2, 1, 4));
+    }
+
+    #[test]
+    fn region_maps_on_split_comm() {
+        // Odd world ranks of a 2x4 world form a sub-communicator: its
+        // comm-local ranks 0..4 are world ranks 1,3,5,7 — two per node —
+        // and region ids re-index densely from the members.
+        let w = World::new(
+            Topology::quartz(2, 4),
+            CostModel::preset(MpiFlavor::Mvapich2),
+        );
+        let out = w.run(|c| async move {
+            let sub = c.split((c.rank() % 2) as u64, c.rank() as i64).await;
+            if c.rank() % 2 == 1 {
+                let mx = MpixComm::new(sub.clone(), RegionKind::Node);
+                Some((
+                    mx.nregions(),
+                    mx.my_region(),
+                    mx.local_rank(sub.rank()),
+                    mx.region_ranks(0).to_vec(),
+                ))
+            } else {
+                None
+            }
+        });
+        assert_eq!(out.results[1], Some((2, 0, 0, vec![0, 1])));
+        assert_eq!(out.results[7], Some((2, 1, 1, vec![0, 1])));
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct CriticalPath {
     /// (family, total ns on the chain) over tagged message events,
     /// descending — each algorithm layer's share of the bottleneck.
     pub by_family: Vec<(TagFamily, Time)>,
+    /// (ctx id, total ns on the chain) over message events, descending —
+    /// which communicator's pattern carries the bottleneck. Single-entry
+    /// (ctx 0) for single-communicator runs.
+    pub by_ctx: Vec<(u32, Time)>,
 }
 
 /// Extract the critical path of `events` (any order; empty in → empty out).
@@ -108,18 +112,22 @@ pub fn critical_path(events: &[Event]) -> CriticalPath {
     let covered_ns = steps.iter().map(|e| e.duration()).sum();
     let mut by_kind_map: HashMap<EventKind, Time> = HashMap::new();
     let mut by_family_map: HashMap<TagFamily, Time> = HashMap::new();
+    let mut by_ctx_map: HashMap<u32, Time> = HashMap::new();
     for e in &steps {
         *by_kind_map.entry(e.kind).or_default() += e.duration();
         if e.kind.is_send()
             || matches!(e.kind, EventKind::RecvMatch | EventKind::UnexpectedHit)
         {
             *by_family_map.entry(e.family()).or_default() += e.duration();
+            *by_ctx_map.entry(e.ctx.0).or_default() += e.duration();
         }
     }
     let mut by_kind: Vec<_> = by_kind_map.into_iter().collect();
     by_kind.sort_by_key(|&(k, t)| (std::cmp::Reverse(t), k.name()));
     let mut by_family: Vec<_> = by_family_map.into_iter().collect();
     by_family.sort_by_key(|&(f, t)| (std::cmp::Reverse(t), f.name()));
+    let mut by_ctx: Vec<_> = by_ctx_map.into_iter().collect();
+    by_ctx.sort_by_key(|&(c, t)| (std::cmp::Reverse(t), c));
 
     CriticalPath {
         steps,
@@ -127,6 +135,7 @@ pub fn critical_path(events: &[Event]) -> CriticalPath {
         covered_ns,
         by_kind,
         by_family,
+        by_ctx,
     }
 }
 
@@ -175,6 +184,21 @@ impl CriticalPath {
             }
             out.push('\n');
         }
+        // Per-context attribution appears only when more than one context
+        // contributed, so single-communicator reports are unchanged.
+        if self.by_ctx.len() > 1 {
+            out.push_str("share by ctx:    ");
+            for (i, (c, t)) in self.by_ctx.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let _ = std::fmt::Write::write_fmt(
+                    &mut out,
+                    format_args!("ctx {} {:.1}%", c, pct(*t)),
+                );
+            }
+            out.push('\n');
+        }
         let tail = self.steps.len().saturating_sub(12);
         if tail > 0 {
             let _ = std::fmt::Write::write_fmt(
@@ -209,6 +233,8 @@ mod tests {
     use super::*;
     use crate::simnet::Tier;
 
+    use crate::mpi::CtxId;
+
     fn ev(
         kind: EventKind,
         rank: usize,
@@ -219,6 +245,7 @@ mod tests {
     ) -> Event {
         Event {
             kind,
+            ctx: CtxId::WORLD,
             rank,
             peer,
             tag: 0x1000,
@@ -228,6 +255,18 @@ mod tests {
             t_end,
             msg_id,
         }
+    }
+
+    #[test]
+    fn ctx_attribution_splits_by_context() {
+        let mut send = ev(EventKind::EagerSend, 0, 1, 0, 300, 1);
+        send.ctx = CtxId(2);
+        let mut recv = ev(EventKind::RecvMatch, 1, 0, 300, 350, 1);
+        recv.ctx = CtxId(2);
+        let cp = critical_path(&[send, recv]);
+        assert_eq!(cp.by_ctx, vec![(2, 350)]);
+        // Single-context chain: no per-ctx line in the report.
+        assert!(!cp.render().contains("share by ctx"));
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! causality (`msg_id` links a send to the recv that consumed it) for the
 //! happens-before critical-path extractor in [`crate::trace::critical`].
 
-use crate::mpi::{Tag, TAG_INTERNAL_BASE};
+use crate::mpi::{CtxId, Tag, TAG_INTERNAL_BASE};
 use crate::simnet::{Tier, Time};
 
 /// What an [`Event`] records.
@@ -157,8 +157,12 @@ pub fn tier_name(tier: Tier) -> &'static str {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Event {
     pub kind: EventKind,
+    /// Communicator context the operation ran on ([`CtxId::WORLD`] for
+    /// world traffic and context-blind kinds like faults).
+    pub ctx: CtxId,
     /// Rank the event is charged to (the sender for sends/puts, the
-    /// receiver for matches, the waiter for waits).
+    /// receiver for matches, the waiter for waits). Always a *world* rank,
+    /// even for events on split communicators.
     pub rank: usize,
     /// The other side (== `rank` for waits and CPU charges).
     pub peer: usize,

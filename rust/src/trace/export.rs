@@ -42,11 +42,18 @@ pub fn chrome_trace_json(events: &[Event]) -> String {
         // ts/dur are µs floats in the trace format; keep ns precision.
         let ts = e.t_start as f64 / 1000.0;
         let dur = e.duration() as f64 / 1000.0;
+        // World-context events keep the pre-context arg set byte for byte;
+        // traffic on a derived communicator names its ctx.
+        let ctx_arg = if e.ctx == crate::mpi::CtxId::WORLD {
+            String::new()
+        } else {
+            format!(",\"ctx\":{}", e.ctx.0)
+        };
         let _ = write!(
             s,
             "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{ts:.3},\
              \"dur\":{dur:.3},\"pid\":0,\"tid\":{},\"args\":{{\"peer\":{},\
-             \"tag\":{},\"bytes\":{},\"tier\":\"{}\",\"msg\":{}}}}}",
+             \"tag\":{},\"bytes\":{},\"tier\":\"{}\",\"msg\":{}{}}}}}",
             e.kind.name(),
             TagFamily::of(e.tag).name(),
             e.rank,
@@ -55,6 +62,7 @@ pub fn chrome_trace_json(events: &[Event]) -> String {
             e.bytes,
             tier_name(e.tier),
             e.msg_id,
+            ctx_arg,
         );
     }
     s.push_str("]}");
@@ -72,12 +80,25 @@ pub fn write_chrome_trace(path: &Path, events: &[Event]) -> Result<()> {
         .with_context(|| format!("writing {}", path.display()))
 }
 
-/// Render events as CSV (one row per event, times in ns).
+/// Render events as CSV (one row per event, times in ns). The `ctx`
+/// column is appended only when some event ran on a non-world context, so
+/// single-communicator exports stay byte-identical to the old format.
 pub fn trace_csv(events: &[Event]) -> String {
+    let with_ctx = events.iter().any(|e| e.ctx != crate::mpi::CtxId::WORLD);
+    trace_csv_opts(events, with_ctx)
+}
+
+/// Render events as CSV with an explicit choice about the trailing `ctx`
+/// column (`--per-ctx` forces it on even for world-only traffic).
+pub fn trace_csv_opts(events: &[Event], with_ctx: bool) -> String {
     let mut s = String::with_capacity(events.len() * 64 + 80);
-    s.push_str("kind,family,rank,peer,tag,tier,bytes,t_start_ns,t_end_ns,msg_id\n");
+    s.push_str("kind,family,rank,peer,tag,tier,bytes,t_start_ns,t_end_ns,msg_id");
+    if with_ctx {
+        s.push_str(",ctx");
+    }
+    s.push('\n');
     for e in events {
-        let _ = writeln!(
+        let _ = write!(
             s,
             "{},{},{},{},{},{},{},{},{},{}",
             e.kind.name(),
@@ -91,6 +112,10 @@ pub fn trace_csv(events: &[Event]) -> String {
             e.t_end,
             e.msg_id,
         );
+        if with_ctx {
+            let _ = write!(s, ",{}", e.ctx.0);
+        }
+        s.push('\n');
     }
     s
 }
@@ -105,16 +130,30 @@ pub fn write_trace_csv(path: &Path, events: &[Event]) -> Result<()> {
         .with_context(|| format!("writing {}", path.display()))
 }
 
+/// Write [`trace_csv_opts`] output to `path` (parent directories are
+/// created).
+pub fn write_trace_csv_opts(path: &Path, events: &[Event], with_ctx: bool) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, trace_csv_opts(events, with_ctx))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::event::EventKind;
     use super::*;
     use crate::simnet::Tier;
 
+    use crate::mpi::CtxId;
+
     fn sample() -> Vec<Event> {
         vec![
             Event {
                 kind: EventKind::EagerSend,
+                ctx: CtxId::WORLD,
                 rank: 0,
                 peer: 3,
                 tag: 0x1000,
@@ -126,6 +165,7 @@ mod tests {
             },
             Event {
                 kind: EventKind::RecvMatch,
+                ctx: CtxId::WORLD,
                 rank: 3,
                 peer: 0,
                 tag: 0x1000,
@@ -201,6 +241,29 @@ mod tests {
             lines[1],
             "eager-send,sdde,0,3,4096,inter-node,64,1000,3500,7"
         );
+        // World-only traffic: no ctx column anywhere (old byte-identical
+        // format), and the chrome export carries no ctx arg.
+        assert!(!lines[0].contains("ctx"));
+        assert!(!chrome_trace_json(&sample()).contains("\"ctx\""));
+    }
+
+    #[test]
+    fn csv_appends_ctx_column_for_multi_ctx_traces() {
+        let mut evs = sample();
+        evs[1].ctx = CtxId(2);
+        let c = trace_csv(&evs);
+        let lines: Vec<&str> = c.lines().collect();
+        assert!(lines[0].ends_with(",ctx"));
+        assert!(lines[1].ends_with(",0"));
+        assert!(lines[2].ends_with(",2"));
+        // Forced-on column for world-only traffic (--per-ctx).
+        let forced = trace_csv_opts(&sample(), true);
+        assert!(forced.lines().next().unwrap().ends_with(",ctx"));
+        assert!(forced.lines().nth(1).unwrap().ends_with(",0"));
+        // Chrome export names the ctx only on non-world events.
+        let j = chrome_trace_json(&evs);
+        assert_valid_json_shape(&j);
+        assert_eq!(j.matches("\"ctx\":2").count(), 1);
     }
 
     #[test]

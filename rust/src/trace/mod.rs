@@ -34,6 +34,8 @@
 
 use std::cell::{Cell, RefCell};
 
+use crate::mpi::CtxId;
+
 pub mod critical;
 pub mod event;
 pub mod export;
@@ -41,8 +43,11 @@ pub mod summary;
 
 pub use critical::{critical_path, CriticalPath};
 pub use event::{tier_name, Event, EventKind, TagFamily};
-pub use export::{chrome_trace_json, trace_csv, write_chrome_trace, write_trace_csv};
-pub use summary::TraceSummary;
+pub use export::{
+    chrome_trace_json, trace_csv, trace_csv_opts, write_chrome_trace, write_trace_csv,
+    write_trace_csv_opts,
+};
+pub use summary::{CtxStats, TraceSummary};
 
 /// What a [`Tracer`] records. Default: nothing.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -107,6 +112,11 @@ pub struct Tracer {
     events: RefCell<Vec<Event>>,
     summary: RefCell<TraceSummary>,
     next_id: Cell<u64>,
+    /// Matches whose message context differed from the receive's context.
+    /// Always 0 by construction (matching keys on ctx); counted anyway so
+    /// the multi-pattern harness can *prove* isolation rather than assume
+    /// it. Maintained even when tracing is off — it is one Cell write.
+    cross_ctx: Cell<u64>,
 }
 
 impl Tracer {
@@ -120,6 +130,7 @@ impl Tracer {
                 TraceSummary::default()
             }),
             next_id: Cell::new(0),
+            cross_ctx: Cell::new(0),
         }
     }
 
@@ -161,9 +172,22 @@ impl Tracer {
         }
     }
 
+    /// Audit hook called at every match site with the message's and the
+    /// receive's context ids. Equal by construction; a mismatch is counted
+    /// (and `debug_assert`ed at the call sites) so trace summaries can
+    /// report "cross-context deliveries: 0" as evidence, not assumption.
+    #[inline]
+    pub fn note_ctx_match(&self, msg_ctx: CtxId, spec_ctx: CtxId) {
+        if msg_ctx != spec_ctx {
+            self.cross_ctx.set(self.cross_ctx.get() + 1);
+        }
+    }
+
     /// Snapshot the rollup without consuming the tracer.
     pub fn summary_snapshot(&self) -> TraceSummary {
-        self.summary.borrow().clone()
+        let mut s = self.summary.borrow().clone();
+        s.cross_ctx_matches = self.cross_ctx.get();
+        s
     }
 
     /// Traced user inter-node sends by `rank` so far (0 when disabled or
@@ -179,10 +203,12 @@ impl Tracer {
 
     /// Drain everything recorded into a [`Trace`] (end of a run).
     pub fn take(&self) -> Trace {
+        let mut summary = self.summary.take();
+        summary.cross_ctx_matches = self.cross_ctx.get();
         Trace {
             config: self.cfg,
             events: self.events.take(),
-            summary: self.summary.take(),
+            summary,
         }
     }
 }
@@ -195,6 +221,7 @@ mod tests {
     fn ev(id: u64) -> Event {
         Event {
             kind: EventKind::EagerSend,
+            ctx: CtxId::WORLD,
             rank: 0,
             peer: 1,
             tag: 0x1000,
@@ -204,6 +231,17 @@ mod tests {
             t_end: 10,
             msg_id: id,
         }
+    }
+
+    #[test]
+    fn ctx_match_audit_counts_only_mismatches() {
+        let t = Tracer::new(TraceConfig::counters_only(), 2);
+        t.note_ctx_match(CtxId::WORLD, CtxId::WORLD);
+        t.note_ctx_match(CtxId(3), CtxId(3));
+        assert_eq!(t.summary_snapshot().cross_ctx_matches, 0);
+        t.note_ctx_match(CtxId(1), CtxId(2));
+        assert_eq!(t.summary_snapshot().cross_ctx_matches, 1);
+        assert_eq!(t.take().summary.cross_ctx_matches, 1);
     }
 
     #[test]

@@ -8,10 +8,37 @@
 //! messages by [`TagFamily`], so each algorithm layer's traffic is visible
 //! separately (the per-tier table `sdde trace` prints).
 
+use std::collections::BTreeMap;
+
 use crate::simnet::Tier;
 use crate::util::fmt;
 
 use super::event::{tier_name, Event, EventKind, TagFamily};
+
+/// Per-communicator-context slice of the rollup. Only contexts that saw
+/// traffic get an entry; single-communicator runs therefore hold exactly
+/// one (ctx 0) and render identically to the pre-context format.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CtxStats {
+    /// Two-sided sends (eager + rendezvous) at injection.
+    pub sends: u64,
+    /// One-sided puts (no matching recv — excluded from conservation).
+    pub rma_puts: u64,
+    /// Wire bytes injected (sends + puts).
+    pub bytes: u64,
+    /// Arrivals matched by an already-posted receive.
+    pub posted_matches: u64,
+    /// Receives satisfied from the unexpected queue.
+    pub unexpected_hits: u64,
+}
+
+impl CtxStats {
+    /// Send↔recv conservation within the context: every two-sided send is
+    /// consumed by exactly one match (duplicates deduped before matching).
+    pub fn conserved(&self) -> bool {
+        self.sends == self.posted_matches + self.unexpected_hits
+    }
+}
 
 /// Rolled-up trace counters. Maintained incrementally by the
 /// [`crate::trace::Tracer`] (counters mode) or recomputed from an event
@@ -44,6 +71,12 @@ pub struct TraceSummary {
     /// dilation + duplicate retransmit offsets), ns. This is what `sdde
     /// trace` uses to attribute makespan inflation to injected faults.
     pub fault_delay_ns: u64,
+    /// Per-context traffic slices (keyed by `CtxId.0`; ctx 0 = world).
+    pub by_ctx: BTreeMap<u32, CtxStats>,
+    /// Matches where the message and receive contexts differed. Zero by
+    /// construction — reported so multi-pattern runs can prove isolation.
+    /// Set by the tracer at drain time (`from_events` leaves it 0).
+    pub cross_ctx_matches: u64,
 }
 
 impl TraceSummary {
@@ -69,14 +102,31 @@ impl TraceSummary {
                 {
                     self.internode_sent[ev.rank] += 1;
                 }
+                let cs = self.by_ctx.entry(ev.ctx.0).or_default();
+                cs.bytes += ev.bytes as u64;
                 match ev.kind {
-                    EventKind::EagerSend => self.eager_sends += 1,
-                    EventKind::RendezvousSend => self.rendezvous_sends += 1,
-                    _ => self.rma_puts += 1,
+                    EventKind::EagerSend => {
+                        self.eager_sends += 1;
+                        cs.sends += 1;
+                    }
+                    EventKind::RendezvousSend => {
+                        self.rendezvous_sends += 1;
+                        cs.sends += 1;
+                    }
+                    _ => {
+                        self.rma_puts += 1;
+                        cs.rma_puts += 1;
+                    }
                 }
             }
-            EventKind::RecvMatch => self.posted_matches += 1,
-            EventKind::UnexpectedHit => self.unexpected_hits += 1,
+            EventKind::RecvMatch => {
+                self.posted_matches += 1;
+                self.by_ctx.entry(ev.ctx.0).or_default().posted_matches += 1;
+            }
+            EventKind::UnexpectedHit => {
+                self.unexpected_hits += 1;
+                self.by_ctx.entry(ev.ctx.0).or_default().unexpected_hits += 1;
+            }
             EventKind::CollRound => self.coll_rounds += 1,
             EventKind::CpuCharge => self.cpu_busy_ns += ev.duration(),
             EventKind::Wait => self.wait_ns += ev.duration(),
@@ -144,6 +194,17 @@ impl TraceSummary {
 
     pub fn total_msgs(&self) -> u64 {
         self.msgs.iter().flatten().sum()
+    }
+
+    /// Contexts that saw traffic beyond the world's (any ctx id != 0).
+    pub fn has_multiple_ctx(&self) -> bool {
+        self.by_ctx.keys().any(|&c| c != 0)
+    }
+
+    /// True when every context conserves two-sided sends against matches
+    /// (the per-context send↔recv conservation invariant).
+    pub fn conservation_ok(&self) -> bool {
+        self.by_ctx.values().all(|cs| cs.conserved())
     }
 
     /// True when nothing was recorded (tracing off, or an empty run).
@@ -225,15 +286,56 @@ impl TraceSummary {
         }
         out
     }
+
+    /// Render the per-context breakdown (`--per-ctx`): one row per context
+    /// that saw traffic, the conservation verdict, and the cross-context
+    /// delivery audit. Not part of [`TraceSummary::render`] so the default
+    /// single-communicator report stays byte-identical.
+    pub fn render_per_ctx(&self) -> String {
+        let mut out = String::from("-- per-context breakdown --\n");
+        let mut rows = vec![vec![
+            "ctx".to_string(),
+            "sends".to_string(),
+            "rma-puts".to_string(),
+            "bytes".to_string(),
+            "posted".to_string(),
+            "unexpected".to_string(),
+            "conserved".to_string(),
+        ]];
+        for (ctx, cs) in &self.by_ctx {
+            rows.push(vec![
+                ctx.to_string(),
+                cs.sends.to_string(),
+                cs.rma_puts.to_string(),
+                fmt::bytes(cs.bytes),
+                cs.posted_matches.to_string(),
+                cs.unexpected_hits.to_string(),
+                if cs.conserved() { "yes" } else { "NO" }.to_string(),
+            ]);
+        }
+        out.push_str(&fmt::table(&rows));
+        out.push_str(&format!(
+            "cross-context deliveries: {}\n",
+            self.cross_ctx_matches
+        ));
+        out.push_str(&format!(
+            "per-context conservation: {}\n",
+            if self.conservation_ok() { "OK" } else { "VIOLATED" }
+        ));
+        out
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    use crate::mpi::CtxId;
+
     fn ev(kind: EventKind, rank: usize, tag: u32, bytes: usize, tier: Tier) -> Event {
         Event {
             kind,
+            ctx: CtxId::WORLD,
             rank,
             peer: 0,
             tag,
@@ -243,6 +345,60 @@ mod tests {
             t_end: 30,
             msg_id: 1,
         }
+    }
+
+    fn ev_ctx(kind: EventKind, ctx: u32) -> Event {
+        Event {
+            ctx: CtxId(ctx),
+            ..ev(kind, 0, 0x1000, 64, Tier::InterNode)
+        }
+    }
+
+    #[test]
+    fn per_ctx_rollup_and_conservation() {
+        let events = [
+            ev_ctx(EventKind::EagerSend, 0),
+            ev_ctx(EventKind::RecvMatch, 0),
+            ev_ctx(EventKind::EagerSend, 1),
+            ev_ctx(EventKind::RendezvousSend, 1),
+            ev_ctx(EventKind::UnexpectedHit, 1),
+            ev_ctx(EventKind::RecvMatch, 1),
+            ev_ctx(EventKind::RmaPut, 2),
+        ];
+        let s = TraceSummary::from_events(&events, 2);
+        assert_eq!(s.by_ctx.len(), 3);
+        assert_eq!(s.by_ctx[&0].sends, 1);
+        assert_eq!(s.by_ctx[&1].sends, 2);
+        assert_eq!(s.by_ctx[&1].posted_matches, 1);
+        assert_eq!(s.by_ctx[&1].unexpected_hits, 1);
+        assert_eq!(s.by_ctx[&2].rma_puts, 1);
+        assert!(s.has_multiple_ctx());
+        assert!(s.conservation_ok());
+        let r = s.render_per_ctx();
+        assert!(r.contains("cross-context deliveries: 0"));
+        assert!(r.contains("per-context conservation: OK"));
+    }
+
+    #[test]
+    fn unmatched_send_breaks_conservation() {
+        let events = [
+            ev_ctx(EventKind::EagerSend, 3),
+            ev_ctx(EventKind::EagerSend, 3),
+            ev_ctx(EventKind::RecvMatch, 3),
+        ];
+        let s = TraceSummary::from_events(&events, 2);
+        assert!(!s.conservation_ok());
+        assert!(s.render_per_ctx().contains("per-context conservation: VIOLATED"));
+    }
+
+    #[test]
+    fn single_ctx_runs_keep_default_render_unchanged() {
+        // The per-ctx breakdown lives in render_per_ctx only: render()
+        // must not mention contexts for world-only traffic.
+        let events = [ev(EventKind::EagerSend, 0, 0x1000, 64, Tier::InterNode)];
+        let s = TraceSummary::from_events(&events, 2);
+        assert!(!s.has_multiple_ctx());
+        assert!(!s.render("t").contains("ctx"));
     }
 
     #[test]

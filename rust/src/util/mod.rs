@@ -9,5 +9,5 @@ pub mod rng;
 pub mod stats;
 
 pub use args::Args;
-pub use hash::{FxHashMap, FxHashSet};
+pub use hash::{FxHashMap, FxHashSet, FxHasher};
 pub use rng::{derive_seed, Rng};

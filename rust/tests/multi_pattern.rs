@@ -1,0 +1,135 @@
+//! Multi-pattern worlds under chaos: K concurrent SDDEs in ONE world,
+//! each on its own derived communicator (nested dup chain), must behave
+//! exactly like K serial single-pattern runs — under every algorithm,
+//! on several topologies, and under seeded fault plans with duplicate
+//! delivery and deep unexpected queues. The per-context trace rollup is
+//! the evidence: send↔recv conservation holds *per context* and the
+//! cross-context delivery audit stays at zero. The one deliberately
+//! broken member of the suite — a half-migrated program whose receiver
+//! still posts on the un-split world — must hang and be diagnosed by a
+//! `WaitGraph` near-miss naming the context mismatch.
+
+use sdde::bench::{oracle_digests, run_multi, MultiConfig, Variant};
+use sdde::mpi::{CtxId, MissReason, Payload, World};
+use sdde::mpix::SddeAlgorithm;
+use sdde::simnet::{CostModel, FaultPlan, FaultProfile, MpiFlavor, Topology};
+use sdde::sparse::MatrixPreset;
+
+fn cfg(topo: Topology, k: usize, algo: SddeAlgorithm, variant: Variant) -> MultiConfig {
+    MultiConfig::new(
+        topo,
+        MpiFlavor::Mvapich2,
+        k,
+        MatrixPreset::cage14_like().scaled(400),
+    )
+    .algo(algo)
+    .variant(variant)
+    .watchdog(None)
+}
+
+/// Every algorithm, two topologies: K=2 concurrent SDDEs return exactly
+/// what each pattern returns when run alone, and the world's trace shows
+/// zero cross-context deliveries with per-context conservation intact.
+#[test]
+fn concurrent_patterns_match_serial_oracles_all_algorithms() {
+    for (nodes, ppn) in [(2, 2), (2, 4)] {
+        for algo in SddeAlgorithm::ALL {
+            // RMA exists only for the constant-size API (paper §IV-C).
+            let variant = if algo == SddeAlgorithm::Rma {
+                Variant::ConstSize
+            } else {
+                Variant::Variable
+            };
+            let c = cfg(Topology::quartz(nodes, ppn), 2, algo, variant);
+            let run = run_multi(&c);
+            let label = format!("{} on {}x{}", algo.name(), nodes, ppn);
+            assert_eq!(run.digests, oracle_digests(&c), "{label}");
+            let s = &run.trace.summary;
+            assert_eq!(s.cross_ctx_matches, 0, "{label}");
+            assert!(s.has_multiple_ctx(), "{label}");
+            assert!(s.conservation_ok(), "{label}");
+        }
+    }
+}
+
+/// Per-context conservation survives seeded chaos: both fault presets
+/// that stress matching the hardest (heavy = jitter + stragglers +
+/// forced rendezvous + duplicates; duplicate = duplicate-delivery only),
+/// four seeds each. Faults may move virtual time, never messages — so
+/// the digests must still match the fault-free serial oracles.
+#[test]
+fn per_context_conservation_under_faults() {
+    for profile in ["heavy", "duplicate"] {
+        let base = cfg(
+            Topology::quartz(2, 2),
+            2,
+            SddeAlgorithm::NonBlocking,
+            Variant::Variable,
+        );
+        let oracle = oracle_digests(&base);
+        for seed in 1..=4u64 {
+            let plan = FaultPlan::with_profile(seed, FaultProfile::parse(profile).unwrap());
+            let run = run_multi(&base.clone().faults(Some(plan)));
+            let s = &run.trace.summary;
+            assert_eq!(s.cross_ctx_matches, 0, "{profile} seed {seed}");
+            assert!(s.has_multiple_ctx(), "{profile} seed {seed}");
+            assert!(s.conservation_ok(), "{profile} seed {seed}");
+            assert_eq!(run.digests, oracle, "{profile} seed {seed}");
+        }
+    }
+}
+
+/// The acceptance bar: K=4 concurrent SDDEs under heavy faults keep all
+/// four contexts conserved with zero cross-context matches, and every
+/// pattern still agrees with its serial oracle.
+#[test]
+fn four_patterns_under_heavy_faults_stay_isolated() {
+    let c = cfg(
+        Topology::quartz(2, 4),
+        4,
+        SddeAlgorithm::Dispatch,
+        Variant::Variable,
+    )
+    .faults(Some(FaultPlan::with_profile(42, FaultProfile::heavy())));
+    let run = run_multi(&c);
+    let s = &run.trace.summary;
+    assert_eq!(
+        s.by_ctx.keys().filter(|&&k| k != 0).count(),
+        4,
+        "each pattern's communicator must carry traffic"
+    );
+    assert_eq!(s.cross_ctx_matches, 0);
+    assert!(s.conservation_ok());
+    assert_eq!(run.digests, oracle_digests(&c));
+}
+
+/// The failure mode contexts exist to prevent, reproduced on purpose: a
+/// half-migrated program where the sender moved to a derived
+/// communicator but the receiver still posts on the un-split world.
+/// Right (src, tag), wrong context — the receive can never match, and
+/// the wait-graph diagnosis must say exactly that.
+#[test]
+fn unsplit_receiver_reproduces_cross_talk_hang() {
+    let err = World::new(
+        Topology::quartz(1, 2),
+        CostModel::preset(MpiFlavor::Mvapich2),
+    )
+    .run_checked(|c| async move {
+        let sub = c.dup().await;
+        if c.rank() == 0 {
+            sub.send(1, 0x1000, Payload::ints(&[1])).await;
+        } else {
+            let _ = c.recv(0, 0x1000).await; // un-migrated: world context
+        }
+    })
+    .expect_err("cross-context traffic must stall");
+    assert_eq!(err.blocked_ranks(), vec![1]);
+    let nm = &err.blocked[0].near_misses;
+    assert_eq!(nm.len(), 1);
+    assert_eq!((nm[0].src, nm[0].tag), (0, 0x1000));
+    assert_eq!(nm[0].reason, MissReason::CtxMismatch);
+    assert_eq!(nm[0].ctx, CtxId(1));
+    assert_eq!(nm[0].wanted_ctx, CtxId::WORLD);
+    let text = err.render();
+    assert!(text.contains("context mismatch"), "{text}");
+}
